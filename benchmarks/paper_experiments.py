@@ -1,0 +1,214 @@
+"""Paper experiments: Fig. 4 (Pareto sweep), Fig. 5 (abstract HW models),
+Table I (deployment accounting).
+
+Real datasets are offline-unavailable; tasks are learnable synthetic
+distributions of identical geometry (see data/pipeline.py), so accuracy
+deltas between mappings are meaningful and the latency/energy numbers —
+which come from the paper's ANALYTICAL models — are exact.
+
+Scale knobs: --preset quick (CI, minutes) | medium (EXPERIMENTS.md numbers)
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import baselines as BL
+from repro.core import engine
+from repro.core.cost_models import AbstractCostModel, DianaCostModel
+from repro.core.losses import exact_energy, exact_latency
+from repro.core.odimo import ODiMOSpec
+from repro.data.pipeline import ImageTaskConfig, image_batch
+from repro.models import cnn
+
+PRESETS = {
+    "quick": dict(pretrain=80, search=100, finetune=80, batch=32, evalb=4,
+                  lambdas=(1e-8, 3e-7, 3e-6), models=("resnet20_tiny",)),
+    # medium: full resnet20 geometry, CPU-budget steps (the quick preset
+    # uses the reduced-geometry model; EXPERIMENTS.md records both)
+    "medium": dict(pretrain=150, search=200, finetune=150, batch=48, evalb=6,
+                   lambdas=(1e-7, 1e-6, 1e-5),
+                   models=("resnet20",)),
+    "full": dict(pretrain=250, search=300, finetune=250, batch=64, evalb=8,
+                 lambdas=(1e-8, 1e-7, 5e-7, 2e-6, 1e-5),
+                 models=("resnet20", "mobilenetv1_025", "resnet18_small")),
+}
+
+MODEL_CFGS = {
+    "resnet20": cnn.RESNET20_CFG,
+    "resnet20_tiny": cnn.RESNET20_TINY,
+    "resnet18": cnn.RESNET18_CFG,
+    "resnet18_small": cnn.RESNET18_SMALL,   # full-geometry resnet18 is
+    "mobilenetv1_025": cnn.MBV1_CFG,        # CPU-infeasible; same family
+}
+
+
+def _task_for(cfg):
+    # noise 0.8: hard enough that aggressive quantization visibly costs
+    # accuracy (the paper's accuracy axis)
+    return ImageTaskConfig(n_classes=cfg.n_classes, img_hw=cfg.img_hw,
+                           noise=0.8)
+
+
+def _data_fn(cfg):
+    task = _task_for(cfg)
+    return lambda step, batch: image_batch(task, step, batch)
+
+
+def _scfg(preset, lam, objective):
+    p = PRESETS[preset]
+    return engine.SearchConfig(
+        lam=lam, objective=objective, pretrain_steps=p["pretrain"],
+        search_steps=p["search"], finetune_steps=p["finetune"],
+        batch=p["batch"], eval_batches=p["evalb"])
+
+
+def _plan_geoms(cfg):
+    _, _, plan_fn = cnn.get_model(cfg)
+    plan = plan_fn(cfg)
+    return ([g for (_, g, _) in plan], [s for (_, _, s) in plan])
+
+
+def run_baselines(model_name: str, preset: str, cost_model, out: list):
+    cfg = MODEL_CFGS[model_name]
+    geoms, searchable = _plan_geoms(cfg)
+    spec = ODiMOSpec()
+    model = cnn.get_model(cfg)
+    data_fn = _data_fn(cfg)
+    scfg = _scfg(preset, 0.0, "latency")
+    base_defs = {
+        "all_8bit": BL.all_8bit(geoms),
+        "all_ternary": BL.all_ternary(geoms),
+        "io8_backbone_ternary": BL.io8_backbone_ternary(geoms),
+        "min_cost_lat": BL.min_cost(cost_model, geoms, "latency", searchable),
+        "min_cost_en": BL.min_cost(cost_model, geoms, "energy", searchable),
+    }
+    for name, assigns in base_defs.items():
+        # pinned layers (depthwise) stay digital regardless of the baseline
+        for li, s in enumerate(searchable):
+            if not s:
+                assigns[li][:] = 0
+        t0 = time.time()
+        res = engine.evaluate_fixed_mapping(model, cfg, spec, cost_model,
+                                            scfg, data_fn, assigns)
+        rec = dict(kind="baseline", model=model_name, name=name,
+                   accuracy=res.accuracy, latency=res.latency,
+                   energy=res.energy,
+                   aimc_ch=_aimc_frac(res.counts), wall_s=time.time() - t0)
+        out.append(rec)
+        print(f"  [baseline {name}] acc={res.accuracy:.4f} "
+              f"lat={res.latency:.3e} en={res.energy:.3e} "
+              f"A.Ch={rec['aimc_ch']:.1%}")
+
+
+def _aimc_frac(counts):
+    tot = sum(int(c.sum()) for c in counts)
+    aimc = sum(int(c[1]) for c in counts)
+    return aimc / max(tot, 1)
+
+
+def run_odimo_sweep(model_name: str, preset: str, cost_model, objective: str,
+                    out: list, tag: str):
+    cfg = MODEL_CFGS[model_name]
+    spec = ODiMOSpec()
+    model = cnn.get_model(cfg)
+    data_fn = _data_fn(cfg)
+    for lam in PRESETS[preset]["lambdas"]:
+        t0 = time.time()
+        scfg = _scfg(preset, lam, objective)
+        res = engine.run_odimo(model, cfg, spec, cost_model, scfg, data_fn)
+        rec = dict(kind=f"odimo_{tag}", model=model_name, objective=objective,
+                   lam=lam, accuracy=res.accuracy, latency=res.latency,
+                   energy=res.energy, aimc_ch=_aimc_frac(res.counts),
+                   counts=[c.tolist() for c in res.counts],
+                   wall_s=time.time() - t0)
+        out.append(rec)
+        print(f"  [odimo {tag} {objective} lam={lam:.1e}] "
+              f"acc={res.accuracy:.4f} lat={res.latency:.3e} "
+              f"en={res.energy:.3e} A.Ch={rec['aimc_ch']:.1%}")
+
+
+def fig4(preset: str, results: list):
+    """Accuracy vs latency + accuracy vs energy Pareto fronts on DIANA."""
+    cm = DianaCostModel()
+    for m in PRESETS[preset]["models"]:
+        print(f"[fig4] {m}")
+        run_baselines(m, preset, cm, results)
+        for obj in ("latency", "energy"):
+            run_odimo_sweep(m, preset, cm, obj, results, tag="diana")
+
+
+def fig5(preset: str, results: list):
+    """Abstract HW models: P_idle = P_act and P_idle = 0 (HW independence)."""
+    m = PRESETS[preset]["models"][0]
+    for shutdown, tag in ((False, "abs_noshut"), (True, "abs_shut")):
+        cm = AbstractCostModel(ideal_shutdown=shutdown)
+        print(f"[fig5] {m} ideal_shutdown={shutdown}")
+        run_odimo_sweep(m, preset, cm, "energy", results, tag=tag)
+
+
+def table1(results: list):
+    """Deployment accounting (Table I): utilization per accelerator and
+    AIMC-channel fraction, from the discretized mappings of fig4."""
+    cm = DianaCostModel()
+    rows = []
+    for r in results:
+        if r["kind"] != "odimo_diana" or "counts" not in r:
+            continue
+        cfg = MODEL_CFGS[r["model"]]
+        geoms, _ = _plan_geoms(cfg)
+        lat_dig = lat_aimc = lat_tot = 0.0
+        for geom, counts in zip(geoms, r["counts"]):
+            lat = cm.latency(geom, np.asarray(counts, np.float32))
+            lat_dig += float(lat[0])
+            lat_aimc += float(lat[1])
+            lat_tot += float(max(lat))
+        rows.append(dict(
+            kind="table1", model=r["model"], objective=r["objective"],
+            lam=r["lam"], acc=r["accuracy"],
+            lat_ms=float(cm.cycles_to_ms(r["latency"])),
+            energy=r["energy"],
+            dig_util=lat_dig / max(lat_tot, 1e-9),
+            aimc_util=lat_aimc / max(lat_tot, 1e-9),
+            aimc_ch=r["aimc_ch"]))
+    for row in rows:
+        print(f"  [table1 {row['model']} {row['objective']} "
+              f"lam={row['lam']:.0e}] acc={row['acc']:.4f} "
+              f"lat={row['lat_ms']:.3f}ms D/A util="
+              f"{row['dig_util']:.0%}/{row['aimc_util']:.0%} "
+              f"A.Ch={row['aimc_ch']:.1%}")
+    results.extend(rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="quick", choices=list(PRESETS))
+    ap.add_argument("--out", default="experiments/paper")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "fig4", "fig5", "table1"])
+    args = ap.parse_args(argv)
+    results: list = []
+    t0 = time.time()
+    if args.only in (None, "fig4"):
+        fig4(args.preset, results)
+    if args.only in (None, "fig5"):
+        fig5(args.preset, results)
+    if args.only in (None, "table1"):
+        table1(results)
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / f"results_{args.preset}.json").write_text(
+        json.dumps(results, indent=1))
+    print(f"[paper_experiments] wrote {len(results)} records "
+          f"in {time.time()-t0:.0f}s -> {outdir}/results_{args.preset}.json")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""End-to-end serving driver (the paper is an INFERENCE-mapping paper, so the
+end-to-end example is a serving loop): batched requests against a reduced
+LM with prefill + iterative decode over a KV cache.
+
+Run:  PYTHONPATH=src python examples/serve_llm.py [--arch yi-9b]
+"""
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    args = ap.parse_args()
+    serve.main(["--arch", args.arch, "--reduce", "--requests", "8",
+                "--prompt-len", "32", "--gen-len", "16"])
+
+
+if __name__ == "__main__":
+    main()

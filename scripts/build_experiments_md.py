@@ -1,0 +1,291 @@
+"""Compose EXPERIMENTS.md from experiment artifacts:
+  experiments/dryrun/*.json   (dry-run records, incl. variants)
+  experiments/paper/results_*.json
+  experiments/perf_log.json   (hand-maintained hypothesis->result log)
+
+    PYTHONPATH=src python scripts/build_experiments_md.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.configs import base as cfgbase  # noqa: E402
+from repro.roofline import analysis as RA  # noqa: E402
+
+cfgbase.load_all()
+
+
+def _fmt_b(x):
+    return f"{x/2**30:.2f}"
+
+
+def dryrun_section() -> str:
+    lines = ["## §Dry-run — 40 cells x {16x16, 2x16x16} meshes",
+             "",
+             "Every (architecture x input-shape) cell lowered + compiled with "
+             "`jax.jit(step).lower(...).compile()` on 512 forced host "
+             "devices. `args` = parameters + caches per device; `temp` = XLA "
+             "temp allocation per device (v5e budget: 16 GiB). Collective "
+             "bytes are scan-aware (loop-scope x layer repeats).",
+             ""]
+    for tag, title in (("sp", "single-pod 16x16 (256 chips)"),
+                       ("mp", "multi-pod 2x16x16 (512 chips)")):
+        recs = RA.load_records(ROOT / "experiments/dryrun", tag)
+        recs = [r for r in recs if r.get("variant", "base") == "base"]
+        lines += [f"### {title}", "",
+                  "| arch | shape | status | compile s | args GiB/dev | "
+                  "temp GiB/dev | collective GiB (scan-aware) |",
+                  "|---|---|---|---|---|---|---|"]
+        for r in recs:
+            if r["status"] != "ok":
+                lines.append(f"| {r['arch']} | {r['shape']} | SKIP "
+                             f"(sub-quadratic rule) | — | — | — | — |")
+                continue
+            m = r["memory_analysis"]
+            cb = RA.collective_bytes_from_record(r)
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']} | "
+                f"{_fmt_b(m['argument_size_in_bytes'])} | "
+                f"{_fmt_b(m['temp_size_in_bytes'])} | {cb/2**30:.2f} |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    recs = [r for r in RA.load_records(ROOT / "experiments/dryrun", "sp")
+            if r.get("variant", "base") == "base"]
+    rows, skips = [], []
+    for r in recs:
+        if r["status"] != "ok":
+            skips.append(r)
+            continue
+        rows.append(RA.analyze_cell(r))
+    out = ["## §Roofline — single-pod (256 chips), per (arch x shape)",
+           "",
+           "Methodology (see `roofline/analysis.py` docstring): XLA's "
+           "`cost_analysis` counts `lax.scan` bodies ONCE (verified: a scan "
+           "of 8 matmuls reports 1/8 the unrolled FLOPs), so compute/memory "
+           "terms use an exact analytic enumerator over the architecture's "
+           "tensor ops *as implemented* (full-square masked attention, MoE "
+           "capacity buffers, remat re-forward, absorbed-MLA decode, int8 "
+           "domains), cross-checked against per-body `cost_analysis`; "
+           "collective bytes come from compiled HLO with loop-scope ops "
+           "multiplied by the layer-scan trip count. Constants: 197 TFLOP/s "
+           "bf16, 819 GB/s HBM, 50 GB/s/link ICI (v5e).",
+           "",
+           RA.markdown_table(rows)]
+    if skips:
+        out += ["", "Skipped cells (long_500k on quadratic-attention archs, "
+                "DESIGN.md §4): " +
+                ", ".join(f"{r['arch']}" for r in skips)]
+    return "\n".join(out)
+
+
+def paper_section() -> str:
+    lines = ["## §Paper — faithful reproduction (ODiMO on DIANA cost models)",
+             ""]
+    for preset in ("medium", "quick"):
+        f = ROOT / "experiments/paper" / f"results_{preset}.json"
+        if not f.exists():
+            continue
+        res = json.loads(f.read_text())
+        lines += [f"### preset `{preset}`", ""]
+        if preset == "medium":
+            lines += [
+                "Full ResNet20 geometry, noise-0.8 task. CAVEAT read before "
+                "the headline row: the fixed-mapping baselines train for "
+                "300 steps from scratch directly in quantized mode, and "
+                "All-8bit UNDER-TRAINS at this budget (acc 0.26 vs ODiMO's "
+                "0.95-1.0, which includes an fp pretrain phase) — so the "
+                "headline-vs-All-8bit row is vacuous here; use the `quick` "
+                "preset (equal-footing budgets) for the baseline "
+                "comparison. What medium DOES show cleanly is the paper's "
+                "central accuracy-vs-cost trade on the real geometry: the "
+                "λ-sweep spans 28x in modeled latency with accuracy moving "
+                "1.000 -> 0.955, and every heuristic baseline is "
+                "accuracy-dominated by an ODiMO point of comparable cost "
+                "(e.g. All-Ternary 0.774 @1.53e4 cyc vs ODiMO-lat λ=1e-5 "
+                "0.979 @1.68e4 cyc — the paper's Min-Cost-vs-ODiMO-Small-En "
+                "phenomenon, Table I).", ""]
+        lines += [
+                  "| record | accuracy | modeled latency (cyc) | modeled "
+                  "energy | AIMC ch. % |", "|---|---|---|---|---|"]
+        for r in res:
+            if r["kind"] == "baseline":
+                lines.append(f"| baseline {r['model']}/{r['name']} | "
+                             f"{r['accuracy']:.4f} | {r['latency']:.3e} | "
+                             f"{r['energy']:.3e} | {r['aimc_ch']:.1%} |")
+            elif r["kind"].startswith("odimo"):
+                lines.append(f"| {r['kind']} {r['model']} {r['objective']} "
+                             f"λ={r['lam']:.0e} | {r['accuracy']:.4f} | "
+                             f"{r['latency']:.3e} | {r['energy']:.3e} | "
+                             f"{r['aimc_ch']:.1%} |")
+        # headline claims
+        base8 = [r for r in res if r["kind"] == "baseline"
+                 and r["name"] == "all_8bit"]
+        od = [r for r in res if r["kind"] == "odimo_diana"]
+        if base8 and od:
+            a8 = base8[0]
+            for obj in ("latency", "energy"):
+                cands = [r for r in od if r["objective"] == obj and
+                         r["accuracy"] >= a8["accuracy"] - 0.01]
+                if cands:
+                    b = min(cands, key=lambda r: r[obj])
+                    lines.append(
+                        f"| **headline: {obj} vs All-8bit** | "
+                        f"Δacc {b['accuracy']-a8['accuracy']:+.4f} | "
+                        f"**-{1-b[obj]/a8[obj]:.0%} {obj}** | | "
+                        f"{b['aimc_ch']:.1%} |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def fleet_section() -> str:
+    """int8 precision domains (kvwq8) across every decode cell — the
+    paper's technique as a fleet-wide serving feature."""
+    base = {(r["arch"], r["shape"]): r
+            for r in RA.load_records(ROOT / "experiments/dryrun", "sp")
+            if r.get("status") == "ok"}
+    var = {(r["arch"], r["shape"]): r
+           for r in RA.load_records(ROOT / "experiments/dryrun", "sp-kvwq8")
+           if r.get("status") == "ok"}
+    if not var:
+        return ""
+    lines = [
+        "## §Perf-fleet — ODiMO int8 domains on every decode cell",
+        "",
+        "`kv_cache_dtype=int8 + serve_weight_dtype=int8` (the TPU "
+        "precision-domain deployment of the paper's technique) applied "
+        "fleet-wide; memory term per cell, baseline vs int8 domains:",
+        "",
+        "| arch | shape | memory term bf16 | int8 domains | gain | dominant after |",
+        "|---|---|---|---|---|---|"]
+    for key in sorted(var):
+        if key not in base:
+            continue
+        r0 = RA.analyze_cell(base[key])
+        r1 = RA.analyze_cell(var[key])
+        lines.append(
+            f"| {key[0]} | {key[1]} | {r0.t_memory:.3e} s | "
+            f"{r1.t_memory:.3e} s | **{r0.t_memory/r1.t_memory:.2f}x** | "
+            f"{r1.dominant} |")
+    lines += ["",
+              "Every decode cell is memory-dominant at baseline; the int8 "
+              "domains buy ~2x on the binding term across the fleet except "
+              "xlstm-1.3b (1.02x): its decode traffic is dominated by the "
+              "f32 mLSTM matrix memory (128 x 4 x 1024^2 x 4B x 42 layers "
+              "~ 90 GB/step), which the KV-cache domain does not touch — "
+              "the next domain to add is a quantized recurrent state, the "
+              "natural ODiMO extension for matrix-memory archs."]
+    return "\n".join(lines)
+
+
+def podaxis_section() -> str:
+    """sp vs mp: show the pod axis sharding (proof the 512-chip mesh
+    distributes, not just compiles)."""
+    sp = {(r["arch"], r["shape"]): r
+          for r in RA.load_records(ROOT / "experiments/dryrun", "sp")
+          if r.get("status") == "ok"}
+    mp = {(r["arch"], r["shape"]): r
+          for r in RA.load_records(ROOT / "experiments/dryrun", "mp")
+          if r.get("status") == "ok"}
+    lines = [
+        "## §Pod-axis — single-pod vs 2-pod scaling (from the same records)",
+        "",
+        "The multi-pod mesh extends data parallelism across pods: per-device "
+        "argument+temp memory drops ~2x on train cells (FSDP denominator "
+        "doubles) while the collective schedule gains the cross-pod "
+        "gradient reduction:",
+        "",
+        "| arch (train_4k) | args GiB/dev sp -> mp | temp GiB/dev sp -> mp |",
+        "|---|---|---|"]
+    for (arch, shape) in sorted(sp):
+        if shape != "train_4k" or (arch, shape) not in mp:
+            continue
+        a0 = sp[(arch, shape)]["memory_analysis"]
+        a1 = mp[(arch, shape)]["memory_analysis"]
+        lines.append(
+            f"| {arch} | {a0['argument_size_in_bytes']/2**30:.2f} -> "
+            f"{a1['argument_size_in_bytes']/2**30:.2f} | "
+            f"{a0['temp_size_in_bytes']/2**30:.2f} -> "
+            f"{a1['temp_size_in_bytes']/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def perf_section() -> str:
+    f = ROOT / "experiments/perf_log.json"
+    if not f.exists():
+        return "## §Perf\n\n(perf log not yet recorded)"
+    log = json.loads(f.read_text())
+    lines = [
+        "## §Perf — hillclimb log (hypothesis -> change -> before -> "
+        "after -> verdict)", "",
+        "**Paper-faithful baseline vs beyond-paper optimized, separated:** "
+        "the §Paper section above is the faithful ODiMO reproduction "
+        "(DIANA cost models, Eq. 1-5, Fig. 3 reorg — validated against the "
+        "paper's own claims: rich λ-monotone Pareto fronts, baselines "
+        "dominated, -96%/-99% modeled latency/energy vs All-8bit at zero "
+        "accuracy drop on the synthetic task). Everything below is the "
+        "BEYOND-PAPER work: the paper's precision-domain idea applied to "
+        "TPU serving (int8 weight/KV-cache domains) plus sharding/algorithm "
+        "changes the paper never considered, each logged as "
+        "hypothesis -> measure.", "",
+        "Scoreboard (dominant roofline term, baseline -> final):", "",
+        "| cell | dominant term before | after | gain |",
+        "|---|---|---|---|",
+        "| yi-9b decode_32k | memory 2.054e-3 s | 1.028e-3 s | **2.0x** |",
+        "| deepseek-v2-lite decode_32k | compute 9.902e-3 s | "
+        "9.295e-5 s (memory 3.873e-4 s now binds) | **106x** (25x vs "
+        "memory bound) |",
+        "| arctic-480b decode_32k | collective 9.314e-3 s | 1.742e-4 s "
+        "(memory 3.712e-3 s now binds) | **53x** (2.5x vs memory bound) |",
+        ""]
+    for cell in log["cells"]:
+        lines += [f"### {cell['cell']}  —  {cell['why']}", ""]
+        for it in cell["iterations"]:
+            lines += [f"**{it['name']}**",
+                      f"- hypothesis: {it['hypothesis']}",
+                      f"- change: {it['change']}",
+                      f"- before: {it['before']}",
+                      f"- after: {it['after']}",
+                      f"- verdict: **{it['verdict']}**", ""]
+        if cell.get("stop"):
+            lines += [f"_Stop condition: {cell['stop']}_", ""]
+    if log.get("notes"):
+        lines += ["### Cross-cutting notes", ""]
+        lines += [f"- {n}" for n in log["notes"]]
+    return "\n".join(lines)
+
+
+def examples_section() -> str:
+    f = ROOT / "experiments/examples_log.json"
+    if not f.exists():
+        return ""
+    log = json.loads(f.read_text())
+    lines = ["## §Examples — end-to-end driver runs", ""]
+    for e in log:
+        lines.append(f"- `{e['cmd']}` → {e['result']}")
+    return "\n".join(lines)
+
+
+def main():
+    header = (
+        "# EXPERIMENTS\n\n"
+        "Artifacts: `experiments/dryrun/*.json` (per-cell compiled dry-run "
+        "records), `experiments/paper/results_*.json` (paper reproduction), "
+        "`experiments/perf_log.json` (hillclimb). Regenerate this file with "
+        "`PYTHONPATH=src python scripts/build_experiments_md.py`.\n")
+    parts = [header, paper_section(), dryrun_section(), roofline_section(),
+             podaxis_section(), perf_section(), fleet_section(),
+             examples_section()]
+    (ROOT / "EXPERIMENTS.md").write_text("\n\n".join(p for p in parts if p))
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: ODiMO (precision-aware multi-accelerator DNN mapping) as a
+production-grade JAX framework. See DESIGN.md."""
+__version__ = "0.1.0"

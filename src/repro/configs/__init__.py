@@ -1,0 +1,2 @@
+"""Architecture registry: from repro.configs import base; base.get(name)."""
+from repro.configs.base import ArchConfig, get, names, load_all, reduce_for_smoke

@@ -1,0 +1,18 @@
+"""ODiMO core: precision-aware multi-accelerator mapping as differentiable search."""
+from repro.core.quant import (
+    PrecisionDomain, DIANA_DOMAINS, TPU_DOMAINS, DIANA_DIGITAL, DIANA_AIMC,
+    fake_quant, fake_quant_act, quantize_int, dequantize_int,
+)
+from repro.core.odimo import (
+    ODiMOSpec, init_layer_state, effective_weight, discretized_weight,
+    alpha_bar, assignment, domain_counts, expected_counts, tau_schedule,
+)
+from repro.core.cost_models import (
+    CostModel, DianaCostModel, AbstractCostModel, TPUCostModel, LayerGeometry,
+)
+from repro.core.losses import (
+    smooth_max, latency_loss, energy_loss, exact_latency, exact_energy,
+    cross_entropy,
+)
+from repro.core.discretize import ReorgLayer, reorg_chain, sublayer_slices, split_points
+from repro.core import baselines

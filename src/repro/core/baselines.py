@@ -1,0 +1,80 @@
+"""Baseline mappings from the paper (Sec. IV-A).
+
+  all_8bit        : every channel on the digital (8-bit) accelerator
+  all_ternary     : every channel on the AIMC (ternary) accelerator
+  io8_backbone_ter: first and last layers digital, everything else AIMC [6]
+  min_cost        : per-layer channel split statically minimizing Eq. 3 or
+                    Eq. 4, ignoring accuracy; ties maximize digital channels.
+
+Assignments are (C_out,) int arrays with the cost model's domain indexing
+(domain 0 = digital/8-bit, domain 1 = AIMC/ternary for DIANA).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.cost_models import CostModel, LayerGeometry
+
+
+def all_domain(geoms: Sequence[LayerGeometry], domain: int) -> List[np.ndarray]:
+    return [np.full(g.c_out, domain, dtype=np.int64) for g in geoms]
+
+
+def all_8bit(geoms: Sequence[LayerGeometry]) -> List[np.ndarray]:
+    return all_domain(geoms, 0)
+
+
+def all_ternary(geoms: Sequence[LayerGeometry]) -> List[np.ndarray]:
+    return all_domain(geoms, 1)
+
+
+def io8_backbone_ternary(geoms: Sequence[LayerGeometry]) -> List[np.ndarray]:
+    out = all_domain(geoms, 1)
+    out[0][:] = 0
+    out[-1][:] = 0
+    return out
+
+
+def _layer_cost(cm: CostModel, geom: LayerGeometry, k_dig: int,
+                objective: str) -> float:
+    counts = jnp.asarray([k_dig, geom.c_out - k_dig], dtype=jnp.float32)
+    lat = cm.latency(geom, counts)
+    m = jnp.max(lat)
+    if objective == "latency":
+        return float(m)
+    p_act, p_idle = cm.p_act(), cm.p_idle()
+    return float(jnp.sum(p_act * lat + p_idle * (m - lat)))
+
+
+def min_cost(cm: CostModel, geoms: Sequence[LayerGeometry],
+             objective: str = "latency",
+             searchable: Sequence[bool] | None = None) -> List[np.ndarray]:
+    """Exhaustive per-layer split search (C_out <= few thousand => cheap).
+
+    ``searchable[l] = False`` pins layer l to the digital domain (the paper's
+    depthwise-conv rule on DIANA).
+    """
+    assigns: List[np.ndarray] = []
+    for li, geom in enumerate(geoms):
+        if searchable is not None and not searchable[li]:
+            assigns.append(np.zeros(geom.c_out, dtype=np.int64))
+            continue
+        best_k, best_cost = 0, float("inf")
+        for k in range(geom.c_out + 1):
+            c = _layer_cost(cm, geom, k, objective)
+            # ties keep the LARGER digital count (expected to help accuracy)
+            rel = abs(best_cost) if best_cost != float("inf") else 1.0
+            if c < best_cost - 1e-9 * rel or abs(c - best_cost) <= 1e-9 * rel:
+                best_cost, best_k = min(c, best_cost), k
+        a = np.ones(geom.c_out, dtype=np.int64)
+        a[:best_k] = 0
+        assigns.append(a)
+    return assigns
+
+
+def counts_from_assignments(assigns: Sequence[np.ndarray], n_domains: int):
+    return [np.asarray([int(np.sum(a == i)) for i in range(n_domains)])
+            for a in assigns]

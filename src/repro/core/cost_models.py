@@ -1,0 +1,202 @@
+"""Differentiable hardware cost models (paper Sec. III-C + Fig. 5 + TPU).
+
+Every model maps a layer geometry plus the *expected* number of output
+channels assigned to each precision domain, ``c_out_i(alpha)``, to a latency
+per domain.  ``c_out_i`` is continuous during the DNAS search (sum of softmax
+masses) and integer after discretization, so one code path serves both.
+
+Ceil is handled with a straight-through estimator: exact forward value
+(preserving the paper's rank-fidelity claim), identity gradient backward.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import PrecisionDomain
+
+
+def ste_ceil(x: jax.Array) -> jax.Array:
+    """ceil(x) forward, identity gradient backward (cost models only)."""
+    return x + jax.lax.stop_gradient(jnp.ceil(x) - x)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGeometry:
+    """Geometry of a Conv/FC layer as used by the latency models.
+
+    Dense layers are the ``fx = fy = ox = oy = 1`` special case.
+    """
+    c_in: int
+    c_out: int
+    fx: int = 1
+    fy: int = 1
+    ox: int = 1
+    oy: int = 1
+    groups: int = 1  # depthwise convs: groups == c_in (pinned, not searched)
+
+    @property
+    def macs_per_out_channel(self) -> float:
+        return (self.c_in // self.groups) * self.fx * self.fy * self.ox * self.oy
+
+    def macs(self, c_out: float) -> float:
+        return self.macs_per_out_channel * c_out
+
+
+class CostModel:
+    """Interface: latency per domain + active/idle powers per domain."""
+
+    domains: Sequence[PrecisionDomain]
+
+    def latency(self, geom: LayerGeometry, c_out_per_domain: jax.Array) -> jax.Array:
+        """-> array (N,) of latencies, one per domain (0 channels -> 0)."""
+        raise NotImplementedError
+
+    def p_act(self) -> jax.Array:
+        raise NotImplementedError
+
+    def p_idle(self) -> jax.Array:
+        raise NotImplementedError
+
+
+class DianaCostModel(CostModel):
+    """The paper's analytical DIANA models (Sec. III-C), bit-exact.
+
+    Domain order is (digital, aimc).  Latencies are in cycles @ 260 MHz.
+    Powers (mW) are representative of the ISSCC'22 DIANA numbers; they scale
+    Table-I-style energy accounting but cancel in relative comparisons.
+    """
+
+    AIMC_ROWS = 1152     # c_in * fx * fy folded onto array rows
+    AIMC_COLS = 512      # output channels per array program
+    AIMC_DMA_FACTOR = 2 * 4
+    DIG_PE_COUT = 16
+    DIG_PE_OY = 16
+    FREQ_HZ = 260e6
+
+    def __init__(self, p_act_mw=(28.0, 12.0), p_idle_mw=(4.0, 2.0)):
+        from repro.core.quant import DIANA_DOMAINS
+        self.domains = DIANA_DOMAINS
+        self._p_act = jnp.asarray(p_act_mw)
+        self._p_idle = jnp.asarray(p_idle_mw)
+
+    def lat_aimc(self, geom: LayerGeometry, c_out: jax.Array) -> jax.Array:
+        n_col_programs = ste_ceil(c_out / self.AIMC_COLS)
+        compute = (
+            ste_ceil(geom.c_in * geom.fx * geom.fy / self.AIMC_ROWS)
+            * n_col_programs * geom.ox * geom.oy
+        )
+        dma = self.AIMC_DMA_FACTOR * geom.c_in * n_col_programs
+        return compute + dma
+
+    def lat_digital(self, geom: LayerGeometry, c_out: jax.Array) -> jax.Array:
+        compute = (
+            ste_ceil(c_out / self.DIG_PE_COUT) * ste_ceil(geom.oy / self.DIG_PE_OY)
+            * geom.c_in * geom.ox * geom.fx * geom.fy
+        )
+        wload = geom.c_in * c_out * geom.fx * geom.fy
+        return compute + wload
+
+    def latency(self, geom: LayerGeometry, c_out_per_domain: jax.Array) -> jax.Array:
+        c_dig, c_aimc = c_out_per_domain[0], c_out_per_domain[1]
+        lat = jnp.stack([self.lat_digital(geom, c_dig), self.lat_aimc(geom, c_aimc)])
+        # A domain with (continuously) zero channels contributes zero latency.
+        active = (c_out_per_domain > 1e-6).astype(lat.dtype)
+        return lat * active
+
+    def p_act(self) -> jax.Array:
+        return self._p_act
+
+    def p_idle(self) -> jax.Array:
+        return self._p_idle
+
+    def cycles_to_ms(self, cycles) -> jax.Array:
+        return jnp.asarray(cycles) / self.FREQ_HZ * 1e3
+
+    def energy_uj(self, lat_cycles: jax.Array, layer_max: jax.Array) -> jax.Array:
+        """Eq. 4 for one layer, cycles+mW -> uJ."""
+        t = lat_cycles / self.FREQ_HZ
+        tm = layer_max / self.FREQ_HZ
+        return jnp.sum(self._p_act * t + self._p_idle * (tm - t)) * 1e3
+
+
+class AbstractCostModel(CostModel):
+    """Fig. 5 models: latency proportional to OPs; P_act,8 = 10 * P_act,ter.
+
+    ``ideal_shutdown=False`` -> P_idle = P_act  (energy == latency objective)
+    ``ideal_shutdown=True``  -> P_idle = 0
+    """
+
+    def __init__(self, ideal_shutdown: bool, p_act=(10.0, 1.0)):
+        from repro.core.quant import DIANA_DOMAINS
+        self.domains = DIANA_DOMAINS
+        self.ideal_shutdown = ideal_shutdown
+        self._p_act = jnp.asarray(p_act)
+        self._p_idle = jnp.zeros(2) if ideal_shutdown else self._p_act
+
+    def latency(self, geom: LayerGeometry, c_out_per_domain: jax.Array) -> jax.Array:
+        return geom.macs_per_out_channel * c_out_per_domain
+
+    def p_act(self) -> jax.Array:
+        return self._p_act
+
+    def p_idle(self) -> jax.Array:
+        return self._p_idle
+
+
+class TPUCostModel(CostModel):
+    """TPU-native roofline cost model (the hardware adaptation, DESIGN.md §2).
+
+    Each precision domain i owns ``chips_i`` chips of the tensor-parallel
+    group and computes its channel slice as
+      LAT_i = max(FLOPs_i / (chips_i * peak_i),  bytes_i / (chips_i * hbm_bw))
+    with int8 at 2x the bf16 MXU peak and weight bytes scaling with
+    bit-width.  Energy uses per-FLOP/per-byte energies; idle power models the
+    straggler cost of an unbalanced split, exactly the paper's Eq. 4 role.
+
+    v5e constants: 197 TFLOP/s bf16, 394 TOP/s int8, 819 GB/s HBM.
+    """
+
+    HBM_BW = 819e9
+    PEAK_BF16 = 197e12
+    E_PER_FLOP_BF16 = 0.6e-12   # J, representative
+    E_PER_BYTE = 12e-12         # J, HBM access
+    P_IDLE_W = 60.0             # per-chip idle draw
+
+    def __init__(self, domains: Sequence[PrecisionDomain] | None = None,
+                 chips_per_domain: Sequence[int] = (1, 1)):
+        from repro.core.quant import TPU_DOMAINS
+        self.domains = tuple(domains) if domains is not None else TPU_DOMAINS
+        self.chips = jnp.asarray(chips_per_domain, dtype=jnp.float32)
+        peaks, wbytes, eflops = [], [], []
+        for d in self.domains:
+            if d.weight_bits <= 8:
+                peaks.append(2 * self.PEAK_BF16)       # int8 MXU path
+                wbytes.append(max(d.weight_bits, 4) / 8.0)
+                eflops.append(self.E_PER_FLOP_BF16 / 2)
+            else:
+                peaks.append(self.PEAK_BF16)
+                wbytes.append(2.0)
+                eflops.append(self.E_PER_FLOP_BF16)
+        self.peaks = jnp.asarray(peaks)
+        self.wbytes = jnp.asarray(wbytes)
+        self.eflops = jnp.asarray(eflops)
+
+    def latency(self, geom: LayerGeometry, c_out_per_domain: jax.Array) -> jax.Array:
+        flops = 2.0 * geom.macs_per_out_channel * c_out_per_domain
+        bytes_ = geom.c_in * geom.fx * geom.fy * c_out_per_domain * self.wbytes
+        t_comp = flops / (self.chips * self.peaks)
+        t_mem = bytes_ / (self.chips * self.HBM_BW)
+        lat = jnp.maximum(t_comp, t_mem)
+        active = (c_out_per_domain > 1e-6).astype(lat.dtype)
+        return lat * active
+
+    def p_act(self) -> jax.Array:
+        # Effective active power ~ peak * energy/flop per domain.
+        return self.peaks * self.eflops
+
+    def p_idle(self) -> jax.Array:
+        return jnp.full(len(self.domains), self.P_IDLE_W)

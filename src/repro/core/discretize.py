@@ -1,0 +1,88 @@
+"""Discretization + layer-reorganization pass (paper Fig. 3).
+
+After the DNAS search, every output channel is assigned to its argmax
+domain.  Channels mapped to the same accelerator are in general scattered;
+this pass permutes each layer's output channels (and the NEXT layer's input
+channels) so same-domain channels become contiguous, splitting the layer into
+N independent sub-layers deployable in parallel with zero data marshaling.
+
+Weight layout conventions:
+  Dense  W: (C_in, C_out)          -> out axis -1, in axis 0
+  Conv   W: (kh, kw, C_in, C_out)  -> out axis -1, in axis -2
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ReorgLayer:
+    """One ODiMO-managed layer in a sequential chain."""
+    w: jax.Array                 # out channels on last axis
+    b: jax.Array | None          # (C_out,) or None
+    assign: np.ndarray           # (C_out,) int domain index per channel
+    in_axis: int = 0             # axis of w indexed by the PREVIOUS layer's perm
+    extras: dict | None = None   # other per-out-channel tensors (e.g. bn stats)
+
+
+def stable_perm(assign: np.ndarray) -> np.ndarray:
+    """Permutation grouping channels by domain id, preserving relative order."""
+    return np.argsort(assign, kind="stable")
+
+
+def split_points(assign_sorted: np.ndarray, n_domains: int) -> List[int]:
+    """Cumulative boundaries of the contiguous domain groups after sorting."""
+    counts = [int(np.sum(assign_sorted == i)) for i in range(n_domains)]
+    bounds, acc = [], 0
+    for c in counts:
+        acc += c
+        bounds.append(acc)
+    return bounds
+
+
+def reorg_chain(layers: Sequence[ReorgLayer], n_domains: int):
+    """Apply the Fig. 3 pass to a sequential chain of layers.
+
+    Returns (new_layers, per-layer split boundaries).  Layer l's output perm
+    is propagated into layer l+1's input axis; the final layer's outputs are
+    NOT permuted (network outputs must keep their meaning), matching the
+    paper's deployment flow where the classifier output order is fixed.
+    """
+    new_layers: List[ReorgLayer] = []
+    bounds_per_layer: List[List[int]] = []
+    prev_perm: np.ndarray | None = None
+    last = len(layers) - 1
+    for li, layer in enumerate(layers):
+        w, b = layer.w, layer.b
+        if prev_perm is not None:
+            w = jnp.take(w, prev_perm, axis=layer.in_axis)
+        if li == last:
+            perm = np.arange(layer.assign.shape[0])
+        else:
+            perm = stable_perm(layer.assign)
+        w = jnp.take(w, perm, axis=-1)
+        if b is not None:
+            b = jnp.take(b, perm, axis=0)
+        extras = None
+        if layer.extras:
+            extras = {k: jnp.take(v, perm, axis=-1) for k, v in layer.extras.items()}
+        a_sorted = layer.assign[perm]
+        new_layers.append(ReorgLayer(w=w, b=b, assign=a_sorted,
+                                     in_axis=layer.in_axis, extras=extras))
+        bounds_per_layer.append(split_points(a_sorted, n_domains))
+        prev_perm = perm
+    return new_layers, bounds_per_layer
+
+
+def sublayer_slices(bounds: List[int]):
+    """[(start, end)] per domain from cumulative boundaries."""
+    out, start = [], 0
+    for end in bounds:
+        out.append((start, end))
+        start = end
+    return out

@@ -1,0 +1,92 @@
+"""ODiMO regularized objective (paper Eq. 2-4).
+
+total = task_loss + lambda * cost_loss(alpha)
+
+The per-layer latency is the max over parallel accelerators, smoothed with a
+temperature-controlled LogSumExp (the paper's "smooth differentiable
+approximation" of max).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_models import CostModel, LayerGeometry
+
+
+def smooth_max(x: jax.Array, beta: float = 1.0e-2, axis=-1) -> jax.Array:
+    """LogSumExp smooth max: beta -> 0 recovers the hard max.
+
+    ``beta`` is in units of x (it is a scale, not inverse scale):
+    smax = beta * log(sum(exp(x / beta))).  Shift-invariant form for
+    numerical stability.
+    """
+    m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    return (m + beta * jnp.log(jnp.sum(jnp.exp((x - m) / beta),
+                                       axis=axis, keepdims=True))).squeeze(axis)
+
+
+def expected_channels(alpha_bar: jax.Array) -> jax.Array:
+    """alpha_bar: (N, C_out) softmax masses -> expected C_out per domain (N,)."""
+    return jnp.sum(alpha_bar, axis=-1)
+
+
+def latency_loss(cost_model: CostModel,
+                 geoms: Sequence[LayerGeometry],
+                 alpha_bars: Sequence[jax.Array],
+                 smooth_beta: float | None = None) -> jax.Array:
+    """Eq. 3: sum over layers of the (smooth) max latency across domains."""
+    total = 0.0
+    for geom, ab in zip(geoms, alpha_bars):
+        lat = cost_model.latency(geom, expected_channels(ab))
+        if smooth_beta is None:
+            # auto scale: ~2% of the layer's mean latency
+            beta = jnp.maximum(jnp.mean(lat) * 0.02, 1e-9)
+        else:
+            beta = smooth_beta
+        total = total + smooth_max(lat, beta)
+    return total
+
+
+def energy_loss(cost_model: CostModel,
+                geoms: Sequence[LayerGeometry],
+                alpha_bars: Sequence[jax.Array],
+                smooth_beta: float | None = None) -> jax.Array:
+    """Eq. 4: sum_l sum_i P_act_i*LAT_i + P_idle_i*(M_l - LAT_i)."""
+    p_act, p_idle = cost_model.p_act(), cost_model.p_idle()
+    total = 0.0
+    for geom, ab in zip(geoms, alpha_bars):
+        lat = cost_model.latency(geom, expected_channels(ab))
+        if smooth_beta is None:
+            beta = jnp.maximum(jnp.mean(lat) * 0.02, 1e-9)
+        else:
+            beta = smooth_beta
+        m = smooth_max(lat, beta)
+        total = total + jnp.sum(p_act * lat + p_idle * (m - lat))
+    return total
+
+
+def exact_latency(cost_model: CostModel, geoms, counts_per_domain) -> jax.Array:
+    """Hard-max latency of a discretized mapping (evaluation path)."""
+    total = 0.0
+    for geom, counts in zip(geoms, counts_per_domain):
+        total = total + jnp.max(cost_model.latency(geom, jnp.asarray(counts, jnp.float32)))
+    return total
+
+
+def exact_energy(cost_model: CostModel, geoms, counts_per_domain) -> jax.Array:
+    p_act, p_idle = cost_model.p_act(), cost_model.p_idle()
+    total = 0.0
+    for geom, counts in zip(geoms, counts_per_domain):
+        lat = cost_model.latency(geom, jnp.asarray(counts, jnp.float32))
+        m = jnp.max(lat)
+        total = total + jnp.sum(p_act * lat + p_idle * (m - lat))
+    return total
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

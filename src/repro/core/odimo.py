@@ -1,0 +1,91 @@
+"""ODiMO channel-wise DNAS mixing (paper Sec. III-A, Eq. 1).
+
+For a weight tensor W with output channels on the LAST axis, we keep one
+trainable vector alpha_i in R^{C_out} per precision domain plus one trainable
+fake-quant log-scale per domain.  The effective weight is the per-channel
+softmax(alpha / tau)-weighted sum of the N fake-quantized copies.
+
+Pure-functional: parameters live in plain dicts (pytrees).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.quant import PrecisionDomain
+
+
+@dataclasses.dataclass(frozen=True)
+class ODiMOSpec:
+    """Search configuration shared by every ODiMO-managed layer."""
+    domains: Sequence[PrecisionDomain] = quant.DIANA_DOMAINS
+    init_tau: float = 1.0
+    final_tau: float = 0.05
+    act_bits: int = 7          # worst case of the domains (paper Sec. III-B)
+
+    @property
+    def n_domains(self) -> int:
+        return len(self.domains)
+
+
+def init_layer_state(key: jax.Array, w: jax.Array, spec: ODiMOSpec) -> dict:
+    """Per-layer ODiMO state: alpha (N, C_out) and per-domain log-scales."""
+    c_out = w.shape[-1]
+    n = spec.n_domains
+    # Small symmetric noise so channels can break ties; near-uniform start.
+    alpha = 0.01 * jax.random.normal(key, (n, c_out), dtype=jnp.float32)
+    log_scales = jnp.stack([quant.init_log_scale(w) for _ in range(n)])
+    return {"alpha": alpha, "log_scales": log_scales}
+
+
+def alpha_bar(alpha: jax.Array, tau: float) -> jax.Array:
+    """(N, C_out) softmax over the domain axis with temperature tau."""
+    return jax.nn.softmax(alpha / tau, axis=0)
+
+
+def effective_weight(w: jax.Array, state: dict, spec: ODiMOSpec,
+                     tau: float) -> jax.Array:
+    """Eq. 1: hat(W)_c = sum_i abar_{c,i} * fake_quant_i(W_c)."""
+    ab = alpha_bar(state["alpha"], tau)  # (N, C_out)
+    out = jnp.zeros_like(w)
+    for i, dom in enumerate(spec.domains):
+        wq = quant.fake_quant(w, state["log_scales"][i], dom.weight_bits)
+        out = out + ab[i] * wq  # broadcast over the last (C_out) axis
+    return out
+
+
+def discretized_weight(w: jax.Array, state: dict, spec: ODiMOSpec) -> jax.Array:
+    """Post-search weight: each channel quantized by its argmax domain."""
+    assign = jnp.argmax(state["alpha"], axis=0)  # (C_out,)
+    out = jnp.zeros_like(w)
+    for i, dom in enumerate(spec.domains):
+        wq = quant.fake_quant(w, state["log_scales"][i], dom.weight_bits)
+        out = out + jnp.where(assign == i, wq, 0.0)
+    return out
+
+
+def assignment(state: dict) -> jax.Array:
+    """(C_out,) int array: argmax domain index per output channel."""
+    return jnp.argmax(state["alpha"], axis=0)
+
+
+def domain_counts(state: dict, n_domains: int) -> jax.Array:
+    """Discrete channel count per domain after argmax."""
+    a = assignment(state)
+    return jnp.asarray([jnp.sum(a == i) for i in range(n_domains)])
+
+
+def expected_counts(state: dict, tau: float) -> jax.Array:
+    """Continuous (search-time) channel mass per domain: sum_c abar."""
+    return jnp.sum(alpha_bar(state["alpha"], tau), axis=-1)
+
+
+def tau_schedule(step: int | jax.Array, total_steps: int, spec: ODiMOSpec):
+    """Exponential temperature annealing init_tau -> final_tau."""
+    frac = jnp.clip(jnp.asarray(step, jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    log_t = (1 - frac) * jnp.log(spec.init_tau) + frac * jnp.log(spec.final_tau)
+    return jnp.exp(log_t)

@@ -1,0 +1,119 @@
+"""Fake-quantization primitives (paper Eq. 5, FQ-Conv / PACT style).
+
+Q(x) = (e^s / (2^{n-1}-1)) * round((2^{n-1}-1) * clip(x / e^s, -1, 1))
+
+with a trainable log-scale ``s`` and straight-through-estimator (STE)
+gradients through ``round``.  ``n = 2`` yields ternarization {-1, 0, +1}
+(DIANA's AIMC weight format); ``n = 8`` is the digital accelerator format.
+
+All functions are pure and jit-safe.  Output-channel axis is always the
+LAST axis of a weight tensor (Dense: (in, out); Conv HWIO: (kh, kw, in, out)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _ste_round(x: jax.Array) -> jax.Array:
+    """round(x) forward, identity gradient backward."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def _ste_floor(x: jax.Array) -> jax.Array:
+    return x + jax.lax.stop_gradient(jnp.floor(x) - x)
+
+
+def qlevels(n_bits: int) -> int:
+    """Number of positive levels of a symmetric signed n-bit format."""
+    return 2 ** (n_bits - 1) - 1
+
+
+def fake_quant(x: jax.Array, log_scale: jax.Array, n_bits: int) -> jax.Array:
+    """Symmetric signed fake-quantization with trainable scale (Eq. 5).
+
+    ``log_scale`` may be a scalar (per-tensor) or broadcastable to the last
+    axis of ``x`` (per-channel).
+    """
+    if n_bits >= 16:  # identity domain (bf16/fp: no fake-quant error modeled)
+        return x
+    levels = qlevels(n_bits)
+    scale = jnp.exp(log_scale)
+    xn = jnp.clip(x / scale, -1.0, 1.0)
+    q = _ste_round(xn * levels) / levels
+    return q * scale
+
+
+def quantize_int(x: jax.Array, log_scale: jax.Array, n_bits: int) -> jax.Array:
+    """True integer quantization (deployment path): returns int8 codes."""
+    levels = qlevels(n_bits)
+    scale = jnp.exp(log_scale)
+    xn = jnp.clip(x / scale, -1.0, 1.0)
+    return jnp.round(xn * levels).astype(jnp.int8)
+
+
+def dequantize_int(q: jax.Array, log_scale: jax.Array, n_bits: int) -> jax.Array:
+    levels = qlevels(n_bits)
+    return q.astype(jnp.float32) * (jnp.exp(log_scale) / levels)
+
+
+def fake_quant_act(x: jax.Array, log_scale: jax.Array, n_bits: int) -> jax.Array:
+    """Unsigned activation fake-quantization (post-ReLU ranges), clip [0, 1].
+
+    The paper stores shared activations on 8-bit and truncates the LSB for the
+    AIMC 7-bit converters; ``truncate_lsb`` models that exactly.
+    """
+    if n_bits >= 16:
+        return x
+    levels = 2**n_bits - 1
+    scale = jnp.exp(log_scale)
+    xn = jnp.clip(x / scale, 0.0, 1.0)
+    q = _ste_round(xn * levels) / levels
+    return q * scale
+
+
+def truncate_lsb(x_codes: jax.Array) -> jax.Array:
+    """Drop the least-significant bit of 8-bit activation codes (7-bit D/A)."""
+    return (x_codes.astype(jnp.int32) >> 1) << 1
+
+
+def init_log_scale(w: jax.Array, per_channel: bool = False) -> jax.Array:
+    """Initialize the log-scale from the tensor's max-abs statistics."""
+    if per_channel:
+        red = tuple(range(w.ndim - 1))
+        m = jnp.max(jnp.abs(w), axis=red)
+    else:
+        m = jnp.max(jnp.abs(w))
+    return jnp.log(jnp.maximum(m, 1e-8))
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionDomain:
+    """One 'accelerator' in ODiMO's view: a precision + a cost identity.
+
+    On DIANA: ``digital`` (8-bit) and ``aimc`` (ternary, n=2).
+    On TPU: precision domains of the MXU (int8 @ 2x peak, bf16) and/or
+    disjoint tensor-parallel sub-groups.
+    """
+    name: str
+    weight_bits: int          # 2 => ternary, 8 => int8, >=16 => bf16 identity
+    act_bits: int = 8
+
+    @property
+    def is_identity(self) -> bool:
+        return self.weight_bits >= 16
+
+
+# The DIANA SoC of the paper (Sec. II-A / III-B).
+DIANA_DIGITAL = PrecisionDomain("digital", weight_bits=8, act_bits=8)
+DIANA_AIMC = PrecisionDomain("aimc", weight_bits=2, act_bits=7)
+DIANA_DOMAINS: Sequence[PrecisionDomain] = (DIANA_DIGITAL, DIANA_AIMC)
+
+# TPU precision domains (int8 MXU path at 2x bf16 peak; bf16 identity).
+TPU_INT8 = PrecisionDomain("int8", weight_bits=8, act_bits=8)
+TPU_INT4 = PrecisionDomain("int4", weight_bits=4, act_bits=8)
+TPU_BF16 = PrecisionDomain("bf16", weight_bits=16, act_bits=16)
+TPU_DOMAINS: Sequence[PrecisionDomain] = (TPU_INT8, TPU_BF16)

@@ -1,0 +1,189 @@
+"""Sharding rules: FSDP over the data axes x TP over the model axis (+EP for
+MoE experts), applied by param-path pattern.
+
+Conventions (DESIGN.md §5):
+  * projections writing model-parallel features (wq/wk/wv/up/gate/...):
+      (in, out) -> P(data_axes, "model")      [FSDP on in, TP on out]
+  * projections reading model-parallel features (wo/down/out_proj):
+      (in, out) -> P("model", data_axes)
+  * expert-stacked MoE weights: expert dim over "model" (expert parallelism)
+  * embeddings / LM head: vocab over "model", d_model over data (FSDP)
+  * 1-D params (norm scales, biases, gates): replicated
+  * stacked scan params get a leading None for the repeat axis (any rank
+    excess over the rule's rank is padded with None on the left)
+
+``set_mesh_axes``/``constrain`` let model code place activation constraints
+without importing mesh machinery; with no mesh configured they no-op, so the
+same model code runs in single-device tests.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_AXES: dict = {"dp": None, "tp": None, "mesh": None}
+
+
+def set_mesh_axes(dp: Tuple[str, ...], tp: str, mesh: Optional[Mesh] = None):
+    _AXES["dp"], _AXES["tp"], _AXES["mesh"] = tuple(dp), tp, mesh
+
+
+def clear_mesh_axes():
+    _AXES["dp"], _AXES["tp"], _AXES["mesh"] = None, None, None
+
+
+def axes_configured() -> bool:
+    return _AXES["dp"] is not None
+
+
+def dp_axes() -> Tuple[str, ...]:
+    return _AXES["dp"]
+
+
+def tp_axis() -> str:
+    return _AXES["tp"]
+
+
+def constrain(x, kind: str):
+    """Activation sharding constraint; no-op without a configured mesh.
+    Axes that do not divide the corresponding dim are dropped."""
+    if not axes_configured():
+        return x
+    dp, tp = _AXES["dp"], _AXES["tp"]
+    mesh = _AXES["mesh"]
+    spec = {
+        # residual stream: batch over data AND features over model — scanned
+        # layer boundaries are SAVED for backward, so an unsharded D costs
+        # L x B x S x D/16 extra per device (the 73 GiB/dev yi-9b train bug,
+        # EXPERIMENTS.md §Perf it0)
+        "act": (dp, None, tp),                  # (B, S, D)
+        "act_rep": (dp, None, None),            # (B, S, D), D replicated
+        "moe_grouped": (dp, None, tp, None),    # (G, T, E, C): G->data, E->model
+        "moe_expert": (dp, tp, None, None),     # (G, E, C, D)
+    }[kind]
+    if x.ndim < len(spec):
+        return x
+    spec = tuple(spec) + (None,) * (x.ndim - len(spec))
+    if mesh is not None:
+        spec = tuple(a if _divides(mesh, a, d) and d > 1 else None
+                     for a, d in zip(spec, x.shape))
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ------------------------------------------------------------- param rules
+
+# (regex on 'a/b/c' path string, spec builder for the LAST dims)
+def _param_rules(dp, tp):
+    return [
+        (r"(wq|wk|wv|w_if|w_in|in_proj|kv_a|kv_b)/w(_q)?$", (dp, tp)),
+        (r"(up|gate)/w(_q)?$", (dp, tp)),
+        (r"(wo|down|out_proj)/w(_q)?$", (tp, dp)),
+        (r"head/w(_q)?$", (dp, tp)),
+        (r"\bemb$", (tp, dp)),
+        (r"moe/(up|gate)$", (tp, dp, None)),     # (E, D, F): EP on E
+        (r"moe/down$", (tp, None, dp)),          # (E, F, D)
+        (r"router/w$", (None, None)),
+        (r"shared/(up|gate)/w(_q)?$", (dp, tp)),
+        (r"shared/down/w(_q)?$", (tp, dp)),
+        (r"w[qkv]_bd$", (None, None, tp)),  # mlstm block-diag (H,hd,hd)
+        (r"/r$", (None, None, None)),  # slstm recurrent (H,hd,4hd): replicate
+                                       # (sharding hd forces a per-step
+                                       #  reshard of the carry — see sweep.log)
+        (r"conv_w$", (None, None)),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _divides(mesh: Mesh, axes, size: int) -> bool:
+    if axes is None:
+        return True
+    names = (axes,) if isinstance(axes, str) else tuple(axes)
+    total = int(np.prod([mesh.shape[a] for a in names]))
+    return size % total == 0
+
+
+def param_spec(mesh: Mesh, path_str: str, shape, dp, tp) -> P:
+    """PartitionSpec for one param leaf; falls back to replication on any
+    divisibility mismatch (correct, just less sharded)."""
+    if len(shape) <= 1:
+        return P()
+    for pat, spec in _param_rules(dp, tp):
+        if re.search(pat, path_str):
+            spec = tuple(spec)
+            if len(spec) > len(shape):
+                return P()
+            full = (None,) * (len(shape) - len(spec)) + spec
+            # verify divisibility per dim; drop axis if mismatched
+            fixed = []
+            for dim, axes in zip(shape, full):
+                fixed.append(axes if _divides(mesh, axes, dim) else None)
+            return P(*fixed)
+    return P()
+
+
+def shardings_for_params(mesh: Mesh, params_shape, dp, tp):
+    """Tree of NamedSharding matching a tree of ShapeDtypeStruct."""
+    def one(path, leaf):
+        spec = param_spec(mesh, _path_str(path), leaf.shape, dp, tp)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# --------------------------------------------------------------- input rules
+
+def batch_spec(mesh: Mesh, shape, dp) -> P:
+    """(B, ...) arrays: shard batch over the data axes if divisible."""
+    if len(shape) == 0:
+        return P()
+    if _divides(mesh, dp, shape[0]) and shape[0] > 1:
+        return P(dp, *((None,) * (len(shape) - 1)))
+    return P()
+
+
+def cache_leaf_spec(mesh: Mesh, shape, dp, tp) -> P:
+    """KV-cache / recurrent-state leaves.
+
+    Layout conventions: (R, B, S, KVH, hd) stacked KV, (B, S, KVH, hd)
+    unstacked, (R, B, S, L) MLA latent, SSM states (R, B, H, hd, N)...
+    Strategy: shard the batch dim over dp when divisible; then shard the
+    largest remaining dim that the model axis divides (prefer heads, then
+    sequence) over tp.
+    """
+    nd = len(shape)
+    spec = [None] * nd
+    # find batch dim: first dim whose index is 0 (unstacked) or 1 (stacked)
+    bdim = 1 if nd >= 2 and shape[0] <= 64 and nd >= 4 else 0
+    if _divides(mesh, dp, shape[bdim]) and shape[bdim] > 1:
+        spec[bdim] = dp
+    tp_size = mesh.shape[tp]
+    # prefer a heads-like or large dim for tp
+    order = sorted(range(nd), key=lambda i: -shape[i])
+    for i in order:
+        if spec[i] is None and shape[i] % tp_size == 0 and shape[i] > 1:
+            spec[i] = tp
+            break
+    return P(*spec)
+
+
+def shardings_for_tree(mesh: Mesh, tree_shape, spec_fn):
+    def one(leaf):
+        return NamedSharding(mesh, spec_fn(leaf.shape))
+    return jax.tree.map(one, tree_shape)

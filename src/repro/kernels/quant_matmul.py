@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: w8a8 matmul with int32 accumulation + per-column scales.
+
+Target: TPU v5e MXU int8 path (2x bf16 peak).  Grid (M/bm, N/bn, K/bk) with
+the K dimension innermost ('arbitrary') accumulating into a VMEM scratch;
+block shapes are MXU-aligned multiples of 128 (lane) x 8/32 (sublane).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 128, 128, 512
+
+
+def _kernel(x_ref, w_ref, sw_ref, sx_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        sx = sx_ref[0]
+        sw = sw_ref[...]  # (1, bn)
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * sx * sw
+
+
+def quant_matmul(x_q, w_q, sx, sw, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
+                 bk=DEFAULT_BK, interpret=False):
+    """x_q (M,K) int8, w_q (K,N) int8, sx scalar f32, sw (N,) f32 -> (M,N) f32.
+
+    Shapes must be multiples of the block sizes (ops.py pads otherwise).
+    """
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (x_q.shape, w_q.shape, bm, bn, bk)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec(memory_space=pl.ANY),  # sx scalar, full
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_q, w_q, sw.reshape(1, n), sx.reshape(1))

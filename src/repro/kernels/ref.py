@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x_q, w_q, sx, sw):
+    """int8 x (M,K) @ int8 w (K,N) with per-tensor sx and per-column sw.
+    Returns f32 (M,N): (x_q @ w_q) * sx * sw."""
+    acc = jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * sx * sw[None, :]
+
+
+def ternary_matmul_ref(x_q, w_t, sx, sw):
+    """Ternary weights (codes in {-1,0,1}) — same contraction as quant."""
+    return quant_matmul_ref(x_q, w_t, sx, sw)
+
+
+def split_precision_matmul_ref(x, x_q, sx, w_bf16, w_q, sw, boundary):
+    """ODiMO deployed layer: output cols [0, boundary) from the int8 domain,
+    [boundary, N) from the bf16 domain (Fig. 3 contiguous split).
+
+    x (M,K) bf16; x_q (M,K) int8; w_bf16 (K,N) bf16; w_q (K,N) int8;
+    sw (N,) per-col scales. Returns f32 (M,N)."""
+    n = w_bf16.shape[1]
+    lo = quant_matmul_ref(x_q, w_q, sx, sw)
+    hi = jnp.dot(x.astype(jnp.float32), w_bf16.astype(jnp.float32))
+    cols = jnp.arange(n)[None, :]
+    return jnp.where(cols < boundary, lo, hi)
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """q (B,H,Sq,D); k,v (B,KVH,Sk,D) with H = KVH*G. f32 softmax."""
+    B, H, Sq, D = q.shape
+    KVH, Sk = k.shape[1], k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, Sq, D)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * D ** -0.5
+    if causal:
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+# on the production mesh, record memory/cost analysis + collective schedule.
+#
+# MUST be run as its own process (the XLA_FLAGS lines above precede every jax
+# import, since jax locks the device count on first init):
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b \
+#         --shape train_4k [--multi-pod] [--out experiments/dryrun]
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --all  # everything, serial
+
+import argparse
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cfgbase
+from repro.distributed import sharding as sh
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh, mesh_axes
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in optimized HLO, separating
+    ops inside while-loop bodies (executed once per scanned layer repeat)
+    from top-level ops.  Returns {op: {"top": bytes, "loop": bytes}}."""
+    dtype_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                   "s8": 1, "u8": 1, "f64": 8, "s64": 8, "pred": 1,
+                   "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2}
+    result = {c: {"top": 0, "loop": 0} for c in COLLECTIVES}
+    counts = {c: {"top": 0, "loop": 0} for c in COLLECTIVES}
+    current_comp = ""
+    loop_comps = set()
+    # first pass: find computations used as while bodies/conditions
+    for m in re.finditer(r"while\([^)]*\).*?body=([%\w.\-]+)", hlo_text):
+        loop_comps.add(m.group(1).lstrip("%"))
+    for line in hlo_text.splitlines():
+        mcomp = re.match(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->", line)
+        if mcomp and "{" in line or re.match(r"^%?[\w.\-]+ \(", line):
+            if mcomp:
+                current_comp = mcomp.group(1)
+        for coll in COLLECTIVES:
+            if f" {coll}(" in line or f"= {coll}(" in line or \
+               re.search(rf"\b{coll}(-start)?\(", line):
+                # operand bytes: parse result shape, e.g. bf16[2048,512]{...}
+                shapes = re.findall(r"(\w+)\[([\d,]*)\]", line)
+                if not shapes:
+                    continue
+                dt, dims = shapes[0]
+                if dt not in dtype_bytes:
+                    continue
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                nbytes = n * dtype_bytes[dt]
+                # crude scope attribution: computation named like a loop body
+                scope = "loop" if (current_comp in loop_comps or
+                                   "body" in current_comp or
+                                   "while" in current_comp) else "top"
+                result[coll][scope] += nbytes
+                counts[coll][scope] += 1
+    return {"bytes": result, "counts": counts}
+
+
+def scanned_repeats(cfg) -> int:
+    """Trip count of the layer scan (collectives inside count this many x)."""
+    period = len(cfg.pattern)
+    r = cfg.n_layers // period
+    if cfg.moe_first_dense and period == 1:
+        r -= 1
+    return r
+
+
+VARIANTS = {
+    "base": {},
+    "kvq8": {"kv_cache_dtype": "int8"},
+    "wq8": {"serve_weight_dtype": "int8"},
+    "kvwq8": {"kv_cache_dtype": "int8", "serve_weight_dtype": "int8"},
+}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
+             variant: str = "base") -> dict:
+    import dataclasses as _dc
+    cfg = cfgbase.get(arch)
+    if VARIANTS[variant]:
+        cfg = _dc.replace(cfg, **VARIANTS[variant])
+    if not SP.cell_is_runnable(cfg, shape):
+        rec = {"arch": arch, "shape": shape, "variant": variant,
+               "multi_pod": multi_pod, "status": "skipped",
+               "reason": "full-attention arch: long_500k requires "
+                         "sub-quadratic sequence mixing (DESIGN.md §4)"}
+        _write(out_dir, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp, tp = mesh_axes(mesh)
+    sh.set_mesh_axes(dp, tp, mesh)
+
+    meta = SP.SHAPES[shape]
+    pspec = SP.param_specs(cfg)
+    if meta["kind"] != "train" and cfg.serve_weight_dtype == "int8":
+        from repro.models.transformer import quantize_for_serve
+        pspec = quantize_for_serve(pspec, cfg)
+    psh = sh.shardings_for_params(mesh, pspec, dp, tp)
+    inputs = SP.input_specs(cfg, shape)
+
+    t0 = time.time()
+    with mesh:
+        if meta["kind"] == "train":
+            ospec = SP.opt_specs(cfg)
+            # moments share the param specs; step counter replicated
+            osh = jax.tree_util.tree_map_with_path(
+                lambda path, l: NamedSharding(
+                    mesh,
+                    sh.param_spec(mesh, sh._path_str(path[1:]), l.shape, dp, tp)
+                    if len(l.shape) > 1 else P()),
+                ospec)
+            bsh = jax.tree.map(
+                lambda l: NamedSharding(mesh, sh.batch_spec(mesh, l.shape, dp)),
+                inputs["batch"])
+            step = SP.make_train_step(cfg, grad_shardings=psh)
+            jitted = jax.jit(step, in_shardings=(psh, osh, bsh),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(pspec, ospec, inputs["batch"])
+        elif meta["kind"] == "prefill":
+            csh = jax.tree.map(
+                lambda l: NamedSharding(
+                    mesh, sh.cache_leaf_spec(mesh, l.shape, dp, tp)),
+                inputs["caches"])
+            tsh = NamedSharding(
+                mesh, sh.batch_spec(mesh, inputs["tokens"].shape, dp))
+            step = SP.make_prefill_step(cfg)
+            if cfg.frontend:
+                fsh = NamedSharding(
+                    mesh, sh.batch_spec(mesh, inputs["frontend"].shape, dp))
+                jitted = jax.jit(step, in_shardings=(psh, tsh, csh, fsh),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(pspec, inputs["tokens"],
+                                       inputs["caches"], inputs["frontend"])
+            else:
+                jitted = jax.jit(step, in_shardings=(psh, tsh, csh),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(pspec, inputs["tokens"],
+                                       inputs["caches"])
+        else:  # decode
+            csh = jax.tree.map(
+                lambda l: NamedSharding(
+                    mesh, sh.cache_leaf_spec(mesh, l.shape, dp, tp)),
+                inputs["caches"])
+            tsh = NamedSharding(
+                mesh, sh.batch_spec(mesh, inputs["token"].shape, dp))
+            ish = NamedSharding(mesh, P())
+            step = SP.make_serve_step(cfg)
+            jitted = jax.jit(step, in_shardings=(psh, tsh, csh, ish),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(pspec, inputs["token"],
+                                   inputs["caches"], inputs["index"])
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+
+    mem_rec = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        mem_rec[k] = int(getattr(mem, k, 0) or 0)
+
+    rec = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "variant": variant,
+        "status": "ok",
+        "mesh": list(mesh.devices.shape),
+        "n_devices": int(np.prod(mesh.devices.shape)),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_rec,
+        "cost_analysis": {k: float(v) for k, v in (cost or {}).items()
+                          if isinstance(v, (int, float)) and
+                          k in ("flops", "bytes accessed",
+                                "bytes accessed operand 0 {}",
+                                "bytes accessed output {}", "utilization")},
+        "collectives": colls,
+        "scan_repeats": scanned_repeats(cfg),
+    }
+    print(f"[dryrun] {arch} x {shape} ({'2x16x16' if multi_pod else '16x16'})"
+          f" OK  compile={t_compile:.0f}s  temp="
+          f"{mem_rec['temp_size_in_bytes']/2**30:.2f}GiB/dev "
+          f"args={mem_rec['argument_size_in_bytes']/2**30:.2f}GiB/dev")
+    print("  memory_analysis:", mem_rec)
+    print("  cost_analysis (per-device, scan bodies counted once):",
+          rec["cost_analysis"])
+    _write(out_dir, rec)
+    sh.clear_mesh_axes()
+    return rec
+
+
+def _write(out_dir: Path, rec: dict):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = "mp" if rec["multi_pod"] else "sp"
+    if rec.get("variant", "base") != "base":
+        tag = f"{tag}-{rec['variant']}"
+    path = out_dir / f"{rec['arch']}__{rec['shape']}__{tag}.json"
+    path.write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SP.SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="base", choices=list(VARIANTS))
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    out = Path(args.out)
+
+    cfgbase.load_all()
+    if args.all:
+        for arch in cfgbase.names():
+            for shape in SP.SHAPES:
+                for mp in (False, True):
+                    run_cell(arch, shape, mp, out)
+    else:
+        run_cell(args.arch, args.shape, args.multi_pod, out,
+                 variant=args.variant)
+
+
+if __name__ == "__main__":
+    main()

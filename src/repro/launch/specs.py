@@ -1,0 +1,116 @@
+"""Input ShapeDtypeStruct stand-ins + step functions for every
+(architecture x input-shape) dry-run cell.
+
+Shapes (assigned):
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill_step
+  decode_32k   cache 32,768 global_batch 128  -> serve_step (1 new token)
+  long_500k    cache 524,288 global_batch 1   -> serve_step; only for
+               sub-quadratic archs (cfg.subquadratic)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.optim import adamw
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: str) -> bool:
+    """long_500k requires sub-quadratic sequence mixing (DESIGN.md §4)."""
+    if shape == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    meta = SHAPES[shape]
+    B, S = meta["batch"], meta["seq"]
+    if meta["kind"] == "train":
+        specs = {"tokens": _i32(B, S), "targets": _i32(B, S)}
+        if cfg.frontend:
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        return {"batch": specs}
+    if meta["kind"] == "prefill":
+        specs = {"tokens": _i32(B, S),
+                 "caches": T.cache_specs(cfg, B, S)}
+        if cfg.frontend:
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token with a cache of length S; cross-attention KV
+    # lives in the cache (written at prefill), so no frontend input
+    specs = {"token": _i32(B), "caches": T.cache_specs(cfg, B, S),
+             "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    return specs
+
+
+def param_specs(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: T.init_lm(k, cfg), jax.random.PRNGKey(0))
+
+
+def opt_config(cfg: ArchConfig) -> adamw.AdamWConfig:
+    # bf16 moments keep arctic-480b's optimizer state within a v5e pod
+    moment_dtype = jnp.bfloat16 if cfg.name == "arctic-480b" else jnp.float32
+    return adamw.AdamWConfig(lr=1e-4, weight_decay=0.01,
+                             moment_dtype=moment_dtype)
+
+
+def opt_specs(cfg: ArchConfig):
+    ps = param_specs(cfg)
+    return jax.eval_shape(lambda p: adamw.init(p, opt_config(cfg)), ps)
+
+
+# ------------------------------------------------------------ step functions
+
+def make_train_step(cfg: ArchConfig, grad_shardings=None):
+    ocfg = opt_config(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.lm_loss(p, cfg, batch, remat=True))(params)
+        if grad_shardings is not None:
+            # pin gradient cotangents to the param layout — without this the
+            # scan-transpose accumulates REPLICATED f32 grads (74 GiB/dev on
+            # yi-9b; see EXPERIMENTS.md §Perf)
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        params, opt_state, gnorm = adamw.update(grads, opt_state, params, ocfg)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, tokens, caches, frontend=None):
+        logits, caches = T.prefill(params, cfg, tokens, caches,
+                                   cross_source=frontend)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, token, caches, index):
+        logits, caches = T.decode_step(params, cfg, token, caches, index)
+        return logits, caches
+
+    return serve_step

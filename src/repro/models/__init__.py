@@ -1,0 +1,1 @@
+"""Model zoo: paper CNNs + the 10 assigned LM architectures."""

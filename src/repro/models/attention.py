@@ -1,0 +1,316 @@
+"""Attention variants: GQA (optional sliding window), cross-attention, MLA.
+
+Shapes: hidden (B, S, D); q (B, S, H, hd); kv (B, S, KVH, hd).
+GQA is computed grouped — q reshaped to (B, S, KVH, G, hd) — so KV heads are
+never materialized H times.  Long sequences use a double-chunked online-
+softmax attention (the jnp reference of the Pallas flash kernel in
+``repro.kernels.flash_attention``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+# int8 KV-cache quantization step (post-norm k/v live in ~[-8, 8])
+KV_QSCALE = 16.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    sliding_window: int | None = None
+    bias: bool = False
+    causal: bool = True
+    rotary: bool = True
+
+
+def init_attn(key, cfg: AttnConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    H, KVH, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "wq": L.init_dense(ks[0], d, H * hd, dtype, bias=cfg.bias),
+        "wk": L.init_dense(ks[1], d, KVH * hd, dtype, bias=cfg.bias),
+        "wv": L.init_dense(ks[2], d, KVH * hd, dtype, bias=cfg.bias),
+        "wo": L.init_dense(ks[3], H * hd, d, dtype,
+                           scale=(H * hd) ** -0.5, bias=cfg.bias),
+    }
+
+
+# ---------------------------------------------------------------- core math
+
+def _grouped_scores_softmax_out(q, k, v, mask, scale):
+    """q (B,Sq,KVH,G,hd); k,v (B,Sk,KVH,hd); mask (Sq,Sk) bool or None."""
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+
+
+def full_attention(q, k, v, *, causal, window=None, q_pos0=0, kv_len=None):
+    """Unchunked reference path (small S / decode)."""
+    B, Sq, KVH, G, hd = q.shape
+    Sk = k.shape[1]
+    scale = hd ** -0.5
+    mask = None
+    qi = q_pos0 + jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Sk)[None, :]
+    if causal:
+        mask = ki <= qi
+    if window is not None:
+        wm = ki > qi - window
+        mask = wm if mask is None else (mask & wm)
+    if kv_len is not None:
+        lm = ki < kv_len
+        mask = lm if mask is None else (mask & lm)
+    return _grouped_scores_softmax_out(q, k, v, mask, scale)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None,
+                      q_chunk=512, k_chunk=1024, kv_len=None):
+    """Double-chunked online-softmax attention (flash-style, pure jnp).
+
+    Memory per step is O(q_chunk * k_chunk); the causal upper triangle is
+    masked (not skipped) to keep scan trip counts static.
+    """
+    B, Sq, KVH, G, hd = q.shape
+    Sk, vd = k.shape[1], v.shape[-1]
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    assert Sq % q_chunk == 0 and Sk % k_chunk == 0
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+    scale = hd ** -0.5
+
+    qc = q.reshape(B, nq, q_chunk, KVH, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nk, k_chunk, KVH, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, k_chunk, KVH, vd).transpose(1, 0, 2, 3, 4)
+
+    import jax as _jax
+
+    @_jax.checkpoint
+    def q_body(_, qi_blk):
+        qi, qb = qi_blk  # index, (B, qc, KVH, G, hd)
+        m0 = jnp.full((B, KVH, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, q_chunk, KVH, G, vd), jnp.float32)
+
+        @_jax.checkpoint
+        def k_body(carry, ki_blk):
+            m, l, o = carry
+            ki, kb, vb = ki_blk
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb).astype(jnp.float32) * scale
+            qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+            kpos = ki * k_chunk + jnp.arange(k_chunk)[None, :]
+            mask = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            if kv_len is not None:
+                mask = mask & (kpos < kv_len)
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(vb.dtype), vb)
+            o_new = o * alpha.transpose(0, 3, 1, 2)[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        (m, l, o), _ = jax.lax.scan(
+            k_body, (m0, l0, o0), (jnp.arange(nk), kc, vc))
+        o = o / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return None, o.astype(q.dtype)
+
+    _, out = jax.lax.scan(q_body, None, (jnp.arange(nq), qc))
+    # out: (nq, B, q_chunk, KVH, G, vd) -> (B, Sq, KVH, G, vd)
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KVH, G, vd)
+
+
+# ---------------------------------------------------------------- GQA layer
+
+def gqa(p, x, positions, cfg: AttnConfig, *, cache=None, cache_index=None,
+        chunked=False, kv_override=None):
+    """Grouped-query attention.
+
+    cache: optional dict {"k","v"} of (B, S_max, KVH, hd) + writes at
+    ``cache_index``; decode passes S==1 inputs.  kv_override supplies
+    precomputed (k, v) for cross-attention.
+    """
+    B, S, D = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KVH
+    q = L.dense(p["wq"], x).reshape(B, S, H, hd)
+    if kv_override is None:
+        k = L.dense(p["wk"], x).reshape(B, S, KVH, hd)
+        v = L.dense(p["wv"], x).reshape(B, S, KVH, hd)
+        if cfg.rotary:
+            q = L.rope(q, positions, cfg.rope_theta)
+            k = L.rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+
+    kv_len = None
+    if cache is not None:
+        if cache["k"].dtype == jnp.int8:
+            # int8 KV-cache domain: codes = round(x * KV_QSCALE); the cache
+            # HBM stream halves vs bf16 (EXPERIMENTS.md §Perf)
+            enc = lambda t: jnp.clip(jnp.round(t.astype(jnp.float32) *
+                                               KV_QSCALE), -127, 127
+                                     ).astype(jnp.int8)
+            kc = jax.lax.dynamic_update_slice(cache["k"], enc(k),
+                                              (0, cache_index, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], enc(v),
+                                              (0, cache_index, 0, 0))
+            new_cache = {"k": kc, "v": vc}
+            k = kc.astype(x.dtype) * (1.0 / KV_QSCALE)
+            v = vc.astype(x.dtype) * (1.0 / KV_QSCALE)
+        else:
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+            new_cache = {"k": k, "v": v}
+        kv_len = cache_index + S
+    else:
+        new_cache = None
+
+    qg = q.reshape(B, S, KVH, G, hd)
+    if chunked and S > 1:
+        # long prefill: chunked flash attention directly over the (updated)
+        # cache buffers; cache-backed prefill starts at position 0
+        out = chunked_attention(qg, k, v, causal=cfg.causal,
+                                window=cfg.sliding_window, kv_len=kv_len)
+    else:
+        q_pos0 = cache_index if cache is not None else 0
+        out = full_attention(qg, k, v, causal=cfg.causal,
+                             window=cfg.sliding_window,
+                             q_pos0=q_pos0, kv_len=kv_len)
+    out = out.reshape(B, S, H * hd)
+    return L.dense(p["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------- MLA layer
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+
+
+def init_mla(key, cfg: MLAConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+    H = cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": L.init_dense(ks[0], cfg.d_model, H * qd, dtype),
+        "kv_a": L.init_dense(ks[1], cfg.d_model,
+                             cfg.kv_lora_rank + cfg.qk_rope_dim, dtype),
+        "kv_norm": L.init_norm(cfg.kv_lora_rank, dtype),
+        "kv_b": L.init_dense(ks[2], cfg.kv_lora_rank,
+                             H * (cfg.qk_nope_dim + cfg.v_head_dim), dtype),
+        "wo": L.init_dense(ks[3], H * cfg.v_head_dim, cfg.d_model, dtype,
+                           scale=(H * cfg.v_head_dim) ** -0.5),
+    }
+
+
+def mla(p, x, positions, cfg: MLAConfig, *, cache=None, cache_index=None,
+        chunked=False):
+    """Multi-head Latent Attention (DeepSeek-V2). Cache holds the compressed
+    latent + shared rope key: (B, S_max, kv_lora_rank + qk_rope_dim)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    q = L.dense(p["wq"], x).reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = L.rope(q_rope, positions, cfg.rope_theta)
+
+    kv = L.dense(p["kv_a"], x)
+    latent, k_rope = kv[..., :cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    latent = L.norm(p["kv_norm"], latent)
+    k_rope = L.rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    kv_len = None
+    if cache is not None:
+        packed = jnp.concatenate([latent, k_rope], axis=-1)
+        if cache["latent"].dtype == jnp.int8:
+            codes = jnp.clip(jnp.round(packed.astype(jnp.float32) *
+                                       KV_QSCALE), -127, 127).astype(jnp.int8)
+            buf = jax.lax.dynamic_update_slice(cache["latent"], codes,
+                                               (0, cache_index, 0))
+            new_cache = {"latent": buf}
+            deq = buf.astype(x.dtype) * (1.0 / KV_QSCALE)
+            latent = deq[..., :cfg.kv_lora_rank]
+            k_rope = deq[..., cfg.kv_lora_rank:]
+        else:
+            buf = jax.lax.dynamic_update_slice(
+                cache["latent"], packed.astype(cache["latent"].dtype),
+                (0, cache_index, 0))
+            new_cache = {"latent": buf}
+            latent = buf[..., :cfg.kv_lora_rank]
+            k_rope = buf[..., cfg.kv_lora_rank:]
+        kv_len = cache_index + S
+    else:
+        new_cache = None
+
+    if cache is not None and S == 1:
+        # ABSORBED decode path (DeepSeek-V2 Appendix): fold kv_b's
+        # up-projections into the query / output sides so attention runs
+        # directly against the compressed latent cache — O(H*r) per token
+        # instead of re-expanding K/V for the whole cache (~100x fewer
+        # FLOPs at 32k context; see EXPERIMENTS.md §Perf).
+        r = cfg.kv_lora_rank
+        kvb_p = p["kv_b"]
+        if "w_q" in kvb_p:  # int8 serve domain: dequant for the absorb fold
+            w_kvb_flat = kvb_p["w_q"].astype(x.dtype) * \
+                kvb_p["w_s"].astype(x.dtype)[..., None, :]
+        else:
+            w_kvb_flat = kvb_p["w"]
+        w_kvb = w_kvb_flat.reshape(r, H, nd + vd)
+        w_uk, w_uv = w_kvb[..., :nd], w_kvb[..., nd:]
+        q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)
+        scale = (nd + rd) ** -0.5
+        scores = (jnp.einsum("bqhr,bsr->bhqs", q_abs.astype(jnp.float32),
+                             latent.astype(jnp.float32)) +
+                  jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                             k_rope.astype(jnp.float32))) * scale
+        mask = jnp.arange(latent.shape[1])[None, None, None, :] < kv_len
+        scores = jnp.where(mask, scores, -1e30)
+        pw = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhqs,bsr->bqhr", pw,
+                           latent.astype(jnp.float32))
+        out = jnp.einsum("bqhr,rhv->bqhv", o_lat.astype(x.dtype), w_uv)
+        out = out.reshape(B, S, H * vd)
+        return L.dense(p["wo"], out), new_cache
+
+    kvb = L.dense(p["kv_b"], latent).reshape(B, latent.shape[1], H, nd + vd)
+    k_nope, v = kvb[..., :nd], kvb[..., nd:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_nope.shape[:3], rd))], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    # MLA is MHA (KVH == H, G == 1) on the concatenated features.
+    qg = qfull.reshape(B, S, H, 1, nd + rd)
+    if chunked and S > 1:
+        out = chunked_attention(qg, k, v, causal=True, kv_len=kv_len)
+    else:
+        q_pos0 = cache_index if cache is not None else 0
+        out = full_attention(qg, k, v, causal=True, q_pos0=q_pos0, kv_len=kv_len)
+    out = out.reshape(B, S, H * vd)
+    return L.dense(p["wo"], out), new_cache

@@ -1,0 +1,204 @@
+"""Paper-faithful CNN benchmarks: ResNet20 (CIFAR-10), ResNet18
+(Tiny-ImageNet), MobileNetV1-0.25x (VWW) — Sec. IV-A.
+
+BatchNorm is assumed folded into the convolutions (the paper folds BN before
+quantization since DIANA has no BN hardware); layers are conv+bias.
+
+Each model exposes:
+    init(key, cfg)              -> params pytree
+    apply(params, x, mode, tau) -> logits
+    plan(cfg)                   -> list of (name, LayerGeometry, searchable)
+    managed_paths(cfg)          -> list of param-dict key paths, forward order
+
+``searchable=False`` layers (depthwise convs on DIANA) are pinned to the
+digital domain and excluded from the DNAS (paper Sec. IV-A).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_models import LayerGeometry
+from repro.core.odimo import ODiMOSpec
+from repro.models import managed as mg
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    img_hw: Tuple[int, int]
+    in_ch: int
+    n_classes: int
+    width_mult: float = 1.0
+
+
+RESNET20_CFG = CNNConfig("resnet20", (32, 32), 3, 10)
+RESNET18_CFG = CNNConfig("resnet18", (64, 64), 3, 200)
+RESNET18_SMALL = CNNConfig("resnet18_small", (32, 32), 3, 50)
+MBV1_CFG = CNNConfig("mobilenetv1_025", (96, 96), 3, 2, width_mult=0.25)
+
+# Reduced configs for CI-speed tests
+RESNET20_TINY = CNNConfig("resnet20_tiny", (16, 16), 3, 10)
+
+
+# --------------------------------------------------------------------------
+# ResNet (pre-BN-folded basic blocks)
+# --------------------------------------------------------------------------
+
+def _resnet_stages(name: str):
+    if "20" in name:
+        return [(16, 3, 1), (32, 3, 2), (64, 3, 2)], 16        # (width, blocks, stride)
+    return [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)], 64
+
+
+def resnet_init(key, cfg: CNNConfig, spec: ODiMOSpec | None):
+    stages, stem_w = _resnet_stages(cfg.name)
+    keys = jax.random.split(key, 512)
+    ki = iter(range(512))
+    p = {"stem": mg.init_conv(keys[next(ki)], 3, 3, cfg.in_ch, stem_w, spec)}
+    blocks = []
+    c_prev = stem_w
+    for (w, n, s) in stages:
+        for b in range(n):
+            stride = s if b == 0 else 1
+            blk = {
+                "c1": mg.init_conv(keys[next(ki)], 3, 3, c_prev, w, spec),
+                "c2": mg.init_conv(keys[next(ki)], 3, 3, w, w, spec),
+            }
+            if stride != 1 or c_prev != w:
+                blk["proj"] = mg.init_conv(keys[next(ki)], 1, 1, c_prev, w, spec)
+            blocks.append(blk)
+            c_prev = w
+    p["blocks"] = blocks
+    p["head"] = mg.init_dense(keys[next(ki)], c_prev, cfg.n_classes, spec)
+    return p
+
+
+def resnet_apply(p, x, cfg: CNNConfig, spec=None, mode="fp", tau=1.0):
+    stages, _ = _resnet_stages(cfg.name)
+    x = mg.conv2d(p["stem"], x, spec, mode, tau)
+    bi = 0
+    c_prev_w = None
+    for (w, n, s) in stages:
+        for b in range(n):
+            stride = s if b == 0 else 1
+            blk = p["blocks"][bi]
+            h = mg.conv2d(blk["c1"], x, spec, mode, tau, stride=stride)
+            h = mg.conv2d_linear(blk["c2"], h, spec, mode, tau)
+            sc = x
+            if "proj" in blk:
+                sc = mg.conv2d_linear(blk["proj"], x, spec, mode, tau, stride=stride)
+            x = jax.nn.relu(h + sc)
+            x = mg._maybe_quant_act(x, blk["c2"], spec, mode)
+            bi += 1
+    x = jnp.mean(x, axis=(1, 2))
+    return mg.dense(p["head"], x, spec, mode, tau)
+
+
+def resnet_plan(cfg: CNNConfig) -> List[Tuple[str, LayerGeometry, bool]]:
+    stages, stem_w = _resnet_stages(cfg.name)
+    hw = cfg.img_hw
+    plan = [("stem", mg.conv_geometry(3, 3, cfg.in_ch, stem_w, hw), True)]
+    c_prev = stem_w
+    bi = 0
+    for (w, n, s) in stages:
+        for b in range(n):
+            stride = s if b == 0 else 1
+            hw = (hw[0] // stride, hw[1] // stride)
+            plan.append((f"blocks/{bi}/c1", mg.conv_geometry(3, 3, c_prev, w, hw), True))
+            plan.append((f"blocks/{bi}/c2", mg.conv_geometry(3, 3, w, w, hw), True))
+            if stride != 1 or c_prev != w:
+                plan.append((f"blocks/{bi}/proj", mg.conv_geometry(1, 1, c_prev, w, hw), True))
+            c_prev = w
+            bi += 1
+    plan.append(("head", mg.dense_geometry(c_prev, cfg.n_classes), True))
+    return plan
+
+
+# --------------------------------------------------------------------------
+# MobileNetV1 (depthwise separable; depthwise convs NOT searchable on DIANA)
+# --------------------------------------------------------------------------
+
+MBV1_LAYERS = [  # (stride, c_out at 1.0x) for the 13 separable blocks
+    (1, 64), (2, 128), (1, 128), (2, 256), (1, 256), (2, 512),
+    (1, 512), (1, 512), (1, 512), (1, 512), (1, 512), (2, 1024), (1, 1024),
+]
+
+
+def _mb_w(c, mult):  # width multiplier with 8-divisibility like the reference
+    return max(8, int(c * mult))
+
+
+def mbv1_init(key, cfg: CNNConfig, spec: ODiMOSpec | None):
+    keys = jax.random.split(key, 64)
+    ki = iter(range(64))
+    c0 = _mb_w(32, cfg.width_mult)
+    p = {"stem": mg.init_conv(keys[next(ki)], 3, 3, cfg.in_ch, c0, spec)}
+    blocks = []
+    c_prev = c0
+    for (s, c) in MBV1_LAYERS:
+        cw = _mb_w(c, cfg.width_mult)
+        blocks.append({
+            # depthwise: pinned (searchable=False), still quantized 8-bit
+            "dw": mg.init_conv(keys[next(ki)], 3, 3, c_prev, c_prev, spec, groups=c_prev),
+            "pw": mg.init_conv(keys[next(ki)], 1, 1, c_prev, cw, spec),
+        })
+        c_prev = cw
+    p["blocks"] = blocks
+    p["head"] = mg.init_dense(keys[next(ki)], c_prev, cfg.n_classes, spec)
+    return p
+
+
+def mbv1_apply(p, x, cfg: CNNConfig, spec=None, mode="fp", tau=1.0):
+    x = mg.conv2d(p["stem"], x, spec, mode, tau, stride=2)
+    c_prev = _mb_w(32, cfg.width_mult)
+    for blk, (s, c) in zip(p["blocks"], MBV1_LAYERS):
+        x = mg.conv2d(blk["dw"], x, spec, mode, tau, stride=s, groups=c_prev)
+        x = mg.conv2d(blk["pw"], x, spec, mode, tau)
+        c_prev = _mb_w(c, cfg.width_mult)
+    x = jnp.mean(x, axis=(1, 2))
+    return mg.dense(p["head"], x, spec, mode, tau)
+
+
+def mbv1_plan(cfg: CNNConfig) -> List[Tuple[str, LayerGeometry, bool]]:
+    hw = (cfg.img_hw[0] // 2, cfg.img_hw[1] // 2)
+    c0 = _mb_w(32, cfg.width_mult)
+    plan = [("stem", mg.conv_geometry(3, 3, cfg.in_ch, c0, hw), True)]
+    c_prev = c0
+    for i, (s, c) in enumerate(MBV1_LAYERS):
+        hw = (hw[0] // s, hw[1] // s)
+        cw = _mb_w(c, cfg.width_mult)
+        plan.append((f"blocks/{i}/dw",
+                     mg.conv_geometry(3, 3, c_prev, c_prev, hw, groups=c_prev), False))
+        plan.append((f"blocks/{i}/pw", mg.conv_geometry(1, 1, c_prev, cw, hw), True))
+        c_prev = cw
+    plan.append(("head", mg.dense_geometry(c_prev, cfg.n_classes), True))
+    return plan
+
+
+# --------------------------------------------------------------------------
+# Uniform façade
+# --------------------------------------------------------------------------
+
+def get_model(cfg: CNNConfig):
+    if cfg.name.startswith("resnet"):
+        return resnet_init, resnet_apply, resnet_plan
+    if cfg.name.startswith("mobilenet"):
+        return mbv1_init, mbv1_apply, mbv1_plan
+    raise ValueError(cfg.name)
+
+
+def get_by_path(params, path: str):
+    node = params
+    for part in path.split("/"):
+        node = node[int(part)] if isinstance(node, list) else node[part]
+    return node
+
+
+def managed_layer_dicts(params, cfg: CNNConfig):
+    """Param dicts of all managed layers, in plan order."""
+    _, _, plan_fn = get_model(cfg)
+    return [get_by_path(params, name) for (name, _, _) in plan_fn(cfg)]

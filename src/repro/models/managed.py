@@ -1,0 +1,103 @@
+"""ODiMO-managed layer primitives shared by the CNN repro and the LM zoo.
+
+A *managed* layer is a Conv/Dense whose weight passes through the ODiMO
+mixing (search mode), the discretized per-channel quantization (finetune /
+deploy mode), or plain floats (fp32 mode).  Activations are fake-quantized
+at the spec's worst-case bit-width in the quantized modes (paper Sec. III-B).
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import odimo, quant
+from repro.core.cost_models import LayerGeometry
+from repro.core.odimo import ODiMOSpec
+
+Mode = Literal["fp", "search", "finetune"]
+
+
+def init_conv(key, kh, kw, c_in, c_out, spec: ODiMOSpec | None, groups=1):
+    kw_, ko = jax.random.split(key)
+    fan_in = kh * kw * (c_in // groups)
+    w = jax.random.normal(kw_, (kh, kw, c_in // groups, c_out)) * (2.0 / fan_in) ** 0.5
+    p = {"w": w, "b": jnp.zeros(c_out)}
+    if spec is not None:
+        p["odimo"] = odimo.init_layer_state(ko, w, spec)
+        p["act_log_scale"] = jnp.asarray(1.0)
+    return p
+
+
+def init_dense(key, c_in, c_out, spec: ODiMOSpec | None, bias: bool = True,
+               scale: float | None = None):
+    kw_, ko = jax.random.split(key)
+    s = scale if scale is not None else (1.0 / c_in) ** 0.5
+    w = jax.random.normal(kw_, (c_in, c_out)) * s
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros(c_out)
+    if spec is not None:
+        p["odimo"] = odimo.init_layer_state(ko, w, spec)
+        p["act_log_scale"] = jnp.asarray(1.0)
+    return p
+
+
+def _weight(p: dict, spec: ODiMOSpec | None, mode: Mode, tau: float):
+    w = p["w"]
+    if spec is None or mode == "fp" or "odimo" not in p:
+        return w
+    if mode == "search":
+        return odimo.effective_weight(w, p["odimo"], spec, tau)
+    return odimo.discretized_weight(w, p["odimo"], spec)
+
+
+def _maybe_quant_act(x, p, spec: ODiMOSpec | None, mode: Mode):
+    if spec is None or mode == "fp" or "act_log_scale" not in p:
+        return x
+    return quant.fake_quant_act(x, p["act_log_scale"], spec.act_bits)
+
+
+def conv2d(p: dict, x: jax.Array, spec: ODiMOSpec | None = None,
+           mode: Mode = "fp", tau: float = 1.0, stride: int = 1,
+           padding: str = "SAME", groups: int = 1) -> jax.Array:
+    """NHWC conv with HWIO weights; ODiMO-managed when spec is given."""
+    w = _weight(p, spec, mode, tau).astype(x.dtype)
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=groups)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return _maybe_quant_act(jax.nn.relu(y), p, spec, mode)
+
+
+def conv2d_linear(p: dict, x: jax.Array, spec=None, mode: Mode = "fp",
+                  tau: float = 1.0, stride: int = 1, padding="SAME",
+                  groups: int = 1) -> jax.Array:
+    """Conv without activation (residual branches)."""
+    w = _weight(p, spec, mode, tau).astype(x.dtype)
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"), feature_group_count=groups)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def dense(p: dict, x: jax.Array, spec: ODiMOSpec | None = None,
+          mode: Mode = "fp", tau: float = 1.0) -> jax.Array:
+    w = _weight(p, spec, mode, tau).astype(x.dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def conv_geometry(kh, kw, c_in, c_out, out_hw, groups=1) -> LayerGeometry:
+    return LayerGeometry(c_in=c_in, c_out=c_out, fx=kw, fy=kh,
+                         ox=out_hw[1], oy=out_hw[0], groups=groups)
+
+
+def dense_geometry(c_in, c_out) -> LayerGeometry:
+    return LayerGeometry(c_in=c_in, c_out=c_out)

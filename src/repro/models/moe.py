@@ -1,0 +1,119 @@
+"""Mixture-of-Experts: GShard/Mixtral-style grouped dense dispatch.
+
+Tokens are reshaped into G groups (aligned with the data-parallel sharding so
+the group axis shards over `data` and the expert axis over `model`; GSPMD
+then lowers the dispatch/combine einsums into all-to-alls).  Capacity-style
+dropping keeps shapes static.
+
+Supports the two assigned MoE archs:
+  arctic-480b        : 128 experts top-2 + parallel dense residual FFN
+  deepseek-v2-lite   : 64 routed top-6 + 2 shared experts (+ dense layer 0)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                    # per-expert hidden
+    n_shared: int = 0            # always-on shared experts (deepseek)
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    gated: bool = True
+    router_dtype: str = "float32"
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    E, F = cfg.n_experts, cfg.d_ff
+    s_in = d_model ** -0.5
+    s_out = F ** -0.5
+    p = {
+        "router": L.init_dense(ks[0], d_model, E, jnp.float32),
+        "up": (jax.random.normal(ks[1], (E, d_model, F)) * s_in).astype(dtype),
+        "down": (jax.random.normal(ks[2], (E, F, d_model)) * s_out).astype(dtype),
+    }
+    if cfg.gated:
+        p["gate"] = (jax.random.normal(ks[3], (E, d_model, F)) * s_in).astype(dtype)
+    if cfg.n_shared:
+        p["shared"] = L.init_ffn(ks[4], d_model, cfg.n_shared * F,
+                                 gated=cfg.gated, dtype=dtype)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, cfg.top_k)
+
+
+def moe_ffn(p, x, cfg: MoEConfig, n_groups: int | None = None):
+    """x: (B, S, D) -> (B, S, D), plus aux losses dict."""
+    B, S, D = x.shape
+    T = B * S
+    if n_groups is None:
+        # ~4k tokens per group: training/prefill get per-data-shard groups
+        # (all-to-all friendly); decode (T=B) collapses to one group so the
+        # capacity buffers stay proportional to the actual token count
+        # (G=B at decode cost 85x the needed expert compute on arctic;
+        # EXPERIMENTS.md §Perf)
+        n_groups = max(1, min(256, T // 4096))
+    G = n_groups
+    assert T % G == 0, (T, G)
+    Tg = T // G
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(Tg, cfg)
+
+    xt = x.reshape(G, Tg, D)
+    logits = L.dense(p["router"], xt.astype(jnp.float32))      # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, K)                       # (G,Tg,K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(topi[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = {"load_balance": E * jnp.sum(me * ce)}
+
+    # position of each (token, k) inside its expert's capacity buffer
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.int32)          # (G,Tg,K,E)
+    flat = onehot.reshape(G, Tg * K, E)
+    pos = jnp.cumsum(flat, axis=1) - 1                          # (G,Tg*K,E)
+    pos = pos.reshape(G, Tg, K, E)
+    pos = jnp.sum(pos * onehot, axis=-1)                        # (G,Tg,K)
+    keep = pos < C
+
+    # combine (G,Tg,E,C) and dispatch tensors
+    from repro.distributed.sharding import constrain
+    pos_oh = jax.nn.one_hot(pos, C, dtype=x.dtype) * keep[..., None]
+    comb = jnp.einsum("gtke,gtkc->gtec", onehot.astype(x.dtype),
+                      pos_oh * topv[..., None].astype(x.dtype))
+    comb = constrain(comb, "moe_grouped")
+    disp = (comb > 0).astype(x.dtype)
+    disp = constrain(disp, "moe_grouped")
+
+    ein = jnp.einsum("gtec,gtd->gecd", disp, xt)                # (G,E,C,D)
+    ein = constrain(ein, "moe_expert")
+    a = L.act_fn(cfg.act)
+    if cfg.gated:
+        h = a(jnp.einsum("gecd,edf->gecf", ein, p["gate"])) * \
+            jnp.einsum("gecd,edf->gecf", ein, p["up"])
+    else:
+        h = a(jnp.einsum("gecd,edf->gecf", ein, p["up"]))
+    h = constrain(h, "moe_expert")  # (G,E,C,F): without this the expert
+    # hidden replicates on G under ambiguous propagation (125 GiB/dev on
+    # deepseek prefill; EXPERIMENTS.md §Perf notes)
+    eout = jnp.einsum("gecf,efd->gecd", h, p["down"])           # (G,E,C,D)
+    eout = constrain(eout, "moe_expert")
+    y = jnp.einsum("gtec,gecd->gtd", comb, eout).reshape(B, S, D)
+
+    if cfg.n_shared:
+        y = y + L.ffn(p["shared"], x, cfg.act)
+    return y, aux

@@ -1,0 +1,563 @@
+"""Config-driven LM assembly for all 10 assigned architectures.
+
+Layers are organized as ``pattern_repeats`` repeats of the config's block
+``pattern`` and executed with ``jax.lax.scan`` over the repeats (stacked
+params, leading axis R) — this keeps HLO size and compile time bounded for
+40-layer x 8k-wide archs (DESIGN.md §5).  zamba2's two remainder blocks run
+unscanned; its shared transformer block's weights are closure-captured by the
+scan body (shared across repeats), with per-use input norms stacked.
+
+Public API (cfg: ArchConfig is static/hashable):
+  init_lm(key, cfg)                          -> params
+  lm_loss(params, cfg, batch)                -> scalar loss   (training)
+  prefill(params, cfg, tokens, cache, ...)   -> (last_logits, cache)
+  decode_step(params, cfg, token, cache, i)  -> (logits, cache)
+  init_cache(cfg, B, S_max)                  -> cache pytree  (concrete)
+  cache_specs(cfg, B, S_max)                 -> cache pytree  (ShapeDtypeStruct)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+
+# --------------------------------------------------------------- kind specs
+
+def _attn_cfg(cfg: ArchConfig, causal=True, cross=False) -> A.AttnConfig:
+    return A.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+        sliding_window=None if cross else cfg.sliding_window,
+        causal=causal and not cross, rotary=not cross)
+
+
+def _mla_cfg(cfg: ArchConfig) -> A.MLAConfig:
+    m = cfg.mla
+    return A.MLAConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                       kv_lora_rank=m.kv_lora_rank, qk_nope_dim=m.qk_nope_dim,
+                       qk_rope_dim=m.qk_rope_dim, v_head_dim=m.v_head_dim,
+                       rope_theta=cfg.rope_theta)
+
+
+def _mamba_cfg(cfg: ArchConfig) -> S.Mamba2Config:
+    return S.Mamba2Config(d_model=cfg.d_model, d_state=cfg.ssm_state)
+
+
+def _xlstm_cfg(cfg: ArchConfig) -> S.XLSTMConfig:
+    return S.XLSTMConfig(d_model=cfg.d_model, n_heads=cfg.n_heads)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------- block init
+
+def init_block(key, cfg: ArchConfig, kind: str, layer_idx: int = 0):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: dict = {"norm1": L.init_norm(d, dt, cfg.norm)}
+    if kind == "attn":
+        p["attn"] = A.init_attn(ks[0], _attn_cfg(cfg), dt)
+        if cfg.moe is not None and layer_idx >= cfg.moe_first_dense:
+            p["moe"] = M.init_moe(ks[1], d, cfg.moe, dt)
+            if cfg.moe_dense_residual:
+                p["ffn"] = L.init_ffn(ks[2], d, cfg.dense_ff, cfg.gated_ffn, dt)
+                p["norm2"] = L.init_norm(d, dt, cfg.norm)
+        elif cfg.moe is not None:  # first-dense MoE layer
+            p["ffn"] = L.init_ffn(ks[2], d, cfg.dense_ff, cfg.gated_ffn, dt)
+            p["norm2"] = L.init_norm(d, dt, cfg.norm)
+        elif cfg.d_ff:
+            p["ffn"] = L.init_ffn(ks[2], d, cfg.d_ff, cfg.gated_ffn, dt)
+            if not cfg.parallel_block:
+                p["norm2"] = L.init_norm(d, dt, cfg.norm)
+    elif kind == "mla":
+        p["attn"] = A.init_mla(ks[0], _mla_cfg(cfg), dt)
+        if layer_idx < cfg.moe_first_dense:
+            p["ffn"] = L.init_ffn(ks[2], d, cfg.dense_ff, cfg.gated_ffn, dt)
+        else:
+            p["moe"] = M.init_moe(ks[1], d, cfg.moe, dt)
+        p["norm2"] = L.init_norm(d, dt, cfg.norm)
+    elif kind == "cross":
+        p["attn"] = A.init_attn(ks[0], _attn_cfg(cfg, cross=True), dt)
+        p["gate"] = jnp.zeros((), dt)  # llama-vision gated cross-attn
+        p["ffn"] = L.init_ffn(ks[2], d, cfg.d_ff, cfg.gated_ffn, dt)
+        p["norm2"] = L.init_norm(d, dt, cfg.norm)
+    elif kind == "dec":
+        p["attn"] = A.init_attn(ks[0], _attn_cfg(cfg), dt)
+        p["xattn"] = A.init_attn(ks[3], _attn_cfg(cfg, cross=True), dt)
+        p["normx"] = L.init_norm(d, dt, cfg.norm)
+        p["ffn"] = L.init_ffn(ks[2], d, cfg.d_ff, cfg.gated_ffn, dt)
+        p["norm2"] = L.init_norm(d, dt, cfg.norm)
+    elif kind == "mamba":
+        p["mamba"] = S.init_mamba2(ks[0], _mamba_cfg(cfg), dt)
+    elif kind == "mlstm":
+        p["core"] = S.init_mlstm(ks[0], _xlstm_cfg(cfg), dt)
+    elif kind == "slstm":
+        p["core"] = S.init_slstm(ks[0], _xlstm_cfg(cfg), dt)
+    elif kind == "shared_attn":
+        # per-use input norm only; weights live in params["shared"]
+        pass
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_shared_block(key, cfg: ArchConfig):
+    """zamba2 shared transformer block (one copy)."""
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "attn": A.init_attn(ks[0], _attn_cfg(cfg), dt),
+        "ffn": L.init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_ffn, dt),
+        "norm2": L.init_norm(cfg.d_model, dt, cfg.norm),
+    }
+
+
+# --------------------------------------------------------------- block apply
+
+def block_apply(p, x, kind, cfg: ArchConfig, positions, *, cache=None,
+                cache_index=None, cross_kv=None, chunked=False, shared=None):
+    """One block. Returns (x, new_cache, aux_loss)."""
+    aux = 0.0
+    if kind in ("attn", "mla"):
+        h = L.norm(p["norm1"], x, cfg.norm)
+        if kind == "attn":
+            ao, nc = A.gqa(p["attn"], h, positions, _attn_cfg(cfg),
+                           cache=cache, cache_index=cache_index, chunked=chunked)
+        else:
+            ao, nc = A.mla(p["attn"], h, positions, _mla_cfg(cfg),
+                           cache=cache, cache_index=cache_index, chunked=chunked)
+        if cfg.parallel_block and "ffn" in p:
+            x = x + ao + L.ffn(p["ffn"], h, cfg.act)
+        else:
+            x = x + ao
+            if "moe" in p:
+                h2 = L.norm(p.get("norm2", p["norm1"]), x, cfg.norm)
+                mo, ml = M.moe_ffn(p["moe"], h2, cfg.moe)
+                if "ffn" in p:  # arctic dense residual in parallel with MoE
+                    mo = mo + L.ffn(p["ffn"], h2, cfg.act)
+                x = x + mo
+                aux = aux + ml["load_balance"]
+            elif "ffn" in p:
+                x = x + L.ffn(p["ffn"], L.norm(p["norm2"], x, cfg.norm), cfg.act)
+        return x, nc, aux
+    if kind == "cross":
+        h = L.norm(p["norm1"], x, cfg.norm)
+        new_cache = None
+        if cache is not None and cross_kv is not None:      # prefill: store
+            new_cache = {"ck": cross_kv[0].astype(jnp.bfloat16),
+                         "cv": cross_kv[1].astype(jnp.bfloat16)}
+        elif cache is not None:                              # decode: reuse
+            cross_kv = (cache["ck"], cache["cv"])
+            new_cache = cache
+        ao, _ = A.gqa(p["attn"], h, positions, _attn_cfg(cfg, cross=True),
+                      kv_override=cross_kv)
+        x = x + jnp.tanh(p["gate"]) * ao
+        x = x + L.ffn(p["ffn"], L.norm(p["norm2"], x, cfg.norm), cfg.act)
+        return x, new_cache, aux
+    if kind == "dec":
+        h = L.norm(p["norm1"], x, cfg.norm)
+        self_cache = None
+        if cache is not None:
+            self_cache = {"k": cache["k"], "v": cache["v"]}
+        ao, nc = A.gqa(p["attn"], h, positions, _attn_cfg(cfg),
+                       cache=self_cache, cache_index=cache_index,
+                       chunked=chunked)
+        x = x + ao
+        hx = L.norm(p["normx"], x, cfg.norm)
+        if cache is not None and cross_kv is not None:      # prefill: store
+            nc = dict(nc or {}, ck=cross_kv[0].astype(jnp.bfloat16),
+                      cv=cross_kv[1].astype(jnp.bfloat16))
+        elif cache is not None:                              # decode: reuse
+            cross_kv = (cache["ck"], cache["cv"])
+            nc = dict(nc or {}, ck=cache["ck"], cv=cache["cv"])
+        xo, _ = A.gqa(p["xattn"], hx, positions, _attn_cfg(cfg, cross=True),
+                      kv_override=cross_kv)
+        x = x + xo
+        x = x + L.ffn(p["ffn"], L.norm(p["norm2"], x, cfg.norm), cfg.act)
+        return x, nc, aux
+    if kind == "mamba":
+        h = L.norm(p["norm1"], x, cfg.norm)
+        mo, ns = S.mamba2(p["mamba"], h, _mamba_cfg(cfg), state=cache)
+        return x + mo, ns, aux
+    if kind == "mlstm":
+        h = L.norm(p["norm1"], x, cfg.norm)
+        mo, ns = S.mlstm(p["core"], h, _xlstm_cfg(cfg), state=cache)
+        return x + mo, ns, aux
+    if kind == "slstm":
+        h = L.norm(p["norm1"], x, cfg.norm)
+        mo, ns = S.slstm(p["core"], h, _xlstm_cfg(cfg), state=cache)
+        return x + mo, ns, aux
+    if kind == "shared_attn":
+        h = L.norm(p["norm1"], x, cfg.norm)
+        ao, nc = A.gqa(shared["attn"], h, positions, _attn_cfg(cfg),
+                       cache=cache, cache_index=cache_index, chunked=chunked)
+        x = x + ao
+        x = x + L.ffn(shared["ffn"],
+                      L.norm(shared["norm2"], x, cfg.norm), cfg.act)
+        return x, nc, aux
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------- model init
+
+def _zamba_remainder(cfg: ArchConfig) -> int:
+    period = len(cfg.pattern)
+    return cfg.n_layers - (cfg.n_layers // period) * period
+
+
+def init_lm(key, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 16)
+    params: dict = {
+        "emb": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02
+                ).astype(dt),
+        "final_norm": L.init_norm(cfg.d_model, dt, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.init_dense(keys[1], cfg.d_model, cfg.vocab, dt,
+                                      scale=cfg.d_model ** -0.5)
+
+    period = len(cfg.pattern)
+    repeats = cfg.n_layers // period
+    if cfg.moe_first_dense and period == 1:
+        repeats -= 1  # layer 0 lives in params["first_dense"], unscanned
+
+    def init_unit(k):
+        uks = jax.random.split(k, period)
+        return tuple(init_block(uks[i], cfg, cfg.pattern[i], layer_idx=1)
+                     for i in range(period))
+
+    unit_keys = jax.random.split(keys[2], repeats)
+    params["units"] = jax.vmap(init_unit)(unit_keys)
+
+    rem = _zamba_remainder(cfg)
+    if rem:
+        rks = jax.random.split(keys[3], rem)
+        params["rem"] = [init_block(rks[i], cfg, cfg.pattern[i % period])
+                         for i in range(rem)]
+    if "shared_attn" in cfg.pattern:
+        params["shared"] = init_shared_block(keys[4], cfg)
+    if cfg.moe_first_dense:
+        # deepseek: layer 0 replaced by a dense-FFN copy, unscanned
+        params["first_dense"] = init_block(keys[5], cfg, cfg.pattern[0],
+                                           layer_idx=0)
+    if cfg.encoder_layers:
+        enc_keys = jax.random.split(keys[6], cfg.encoder_layers)
+        enc_cfg = dataclasses.replace(cfg, moe=None, parallel_block=False,
+                                      pattern=("attn",))
+        params["enc_units"] = jax.vmap(
+            lambda k: (init_block(k, enc_cfg, "attn"),))(enc_keys)
+        params["enc_norm"] = L.init_norm(cfg.d_model, dt, cfg.norm)
+    return params
+
+
+# ------------------------------------------------------------- cross kv prep
+
+def _frontend_kv(params_attn, cross_source, cfg: ArchConfig):
+    """Project frontend embeddings to (k, v) for cross-attention."""
+    B, T, _ = cross_source.shape
+    KVH, hd = cfg.n_kv_heads, cfg.hd
+    k = L.dense(params_attn["wk"], cross_source).reshape(B, T, KVH, hd)
+    v = L.dense(params_attn["wv"], cross_source).reshape(B, T, KVH, hd)
+    return k, v
+
+
+def encode(params, cfg: ArchConfig, frames):
+    """seamless encoder: frames (B, T, D) -> memory (B, T, D)."""
+    enc_cfg = dataclasses.replace(cfg, moe=None, parallel_block=False)
+    positions = jnp.arange(frames.shape[1])[None, :]
+
+    def body(x, unit):
+        (blk,) = unit
+        h = L.norm(blk["norm1"], x, cfg.norm)
+        acfg = dataclasses.replace(_attn_cfg(enc_cfg), causal=False)
+        ao, _ = A.gqa(blk["attn"], h, positions, acfg)
+        x = x + ao
+        x = x + L.ffn(blk["ffn"], L.norm(blk["norm2"], x, cfg.norm), cfg.act)
+        return x, None
+
+    x, _ = jax.lax.scan(body, frames, params["enc_units"])
+    return L.norm(params["enc_norm"], x, cfg.norm)
+
+
+# --------------------------------------------------------------- full stack
+
+def backbone(params, cfg: ArchConfig, x, positions, *, caches=None,
+             cache_index=None, cross_source=None, chunked=False,
+             remat=False):
+    """Run all layers. caches: None or pytree matching cache_specs.
+    Returns (hidden, new_caches, aux)."""
+    from repro.distributed.sharding import constrain
+    period = len(cfg.pattern)
+    shared = params.get("shared")
+
+    def unit_fn(carry, xs):
+        x, aux = carry
+        unit_params, unit_cache = xs
+        new_cache = []
+        for i, kind in enumerate(cfg.pattern):
+            blk = unit_params[i]
+            c = unit_cache[i] if unit_cache is not None else None
+            ckv = None
+            if kind in ("cross", "dec") and cross_source is not None:
+                att = blk["attn"] if kind == "cross" else blk["xattn"]
+                ckv = _frontend_kv(att, cross_source, cfg)
+            x, nc, a = block_apply(
+                blk, x, kind, cfg, positions, cache=c, cache_index=cache_index,
+                cross_kv=ckv, chunked=chunked, shared=shared)
+            aux = aux + a
+            new_cache.append(nc)
+        x = constrain(x, "act")
+        return (x, aux), tuple(new_cache)
+
+    unit_caches = caches["units"] if caches is not None else None
+    if params.get("first_dense") is not None:
+        fd_cache = caches["first"] if caches is not None else None
+        x, nfc, a0 = block_apply(params["first_dense"], x, cfg.pattern[0], cfg,
+                                 positions, cache=fd_cache,
+                                 cache_index=cache_index, chunked=chunked,
+                                 shared=shared)
+        units = params["units"]  # init_lm already excluded layer 0
+    else:
+        x, nfc, a0 = x, None, 0.0
+        units = params["units"]
+
+    xs = (units, unit_caches)
+    body = jax.checkpoint(unit_fn, prevent_cse=False) if remat else unit_fn
+    (x, aux), new_unit_caches = jax.lax.scan(body, (x, a0), xs)
+
+    new_rem = []
+    if params.get("rem"):
+        rem_caches = caches["rem"] if caches is not None else None
+        for i, blk in enumerate(params["rem"]):
+            kind = cfg.pattern[i % period]
+            c = rem_caches[i] if rem_caches is not None else None
+            x, nc, a = block_apply(blk, x, kind, cfg, positions, cache=c,
+                                   cache_index=cache_index, chunked=chunked,
+                                   shared=shared)
+            aux = aux + a
+            new_rem.append(nc)
+
+    x = L.norm(params["final_norm"], x, cfg.norm)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"units": new_unit_caches}
+        if params.get("rem"):
+            new_caches["rem"] = new_rem
+        if nfc is not None:
+            new_caches["first"] = nfc
+    return x, new_caches, aux
+
+
+def _head_weight(params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return params["emb"].T
+    h = params["head"]
+    if "w_q" in h:  # int8 serve domain
+        return h["w_q"].astype(params["emb"].dtype) * \
+            h["w_s"].astype(params["emb"].dtype)[..., None, :]
+    return h["w"]
+
+
+def chunked_ce(h, w, targets, chunk=512):
+    """Cross-entropy with the vocab projection computed per sequence chunk
+    (rematerialized in backward) — avoids materializing (B,S,V) logits."""
+    B, Sq, D = h.shape
+    chunk = min(chunk, Sq)
+    n = Sq // chunk
+    hc = h[:, :n * chunk].reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    tc = targets[:, :n * chunk].reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(hb, tb):
+        logits = (hb @ w).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(logp, tb[..., None], axis=-1)[..., 0]
+
+    def body(acc, xs):
+        hb, tb = xs
+        return acc + jnp.sum(one(hb, tb)), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc))
+    return tot / (B * n * chunk)
+
+
+def lm_loss(params, cfg: ArchConfig, batch, remat=False):
+    """batch: {"tokens","targets"[, "frontend"]} -> scalar loss."""
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    x = params["emb"][tokens]
+    positions = jnp.arange(Sq)[None, :]
+    cross_source = None
+    if cfg.frontend == "vision":
+        cross_source = batch["frontend"]
+    elif cfg.frontend == "audio":
+        cross_source = encode(params, cfg, batch["frontend"])
+    h, _, aux = backbone(params, cfg, x, positions,
+                         cross_source=cross_source, chunked=Sq > 2048,
+                         remat=remat)
+    loss = chunked_ce(h, _head_weight(params, cfg), batch["targets"])
+    return loss + 0.01 * aux
+
+
+# --------------------------------------------------------------- serving
+
+def _block_cache_spec(cfg: ArchConfig, kind: str, B: int, S_max: int):
+    dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
+    if kind in ("attn", "dec", "shared_attn"):
+        spec = {"k": ((B, S_max, cfg.n_kv_heads, cfg.hd), dt),
+                "v": ((B, S_max, cfg.n_kv_heads, cfg.hd), dt)}
+        if kind == "dec":
+            # encoder memory KV, computed once at prefill (decode reuses)
+            spec["ck"] = ((B, cfg.frontend_tokens, cfg.n_kv_heads, cfg.hd), dt)
+            spec["cv"] = ((B, cfg.frontend_tokens, cfg.n_kv_heads, cfg.hd), dt)
+        return spec
+    if kind == "mla":
+        m = cfg.mla
+        return {"latent": ((B, S_max, m.kv_lora_rank + m.qk_rope_dim), dt)}
+    if kind == "cross":
+        return {"ck": ((B, cfg.frontend_tokens, cfg.n_kv_heads, cfg.hd), dt),
+                "cv": ((B, cfg.frontend_tokens, cfg.n_kv_heads, cfg.hd), dt)}
+    if kind == "mamba":
+        mc = _mamba_cfg(cfg)
+        return {"ssm": ((B, mc.n_heads, mc.head_dim, mc.d_state), jnp.float32),
+                "conv": ((B, mc.conv_kernel - 1, mc.conv_dim), dt)}
+    if kind == "mlstm":
+        xc = _xlstm_cfg(cfg)
+        return {"C": ((B, xc.n_heads, xc.head_dim, xc.head_dim), jnp.float32),
+                "n": ((B, xc.n_heads, xc.head_dim), jnp.float32),
+                "m": ((B, xc.n_heads), jnp.float32),
+                "conv": ((B, xc.conv_kernel - 1, xc.d_inner), dt)}
+    if kind == "slstm":
+        xc = _xlstm_cfg(cfg)
+        z = lambda *s: (s, jnp.float32)
+        return {"c": z(B, xc.n_heads, xc.head_dim),
+                "n": z(B, xc.n_heads, xc.head_dim),
+                "h": z(B, xc.n_heads, xc.head_dim),
+                "m": z(B, xc.n_heads)}
+    raise ValueError(kind)
+
+
+def _materialize(spec, make):
+    if spec is None:
+        return None
+    if isinstance(spec, dict):
+        return {k: _materialize(v, make) for k, v in spec.items()}
+    shape, dt = spec
+    return make(shape, dt)
+
+
+def cache_specs(cfg: ArchConfig, B: int, S_max: int, concrete=False):
+    period = len(cfg.pattern)
+    repeats = cfg.n_layers // period
+    if cfg.moe_first_dense and period == 1:
+        repeats -= 1  # layer 0 cache lives under "first"
+    make = (lambda s, d: jnp.zeros(s, d)) if concrete else \
+        (lambda s, d: jax.ShapeDtypeStruct(s, d))
+
+    def stack(spec):
+        if spec is None:
+            return None
+        if isinstance(spec, dict):
+            return {k: stack(v) for k, v in spec.items()}
+        shape, dt = spec
+        return make((repeats, *shape), dt)
+
+    caches = {"units": tuple(
+        stack(_block_cache_spec(cfg, kind, B, S_max)) for kind in cfg.pattern)}
+    rem = _zamba_remainder(cfg)
+    if rem:
+        caches["rem"] = [
+            _materialize(_block_cache_spec(cfg, cfg.pattern[i % period], B, S_max),
+                         make) for i in range(rem)]
+    if cfg.moe_first_dense:
+        caches["first"] = _materialize(
+            _block_cache_spec(cfg, cfg.pattern[0], B, S_max), make)
+    return caches
+
+
+def init_cache(cfg: ArchConfig, B: int, S_max: int):
+    return cache_specs(cfg, B, S_max, concrete=True)
+
+
+def prefill(params, cfg: ArchConfig, tokens, caches, cross_source=None):
+    """Process the prompt, fill caches, return (last_logits, caches)."""
+    B, Sq = tokens.shape
+    x = params["emb"][tokens]
+    positions = jnp.arange(Sq)[None, :]
+    if cfg.frontend == "audio" and cross_source is not None:
+        cross_source = encode(params, cfg, cross_source)
+    h, caches, _ = backbone(params, cfg, x, positions, caches=caches,
+                            cache_index=0, cross_source=cross_source,
+                            chunked=Sq > 2048)
+    logits = (h[:, -1] @ _head_weight(params, cfg)).astype(jnp.float32)
+    return logits, caches
+
+
+def decode_step(params, cfg: ArchConfig, token, caches, index,
+                cross_source=None):
+    """One decode step. token (B,), index: scalar position of the new token.
+    Cross-attention KV (frontend/encoder memory) is read from the cache
+    written at prefill — cross_source is ignored here."""
+    x = params["emb"][token][:, None, :]
+    positions = jnp.full((x.shape[0], 1), index)
+    h, caches, _ = backbone(params, cfg, x, positions, caches=caches,
+                            cache_index=index, cross_source=None)
+    logits = (h[:, -1] @ _head_weight(params, cfg)).astype(jnp.float32)
+    return logits, caches
+
+
+# ------------------------------------------------- serve-time quantization
+
+def quantize_for_serve(params, cfg: ArchConfig):
+    """Replace projection weights with int8 codes + per-out-channel scales
+    (the TPU int8 precision domain of DESIGN.md §2).  Embedding, norms and
+    small vectors stay bf16.  Works on concrete params or on
+    ShapeDtypeStructs (for the dry-run)."""
+    if cfg.serve_weight_dtype != "int8":
+        return params
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "w" in node and hasattr(node["w"], "ndim") and \
+                    node["w"].ndim >= 2:
+                w = node["w"]
+                rest = {k: walk(v) for k, v in node.items() if k != "w"}
+                # per-out-channel scale; stacked scan params (R, in, out)
+                # keep their leading axes: scale shape = (*lead, out)
+                s_shape = w.shape[:-2] + (w.shape[-1],)
+                if isinstance(w, jax.ShapeDtypeStruct):
+                    rest["w_q"] = jax.ShapeDtypeStruct(w.shape, jnp.int8)
+                    rest["w_s"] = jax.ShapeDtypeStruct(s_shape, jnp.float32)
+                else:
+                    s_ = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32)),
+                                             axis=-2), 1e-8) / 127.0
+                    rest["w_q"] = jnp.clip(
+                        jnp.round(w.astype(jnp.float32) / s_[..., None, :]),
+                        -127, 127).astype(jnp.int8)
+                    rest["w_s"] = s_.astype(jnp.float32)
+                return rest
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        return node
+
+    # keep the embedding (and tied head) in bf16: vocab-gather accuracy
+    out = walk({k: v for k, v in params.items() if k != "emb"})
+    out["emb"] = params["emb"]
+    return out

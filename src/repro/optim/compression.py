@@ -1,0 +1,65 @@
+"""int8 gradient compression with error feedback (distributed-optimization
+trick for the cross-pod all-reduce; DESIGN.md §5).
+
+The pod axis crosses the slow DCN boundary: compressing gradients 4x (f32 ->
+int8 + per-leaf scale) cuts that collective's bytes 4x.  Error feedback
+(Seide et al.; Karimireddy et al. 2019) accumulates the quantization residual
+locally so the compressed SGD converges like the uncompressed one.
+
+Usage in the train step (pure-jax, works under pjit):
+    comp, new_residual = compress_with_feedback(grads, residual)
+    grads = decompress(comp)        # after the (cheap) all-reduce
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Q8(NamedTuple):
+    """Compressed leaf: int8 codes + f32 scale (a pytree leaf marker —
+    plain tuples would collide with tuple-structured params)."""
+    codes: jax.Array
+    scale: jax.Array
+
+
+def _quant_leaf(g, r):
+    g = g.astype(jnp.float32) + r
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    err = g - q.astype(jnp.float32) * scale
+    return Q8(q, scale), err
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads, residual):
+    """-> (compressed tree of (int8 codes, scale), new residual tree)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    qs, errs = [], []
+    for g, r in zip(flat_g, flat_r):
+        q8, e = _quant_leaf(g, r)
+        qs.append(q8)
+        errs.append(e)
+    return (jax.tree_util.tree_unflatten(treedef, qs),
+            jax.tree_util.tree_unflatten(treedef, errs))
+
+
+def decompress(compressed):
+    def one(leaf):
+        return leaf.codes.astype(jnp.float32) * leaf.scale
+    return jax.tree_util.tree_map(one, compressed,
+                                  is_leaf=lambda x: isinstance(x, Q8))
+
+
+def compressed_bytes(compressed) -> int:
+    tot = 0
+    for leaf in jax.tree_util.tree_leaves(
+            compressed, is_leaf=lambda x: isinstance(x, Q8)):
+        tot += leaf.codes.size + 4
+    return tot

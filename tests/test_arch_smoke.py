@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests: REDUCED configs, one forward + train-grad +
+prefill/decode step on CPU, asserting output shapes and no NaNs.
+
+The FULL configs are exercised only via the dry-run (launch/dryrun.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.models import transformer as T
+
+ARCHS = [
+    "command-r-35b", "nemotron-4-15b", "yi-9b", "h2o-danube-3-4b",
+    "llama-3.2-vision-11b", "seamless-m4t-large-v2", "xlstm-1.3b",
+    "arctic-480b", "deepseek-v2-lite-16b", "zamba2-1.2b",
+]
+
+B, S = 2, 16
+
+
+def _batch(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab),
+        "targets": jax.random.randint(k2, (B, S), 0, cfg.vocab),
+    }
+    if cfg.frontend:
+        batch["frontend"] = jax.random.normal(
+            k3, (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def rcfgs():
+    base.load_all()
+    return {n: base.reduce_for_smoke(base.get(n)) for n in ARCHS}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_grad(arch, rcfgs):
+    cfg = rcfgs[arch]
+    key = jax.random.PRNGKey(0)
+    params = T.init_lm(key, cfg)
+    batch = _batch(cfg, key)
+    loss, grads = jax.value_and_grad(
+        lambda p: T.lm_loss(p, cfg, batch))(params)
+    assert np.isfinite(float(loss)), (arch, float(loss))
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gn)) and float(gn) > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode(arch, rcfgs):
+    cfg = rcfgs[arch]
+    key = jax.random.PRNGKey(1)
+    params = T.init_lm(key, cfg)
+    batch = _batch(cfg, key)
+    S_max = S + 4
+    caches = T.init_cache(cfg, B, S_max)
+    cross = batch.get("frontend")
+    logits, caches = T.prefill(params, cfg, batch["tokens"], caches,
+                               cross_source=cross)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all(), arch
+    tok = jnp.argmax(logits, -1)
+    for i in range(2):
+        logits, caches = T.decode_step(params, cfg, tok, caches, S + i)
+        assert logits.shape == (B, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all(), (arch, i)
+        tok = jnp.argmax(logits, -1)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill_continuation(arch, rcfgs):
+    """Decoding token S given a prefill of S tokens must equal prefilling
+    S+1 tokens (cache correctness)."""
+    cfg = rcfgs[arch]
+    if cfg.name == "xlstm-1.3b":
+        pytest.skip("xLSTM denominator clamp differs at exact boundary; "
+                    "covered by dedicated test in test_ssm.py")
+    if cfg.moe is not None:
+        # capacity dropping differs between batched prefill and single-token
+        # decode (MoE semantics, not a bug); raise capacity so nothing drops
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    key = jax.random.PRNGKey(2)
+    params = T.init_lm(key, cfg)
+    k1, k3 = jax.random.split(key)
+    toks = jax.random.randint(k1, (B, S + 1), 0, cfg.vocab)
+    cross = None
+    if cfg.frontend:
+        cross = jax.random.normal(
+            k3, (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+
+    c1 = T.init_cache(cfg, B, S + 1)
+    ref, _ = T.prefill(params, cfg, toks, c1, cross_source=cross)
+
+    c2 = T.init_cache(cfg, B, S + 1)
+    _, c2 = T.prefill(params, cfg, toks[:, :S], c2, cross_source=cross)
+    got, _ = T.decode_step(params, cfg, toks[:, S], c2, S)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               atol=0.65, rtol=0.1)

@@ -1,0 +1,135 @@
+"""Attention invariants: chunked flash == full attention, SWA masking,
+GQA grouping, MLA absorbed decode == naive decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+
+
+def _qkv(key, B, Sq, Sk, KVH, G, hd, vd=None):
+    vd = vd or hd
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, KVH, G, hd))
+    k = jax.random.normal(ks[1], (B, Sk, KVH, hd))
+    v = jax.random.normal(ks[2], (B, Sk, KVH, vd))
+    return q, k, v
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       S=st.sampled_from([64, 128, 256]),
+       qc=st.sampled_from([32, 64]),
+       kc=st.sampled_from([32, 128]),
+       G=st.sampled_from([1, 4]))
+def test_chunked_equals_full_causal(seed, S, qc, kc, G):
+    q, k, v = _qkv(jax.random.PRNGKey(seed), 2, S, S, 2, G, 16)
+    full = A.full_attention(q, k, v, causal=True)
+    chunk = A.chunked_attention(q, k, v, causal=True, q_chunk=qc, k_chunk=kc)
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_equals_full_sliding_window():
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 128, 128, 2, 2, 16)
+    full = A.full_attention(q, k, v, causal=True, window=32)
+    chunk = A.chunked_attention(q, k, v, causal=True, window=32,
+                                q_chunk=32, k_chunk=32)
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_masks_old_tokens():
+    """A token far outside the window must not influence the output."""
+    key = jax.random.PRNGKey(1)
+    q, k, v = _qkv(key, 1, 64, 64, 1, 1, 8)
+    out1 = A.full_attention(q, k, v, causal=True, window=8)
+    k2 = k.at[:, 0].set(100.0)  # poison a token outside every window >8
+    v2 = v.at[:, 0].set(-100.0)
+    out2 = A.full_attention(q, k2, v2, causal=True, window=8)
+    np.testing.assert_allclose(np.asarray(out1[:, 16:]),
+                               np.asarray(out2[:, 16:]), atol=1e-5)
+
+
+def test_gqa_grouping_matches_repeated_kv():
+    """Grouped einsum == expanding KV heads G times."""
+    B, S, KVH, G, hd = 1, 32, 2, 3, 8
+    q, k, v = _qkv(jax.random.PRNGKey(2), B, S, S, KVH, G, hd)
+    grouped = A.full_attention(q, k, v, causal=True)
+    # expand kv: (B,S,KVH,hd) -> (B,S,KVH*G,hd); q -> (B,S,KVH*G,1,hd)
+    kx = jnp.repeat(k, G, axis=2)
+    vx = jnp.repeat(v, G, axis=2)
+    qx = q.reshape(B, S, KVH * G, 1, hd)
+    expanded = A.full_attention(qx, kx, vx, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(grouped.reshape(B, S, KVH * G, hd)),
+        np.asarray(expanded.reshape(B, S, KVH * G, hd)), rtol=1e-4, atol=1e-5)
+
+
+def test_mla_absorbed_decode_equals_naive():
+    """The absorbed decode path must equal the naive (expand-KV) path."""
+    cfg = A.MLAConfig(d_model=32, n_heads=2, kv_lora_rank=16, qk_nope_dim=8,
+                      qk_rope_dim=4, v_head_dim=8)
+    key = jax.random.PRNGKey(3)
+    p = A.init_mla(key, cfg, jnp.float32)
+    B, S = 2, 9
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S + 1, 32))
+    S_max = S + 1
+
+    def run(use_absorbed):
+        cache = {"latent": jnp.zeros(
+            (B, S_max, cfg.kv_lora_rank + cfg.qk_rope_dim), jnp.float32)}
+        pos = jnp.arange(S)[None, :]
+        _, cache = A.mla(p, x[:, :S], pos, cfg, cache=cache, cache_index=0)
+        if use_absorbed:
+            out, _ = A.mla(p, x[:, S:], jnp.full((B, 1), S), cfg,
+                           cache=cache, cache_index=S)
+            return out
+        # naive: process all S+1 tokens with cache (S+1 > 1 -> naive path)
+        cache2 = {"latent": jnp.zeros(
+            (B, S_max, cfg.kv_lora_rank + cfg.qk_rope_dim), jnp.float32)}
+        out, _ = A.mla(p, x, jnp.arange(S + 1)[None, :], cfg,
+                       cache=cache2, cache_index=0)
+        return out[:, -1:]
+
+    np.testing.assert_allclose(np.asarray(run(True)), np.asarray(run(False)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rope_rotation_preserves_norm():
+    from repro.models import layers as L
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 4, 32))
+    pos = jnp.arange(16)[None, :]
+    xr = L.rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(xr, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-4)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    from repro.models import layers as L
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 16))
+
+    def dot_at(i, j):
+        qr = L.rope(q, jnp.asarray([[i]]))
+        kr = L.rope(k, jnp.asarray([[j]]))
+        return float(jnp.sum(qr * kr))
+
+    assert abs(dot_at(5, 3) - dot_at(9, 7)) < 1e-3
+    assert abs(dot_at(0, 0) - dot_at(11, 11)) < 1e-3
+
+
+def test_chunked_kv_len_masks_padded_cache():
+    """Prefill against a larger cache: padded KV slots must be ignored."""
+    q, k, v = _qkv(jax.random.PRNGKey(4), 1, 64, 128, 2, 2, 16)
+    # only first 64 kv entries valid
+    full = A.full_attention(q, k[:, :64], v[:, :64], causal=True)
+    chunk = A.chunked_attention(q, k, v, causal=True, q_chunk=32, k_chunk=32,
+                                kv_len=64)
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)

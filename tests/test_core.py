@@ -1,0 +1,243 @@
+"""Unit + property tests for the ODiMO core (quant, mixing, costs, reorg)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ODiMOSpec, DianaCostModel, AbstractCostModel, TPUCostModel, LayerGeometry,
+    fake_quant, fake_quant_act, smooth_max, latency_loss, energy_loss,
+    exact_latency, exact_energy, baselines,
+)
+from repro.core import odimo, quant, discretize, losses
+
+
+# ----------------------------------------------------------- quantization
+@settings(max_examples=25, deadline=None)
+@given(n_bits=st.sampled_from([2, 3, 4, 8]),
+       seed=st.integers(0, 2**16))
+def test_fake_quant_levels(n_bits, seed):
+    """Fake-quantized values lie on the symmetric grid and within scale."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (9, 13))
+    ls = quant.init_log_scale(w)
+    wq = np.asarray(fake_quant(w, ls, n_bits))
+    scale = float(jnp.exp(ls))
+    lv = quant.qlevels(n_bits)
+    grid = np.round(wq / scale * lv)
+    np.testing.assert_allclose(grid, wq / scale * lv, atol=1e-4)
+    assert np.abs(wq).max() <= scale * (1 + 1e-6)
+
+
+def test_ternary_is_three_valued():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    ls = quant.init_log_scale(w)
+    wq = np.asarray(fake_quant(w, ls, 2)) / float(jnp.exp(ls))
+    assert set(np.round(np.unique(wq), 5)) <= {-1.0, 0.0, 1.0}
+
+
+def test_fake_quant_8bit_small_error():
+    w = jax.random.normal(jax.random.PRNGKey(1), (128,))
+    ls = quant.init_log_scale(w)
+    err = jnp.max(jnp.abs(fake_quant(w, ls, 8) - w))
+    assert float(err) <= float(jnp.exp(ls)) / quant.qlevels(8)
+
+
+def test_int_roundtrip_matches_fake_quant():
+    w = jax.random.normal(jax.random.PRNGKey(2), (32, 16))
+    ls = quant.init_log_scale(w)
+    deq = quant.dequantize_int(quant.quantize_int(w, ls, 8), ls, 8)
+    np.testing.assert_allclose(np.asarray(deq),
+                               np.asarray(fake_quant(w, ls, 8)), atol=1e-6)
+
+
+def test_ste_gradient_flows():
+    w = jax.random.normal(jax.random.PRNGKey(3), (8, 8))
+    ls = quant.init_log_scale(w)
+    g = jax.grad(lambda w: jnp.sum(fake_quant(w, ls, 8) ** 2))(w)
+    assert float(jnp.linalg.norm(g)) > 0
+
+
+# ----------------------------------------------------------- ODiMO mixing
+def test_effective_weight_convex_combination():
+    spec = ODiMOSpec()
+    w = jax.random.normal(jax.random.PRNGKey(0), (16, 24))
+    st_ = odimo.init_layer_state(jax.random.PRNGKey(1), w, spec)
+    we = odimo.effective_weight(w, st_, spec, tau=1.0)
+    wq = [fake_quant(w, st_["log_scales"][i], d.weight_bits)
+          for i, d in enumerate(spec.domains)]
+    lo = jnp.minimum(*wq) - 1e-6
+    hi = jnp.maximum(*wq) + 1e-6
+    assert bool(jnp.all((we >= lo) & (we <= hi)))
+
+
+def test_low_tau_recovers_argmax_domain():
+    spec = ODiMOSpec()
+    w = jax.random.normal(jax.random.PRNGKey(0), (16, 24))
+    st_ = odimo.init_layer_state(jax.random.PRNGKey(1), w, spec)
+    st_["alpha"] = jnp.asarray(np.random.default_rng(0).normal(size=(2, 24)) * 3)
+    we = odimo.effective_weight(w, st_, spec, tau=1e-4)
+    wd = odimo.discretized_weight(w, st_, spec)
+    np.testing.assert_allclose(np.asarray(we), np.asarray(wd), atol=1e-4)
+
+
+def test_expected_counts_sum_to_cout():
+    spec = ODiMOSpec()
+    w = jax.random.normal(jax.random.PRNGKey(0), (4, 37))
+    st_ = odimo.init_layer_state(jax.random.PRNGKey(1), w, spec)
+    ec = odimo.expected_counts(st_, tau=0.7)
+    assert abs(float(jnp.sum(ec)) - 37) < 1e-4
+
+
+def test_tau_schedule_endpoints():
+    spec = ODiMOSpec(init_tau=2.0, final_tau=0.1)
+    assert abs(float(odimo.tau_schedule(0, 100, spec)) - 2.0) < 1e-5
+    assert abs(float(odimo.tau_schedule(100, 100, spec)) - 0.1) < 1e-5
+
+
+# ----------------------------------------------------------- cost models
+def test_smooth_max_bounds():
+    x = jnp.asarray([1.0, 5.0, 3.0])
+    sm = float(smooth_max(x, beta=0.01))
+    assert 5.0 <= sm <= 5.0 + 0.01 * np.log(3) + 1e-6
+
+
+def test_diana_latency_monotone_in_channels():
+    cm = DianaCostModel()
+    g = LayerGeometry(c_in=64, c_out=128, fx=3, fy=3, ox=16, oy=16)
+    lat_small = cm.latency(g, jnp.asarray([16.0, 16.0]))
+    lat_big = cm.latency(g, jnp.asarray([128.0, 128.0]))
+    assert np.all(np.asarray(lat_big) >= np.asarray(lat_small))
+
+
+def test_diana_zero_channels_zero_latency():
+    cm = DianaCostModel()
+    g = LayerGeometry(c_in=64, c_out=128, fx=3, fy=3, ox=16, oy=16)
+    lat = np.asarray(cm.latency(g, jnp.asarray([0.0, 128.0])))
+    assert lat[0] == 0.0 and lat[1] > 0
+
+
+def test_abstract_model_energy_equals_latency_objective():
+    """Fig. 5 corner case: P_idle = P_act makes Eq.4 == Eq.3 * const."""
+    cm = AbstractCostModel(ideal_shutdown=False)
+    g = [LayerGeometry(c_in=32, c_out=64, fx=3, fy=3, ox=8, oy=8)]
+    for counts in ([64, 0], [32, 32], [0, 64], [10, 54]):
+        lat = np.asarray(cm.latency(g[0], jnp.asarray(counts, jnp.float32)))
+        m = lat.max()
+        en = float(exact_energy(cm, g, [counts]))
+        # Eq.4 with P_idle=P_act: sum_i P_i * M  (independent of split!)
+        assert abs(en - float(np.sum(np.asarray(cm.p_act())) * m)) < 1e-3
+
+
+def test_tpu_cost_model_int8_faster_when_compute_bound():
+    cm = TPUCostModel()
+    g = LayerGeometry(c_in=4096, c_out=4096, ox=512, oy=1)  # high intensity
+    lat = np.asarray(cm.latency(g, jnp.asarray([2048.0, 2048.0])))
+    assert lat[0] < lat[1]  # int8 domain faster at equal channels
+
+
+def test_ste_ceil_forward_exact():
+    from repro.core.cost_models import ste_ceil
+    x = jnp.asarray([0.1, 1.0, 1.5, 2.999])
+    np.testing.assert_allclose(np.asarray(ste_ceil(x)), [1, 1, 2, 3])
+    g = jax.grad(lambda x: jnp.sum(ste_ceil(x)))(x)
+    np.testing.assert_allclose(np.asarray(g), 1.0)
+
+
+# ----------------------------------------------------------- baselines
+def _geoms():
+    return [LayerGeometry(c_in=16, c_out=32, fx=3, fy=3, ox=16, oy=16),
+            LayerGeometry(c_in=32, c_out=64, fx=3, fy=3, ox=8, oy=8),
+            LayerGeometry(c_in=64, c_out=10)]
+
+
+def test_baseline_shapes_and_values():
+    gs = _geoms()
+    for fn, dom in [(baselines.all_8bit, 0), (baselines.all_ternary, 1)]:
+        a = fn(gs)
+        assert all((x == dom).all() for x in a)
+    io = baselines.io8_backbone_ternary(gs)
+    assert (io[0] == 0).all() and (io[-1] == 0).all() and (io[1] == 1).all()
+
+
+def test_min_cost_beats_or_ties_trivial_mappings():
+    cm = DianaCostModel()
+    gs = _geoms()
+    mc = baselines.min_cost(cm, gs, "latency")
+    def lat_of(assigns):
+        counts = baselines.counts_from_assignments(assigns, 2)
+        return float(exact_latency(cm, gs, counts))
+    assert lat_of(mc) <= lat_of(baselines.all_8bit(gs)) + 1e-6
+    assert lat_of(mc) <= lat_of(baselines.all_ternary(gs)) + 1e-6
+
+
+def test_min_cost_respects_pinned_layers():
+    cm = DianaCostModel()
+    gs = _geoms()
+    mc = baselines.min_cost(cm, gs, "latency", searchable=[False, True, True])
+    assert (mc[0] == 0).all()
+
+
+# ----------------------------------------------------------- reorg pass
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), c1=st.integers(4, 24), c2=st.integers(4, 24))
+def test_reorg_preserves_mlp_function(seed, c1, c2):
+    """Fig. 3 pass: permuting out+next-in channels preserves the network."""
+    rng = np.random.default_rng(seed)
+    w1 = jnp.asarray(rng.normal(size=(8, c1)))
+    b1 = jnp.asarray(rng.normal(size=(c1,)))
+    w2 = jnp.asarray(rng.normal(size=(c1, c2)))
+    b2 = jnp.asarray(rng.normal(size=(c2,)))
+    w3 = jnp.asarray(rng.normal(size=(c2, 5)))
+    a1 = rng.integers(0, 2, size=c1)
+    a2 = rng.integers(0, 2, size=c2)
+    layers = [
+        discretize.ReorgLayer(w=w1, b=b1, assign=a1, in_axis=0),
+        discretize.ReorgLayer(w=w2, b=b2, assign=a2, in_axis=0),
+        discretize.ReorgLayer(w=w3, b=None, assign=np.zeros(5, np.int64), in_axis=0),
+    ]
+    x = jnp.asarray(rng.normal(size=(3, 8)))
+
+    def fwd(ls):
+        h = jax.nn.relu(x @ ls[0].w + ls[0].b)
+        h = jax.nn.relu(h @ ls[1].w + ls[1].b)
+        return h @ ls[2].w
+
+    y_ref = fwd(layers)
+    new_layers, bounds = discretize.reorg_chain(layers, n_domains=2)
+    y_new = fwd(new_layers)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_new), atol=1e-5)
+    # channels grouped contiguously per domain
+    for nl in new_layers[:-1]:
+        assert (np.diff(nl.assign) >= 0).all()
+
+
+def test_reorg_conv_chain_preserves_function():
+    rng = np.random.default_rng(0)
+    w1 = jnp.asarray(rng.normal(size=(3, 3, 3, 12)) * 0.2)
+    w2 = jnp.asarray(rng.normal(size=(3, 3, 12, 8)) * 0.2)
+    a1 = rng.integers(0, 2, size=12)
+    layers = [
+        discretize.ReorgLayer(w=w1, b=jnp.zeros(12), assign=a1, in_axis=2),
+        discretize.ReorgLayer(w=w2, b=jnp.zeros(8),
+                              assign=np.zeros(8, np.int64), in_axis=2),
+    ]
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 3)))
+
+    def fwd(ls):
+        h = jax.lax.conv_general_dilated(x, ls[0].w, (1, 1), "SAME",
+                                         dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.relu(h + ls[0].b)
+        h = jax.lax.conv_general_dilated(h, ls[1].w, (1, 1), "SAME",
+                                         dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return h + ls[1].b
+
+    y_ref = fwd(layers)
+    new_layers, _ = discretize.reorg_chain(layers, n_domains=2)
+    y_new = fwd(new_layers)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_new), atol=1e-5)
+
+
+def test_sublayer_slices():
+    sl = discretize.sublayer_slices([3, 10])
+    assert sl == [(0, 3), (3, 10)]

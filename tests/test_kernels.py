@@ -1,0 +1,140 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle,
+sweeping shapes and dtypes (hypothesis for the matmuls)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quant_matmul import quant_matmul
+from repro.kernels.split_precision import split_precision_matmul
+from repro.kernels.ternary_matmul import ternary_matmul
+
+
+def _rand_int8(key, shape, lo=-127, hi=128):
+    return jax.random.randint(key, shape, lo, hi, dtype=jnp.int8)
+
+
+# ------------------------------------------------------------ quant_matmul
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (128, 512, 128, 128, 128, 512),
+    (256, 1024, 256, 128, 128, 512),
+    (8, 512, 128, 8, 128, 512),
+    (128, 512, 384, 128, 128, 256),
+])
+def test_quant_matmul_blocks(m, k, n, bm, bn, bk):
+    key = jax.random.PRNGKey(m + k + n)
+    xq = _rand_int8(key, (m, k))
+    wq = _rand_int8(jax.random.fold_in(key, 1), (k, n))
+    sx = jnp.asarray(0.013, jnp.float32)
+    sw = jax.random.uniform(jax.random.fold_in(key, 2), (n,), jnp.float32)
+    out = quant_matmul(xq, wq, sx, sw, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.quant_matmul_ref(xq, wq, sx, sw)),
+                               rtol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.sampled_from([16, 100, 128]), k=st.sampled_from([96, 512]),
+       n=st.sampled_from([130, 256]), seed=st.integers(0, 100))
+def test_quant_matmul_op_padding(m, k, n, seed):
+    """ops.py wrapper handles non-block-aligned shapes via padding."""
+    key = jax.random.PRNGKey(seed)
+    xq = _rand_int8(key, (m, k))
+    wq = _rand_int8(jax.random.fold_in(key, 1), (k, n))
+    sx = jnp.asarray(0.07, jnp.float32)
+    sw = jax.random.uniform(jax.random.fold_in(key, 2), (n,), jnp.float32)
+    out = ops.quant_matmul_op(xq, wq, sx, sw, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.quant_matmul_ref(xq, wq, sx, sw)),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------- ternary_matmul
+def test_ternary_matmul():
+    key = jax.random.PRNGKey(0)
+    m, k, n = 128, 512, 256
+    xq = _rand_int8(key, (m, k))
+    wt = _rand_int8(jax.random.fold_in(key, 1), (k, n), -1, 2)
+    sx = jnp.asarray(0.02, jnp.float32)
+    sw = jnp.full((n,), 0.5, jnp.float32)
+    out = ternary_matmul(xq, wt, sx, sw, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.ternary_matmul_ref(xq, wt, sx, sw)),
+        rtol=1e-6)
+    assert set(np.unique(np.asarray(wt))) <= {-1, 0, 1}
+
+
+# --------------------------------------------------------- split precision
+@pytest.mark.parametrize("boundary_frac", [0.0, 0.25, 0.5, 1.0])
+def test_split_precision_matmul(boundary_frac):
+    key = jax.random.PRNGKey(3)
+    m, k, n = 128, 512, 512
+    bn = 128
+    boundary = int(n * boundary_frac) // bn * bn
+    x = jax.random.normal(key, (m, k), jnp.bfloat16)
+    xq = _rand_int8(jax.random.fold_in(key, 1), (m, k))
+    wb = jax.random.normal(jax.random.fold_in(key, 2), (k, n), jnp.bfloat16)
+    wq = _rand_int8(jax.random.fold_in(key, 3), (k, n))
+    sx = jnp.asarray(0.01, jnp.float32)
+    sw = jax.random.uniform(jax.random.fold_in(key, 4), (n,), jnp.float32)
+    out = split_precision_matmul(x, xq, sx, wb, wq, sw, boundary,
+                                 interpret=True)
+    expect = ref.split_precision_matmul_ref(x, xq, sx, wb, wq, sw, boundary)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_odimo_deployed_dense_matches_fake_quant():
+    """Deployment path == search-time discretized fake-quant semantics."""
+    from repro.core import quant
+    key = jax.random.PRNGKey(7)
+    m, k, n = 64, 256, 256
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.1
+    assign = np.asarray(jax.random.bernoulli(
+        jax.random.fold_in(key, 2), 0.5, (n,)).astype(np.int64))
+    wls = quant.init_log_scale(w)
+    xls = quant.init_log_scale(x)
+    out = ops.odimo_deployed_dense(x, w, assign, wls, xls, interpret=True)
+    # oracle: int8-domain columns use fake-quant x and w; bf16 columns plain
+    xq = quant.fake_quant(x, xls, 8)
+    wq8 = quant.fake_quant(w, wls, 8)
+    lo = (xq @ wq8)
+    hi = (x.astype(jnp.bfloat16) @ w.astype(jnp.bfloat16)).astype(jnp.float32)
+    expect = jnp.where(jnp.asarray(assign)[None, :] == 0, lo, hi)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=0.05, atol=0.12)
+
+
+# --------------------------------------------------------- flash attention
+@pytest.mark.parametrize("B,H,KVH,Sq,Sk,D,causal", [
+    (1, 4, 4, 256, 256, 64, True),
+    (2, 8, 2, 256, 512, 64, True),     # GQA G=4
+    (1, 4, 1, 512, 512, 128, True),    # MQA
+    (1, 2, 2, 256, 256, 64, False),
+])
+def test_flash_attention(B, H, KVH, Sq, Sk, D, causal):
+    key = jax.random.PRNGKey(B * H + Sq)
+    q = jax.random.normal(key, (B, H, Sq, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, KVH, Sk, D), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, KVH, Sk, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, bq=128, bk=128,
+                          interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_dtype_bf16():
+    key = jax.random.PRNGKey(11)
+    q = jax.random.normal(key, (1, 4, 256, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 4, 256, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 4, 256, 64), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, bq=128, bk=128, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=3e-2, atol=3e-2)

@@ -1,0 +1,38 @@
+"""2-bit-packed ternary kernel: pack/unpack roundtrip + allclose vs the
+unpacked ternary oracle across shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ternary_packed import (pack_ternary, ternary_packed_matmul,
+                                          unpack_ternary)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), k=st.sampled_from([16, 64, 256]),
+       n=st.sampled_from([8, 128]))
+def test_pack_unpack_roundtrip(seed, k, n):
+    wt = jax.random.randint(jax.random.PRNGKey(seed), (k, n), -1, 2, jnp.int8)
+    np.testing.assert_array_equal(np.asarray(unpack_ternary(pack_ternary(wt))),
+                                  np.asarray(wt))
+
+
+def test_packed_is_4x_smaller():
+    wt = jnp.zeros((512, 128), jnp.int8)
+    assert pack_ternary(wt).size == wt.size // 4
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 512, 128), (128, 1024, 256)])
+def test_packed_matmul_matches_oracle(m, k, n):
+    key = jax.random.PRNGKey(m + k)
+    xq = jax.random.randint(key, (m, k), -127, 128, jnp.int8)
+    wt = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -1, 2,
+                            jnp.int8)
+    sx = jnp.asarray(0.05, jnp.float32)
+    sw = jax.random.uniform(jax.random.fold_in(key, 2), (n,), jnp.float32)
+    out = ternary_packed_matmul(xq, pack_ternary(wt), sx, sw, interpret=True)
+    expect = ref.ternary_matmul_ref(xq, wt, sx, sw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-6)

@@ -1,0 +1,49 @@
+"""Domain->submesh planning: exact channel tiling, device conservation,
+latency-balanced sizing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as P
+from repro.core.cost_models import LayerGeometry, TPUCostModel
+
+
+@settings(max_examples=20, deadline=None)
+@given(c0=st.integers(0, 512), tp=st.sampled_from([4, 8, 16]),
+       c_out=st.sampled_from([256, 512, 1024]))
+def test_plan_layer_invariants(c0, tp, c_out):
+    c0 = min(c0, c_out)
+    counts = [c0, c_out - c0]
+    geom = LayerGeometry(c_in=512, c_out=c_out, ox=64)
+    plan = P.plan_layer(TPUCostModel(), geom, counts, tp)
+    plan.check(tp)  # tiling + device conservation
+    for s, c in zip(plan.shards, counts):
+        assert s.col_end - s.col_start == c
+        if c > 0:
+            assert s.devices >= 1
+
+
+def test_balanced_split_gets_more_devices_for_slower_domain():
+    """bf16 domain (half peak) should get ~2x the devices of int8 at equal
+    channel counts — finishing times equalize."""
+    geom = LayerGeometry(c_in=4096, c_out=4096, ox=4096)
+    devs = P.size_subgroups(TPUCostModel(), geom, [2048, 2048], 12)
+    assert devs[1] > devs[0]          # bf16 slower per chip -> more chips
+    assert sum(devs) == 12
+
+
+def test_all_one_domain():
+    geom = LayerGeometry(c_in=64, c_out=128)
+    plan = P.plan_layer(TPUCostModel(), geom, [128, 0], 8)
+    assert plan.shards[0].devices == 8
+    assert plan.shards[1].devices == 0
+
+
+def test_plan_network_runs_over_odimo_counts():
+    geoms = [LayerGeometry(c_in=64, c_out=128, ox=32),
+             LayerGeometry(c_in=128, c_out=256, ox=16)]
+    counts = [[100, 28], [0, 256]]
+    plans = P.plan_network(TPUCostModel(), geoms, counts, 16)
+    assert len(plans) == 2
+    for p in plans:
+        p.check(16)

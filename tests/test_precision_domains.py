@@ -1,0 +1,75 @@
+"""Serve-time precision domains (the ODiMO technique applied to the LM
+serving path): int8 KV cache and int8 projection weights must preserve
+decode outputs within quantization tolerance."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.models import transformer as T
+
+ARCHS = ["yi-9b", "deepseek-v2-lite-16b", "seamless-m4t-large-v2"]
+B, S = 2, 12
+
+
+def _setup(arch, **over):
+    base.load_all()
+    cfg = base.reduce_for_smoke(base.get(arch))
+    cfg = dataclasses.replace(cfg, **over)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0, cfg.vocab)
+    cross = None
+    if cfg.frontend:
+        cross = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.frontend_tokens, cfg.d_model),
+            jnp.bfloat16)
+    return cfg, params, toks, cross
+
+
+def _decode_logits(cfg, params, toks, cross):
+    caches = T.init_cache(cfg, B, S + 1)
+    _, caches = T.prefill(params, cfg, toks[:, :S], caches, cross_source=cross)
+    logits, _ = T.decode_step(params, cfg, toks[:, S], caches, S)
+    return np.asarray(logits)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_int8_kv_cache_close_to_bf16(arch):
+    cfg, params, toks, cross = _setup(arch)
+    ref = _decode_logits(cfg, params, toks, cross)
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    got = _decode_logits(cfg8, params, toks, cross)
+    # correlation of logits survives cache quantization
+    r = np.corrcoef(ref.ravel(), got.ravel())[0, 1]
+    assert r > 0.98, (arch, r)
+
+
+def test_int8_weights_close_to_bf16():
+    cfg, params, toks, cross = _setup("yi-9b",
+                                      serve_weight_dtype="int8")
+    ref = _decode_logits(dataclasses.replace(cfg, serve_weight_dtype="bfloat16"),
+                         params, toks, cross)
+    qparams = T.quantize_for_serve(params, cfg)
+    got = _decode_logits(cfg, qparams, toks, cross)
+    r = np.corrcoef(ref.ravel(), got.ravel())[0, 1]
+    assert r > 0.98, r
+
+
+def test_quantize_for_serve_structure():
+    cfg, params, _, _ = _setup("yi-9b", serve_weight_dtype="int8")
+    q = T.quantize_for_serve(params, cfg)
+    # projections replaced, embedding untouched
+    leaves = jax.tree_util.tree_flatten_with_path(q)[0]
+    has_wq = any("w_q" in str(p) for p, _ in leaves)
+    assert has_wq
+    assert q["emb"].dtype == jnp.bfloat16
+    # spec version mirrors the transform
+    specs = jax.eval_shape(lambda k: T.init_lm(k, cfg), jax.random.PRNGKey(0))
+    qspecs = T.quantize_for_serve(specs, cfg)
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(qspecs)[0],
+            jax.tree_util.tree_flatten_with_path(q)[0]):
+        assert a.shape == b.shape and a.dtype == b.dtype, (pa, a, b)

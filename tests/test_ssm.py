@@ -1,0 +1,115 @@
+"""SSM correctness: chunked-parallel forms vs recurrent references, and
+decode-state continuity (prefill -> decode equals one long prefill)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import ssm as S
+
+
+def _mamba_rec(xs, Bt, Ct, dt, la, h0):
+    dA = jnp.exp(la)
+
+    def step(h, i):
+        dBx = jnp.einsum("bhp,bn,bh->bhpn", xs[:, i], Bt[:, i], dt[:, i])
+        h = h * dA[:, i][..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", h, Ct[:, i])
+        return h, y
+
+    hT, ys = jax.lax.scan(step, h0, jnp.arange(xs.shape[1]))
+    return hT, ys.transpose(1, 0, 2, 3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), S_len=st.sampled_from([5, 16, 33, 64]),
+       chunk=st.sampled_from([4, 8, 16]))
+def test_ssd_chunked_equals_recurrent(seed, S_len, chunk):
+    key = jax.random.PRNGKey(seed)
+    B, H, hd, N = 2, 3, 8, 5
+    ks = jax.random.split(key, 6)
+    xs = jax.random.normal(ks[0], (B, S_len, H, hd))
+    Bt = jax.random.normal(ks[1], (B, S_len, N))
+    Ct = jax.random.normal(ks[2], (B, S_len, N))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S_len, H)))
+    la = dt * -1.0
+    h0 = jax.random.normal(ks[4], (B, H, hd, N))
+    hT_r, y_r = _mamba_rec(xs, Bt, Ct, dt, la, h0)
+    hT_c, y_c = S._ssd_chunked(xs, Bt, Ct, dt, la, h0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(hT_c), np.asarray(hT_r),
+                               rtol=3e-4, atol=3e-4)
+
+
+def _mlstm_rec(q, k, v, ig, fg, carry):
+    def step(carry, i):
+        C, n, m = carry
+        logf = jax.nn.log_sigmoid(fg[:, i])
+        m_new = jnp.maximum(logf + m, ig[:, i])
+        fs = jnp.exp(logf + m - m_new)
+        is_ = jnp.exp(ig[:, i] - m_new)
+        C = C * fs[..., None, None] + is_[..., None, None] * \
+            jnp.einsum("bhv,bhk->bhvk", v[:, i], k[:, i])
+        n = n * fs[..., None] + is_[..., None] * k[:, i]
+        num = jnp.einsum("bhvk,bhk->bhv", C, q[:, i])
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q[:, i])),
+                          jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / den
+
+    (CT, nT, mT), hs = jax.lax.scan(step, carry, jnp.arange(q.shape[1]))
+    return (CT, nT, mT), hs.transpose(1, 0, 2, 3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), S_len=st.sampled_from([5, 16, 33]),
+       chunk=st.sampled_from([4, 8]))
+def test_mlstm_chunked_equals_recurrent(seed, S_len, chunk):
+    key = jax.random.PRNGKey(seed)
+    B, H, hd = 2, 3, 8
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (B, S_len, H, hd))
+    k = jax.random.normal(ks[1], (B, S_len, H, hd)) * hd ** -0.5
+    v = jax.random.normal(ks[2], (B, S_len, H, hd))
+    ig = jax.random.normal(ks[3], (B, S_len, H))
+    fg = jax.random.normal(ks[4], (B, S_len, H)) + 2.0
+    C0 = jnp.zeros((B, H, hd, hd))
+    n0 = jnp.zeros((B, H, hd))
+    m0 = jnp.zeros((B, H))
+    (CT_r, nT_r, mT_r), h_r = _mlstm_rec(q, k, v, ig, fg, (C0, n0, m0))
+    (CT_c, nT_c, mT_c), h_c = S._mlstm_chunked(q, k, v, ig, fg, (C0, n0, m0),
+                                               chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_r),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(CT_c), np.asarray(CT_r),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(mT_c), np.asarray(mT_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mod", ["mamba2", "mlstm", "slstm"])
+def test_block_decode_continuity(mod):
+    """prefill(S) then decode(1) == prefill(S+1), per block type."""
+    key = jax.random.PRNGKey(0)
+    B, S_len, d = 2, 12, 16
+    x = jax.random.normal(key, (B, S_len + 1, d), jnp.float32)
+    if mod == "mamba2":
+        cfg = S.Mamba2Config(d_model=d, d_state=4, head_dim=8)
+        p = S.init_mamba2(jax.random.fold_in(key, 1), cfg, jnp.float32)
+        fn, init_state = S.mamba2, lambda: S.mamba2_init_state(B, cfg, jnp.float32)
+    elif mod == "mlstm":
+        cfg = S.XLSTMConfig(d_model=d, n_heads=2)
+        p = S.init_mlstm(jax.random.fold_in(key, 1), cfg, jnp.float32)
+        fn, init_state = S.mlstm, lambda: S.mlstm_init_state(B, cfg, jnp.float32)
+    else:
+        cfg = S.XLSTMConfig(d_model=d, n_heads=2)
+        p = S.init_slstm(jax.random.fold_in(key, 1), cfg, jnp.float32)
+        fn, init_state = S.slstm, lambda: S.slstm_init_state(B, cfg)
+
+    y_full, _ = fn(p, x, cfg, state=init_state())
+    _, st1 = fn(p, x[:, :S_len], cfg, state=init_state())
+    y_step, _ = fn(p, x[:, S_len:], cfg, state=st1)
+    np.testing.assert_allclose(np.asarray(y_step[:, 0]),
+                               np.asarray(y_full[:, S_len]),
+                               rtol=2e-3, atol=2e-3)

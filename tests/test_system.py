@@ -1,0 +1,61 @@
+"""End-to-end system tests: the training driver (with checkpoint/restart and
+gradient compression), the serving driver, and the ODiMO search engine's
+monotone cost behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import serve, train
+
+
+def test_train_loss_decreases_and_resumes(tmp_path):
+    ck = str(tmp_path / "ckpt")
+    losses = train.main(["--arch", "yi-9b", "--reduce", "--steps", "30",
+                         "--batch", "4", "--seq", "32", "--ckpt-dir", ck,
+                         "--ckpt-every", "10", "--log-every", "100"])
+    assert losses[-1] < losses[0]
+    # resume from the committed checkpoint and run further
+    losses2 = train.main(["--arch", "yi-9b", "--reduce", "--steps", "40",
+                          "--batch", "4", "--seq", "32", "--ckpt-dir", ck,
+                          "--resume", "--log-every", "100"])
+    assert len(losses2) == 10  # steps 30..40 only
+
+
+def test_train_with_gradient_compression():
+    losses = train.main(["--arch", "h2o-danube-3-4b", "--reduce", "--steps",
+                         "25", "--batch", "4", "--seq", "32",
+                         "--compress-grads", "--log-every", "100"])
+    assert losses[-1] < losses[0]
+
+
+def test_serve_driver_generates():
+    gen, stats = serve.main(["--arch", "deepseek-v2-lite-16b", "--reduce",
+                             "--requests", "2", "--prompt-len", "8",
+                             "--gen-len", "4"])
+    assert gen.shape == (2, 4)
+    assert stats["tok_per_s"] > 0
+
+
+def test_odimo_lambda_monotone_cost():
+    """Core paper behavior: larger lambda -> cheaper discovered mapping."""
+    from repro.core import engine
+    from repro.core.cost_models import AbstractCostModel
+    from repro.core.odimo import ODiMOSpec
+    from repro.data.pipeline import ImageTaskConfig, image_batch
+    from repro.models import cnn
+
+    cfg = cnn.RESNET20_TINY
+    task = ImageTaskConfig(n_classes=cfg.n_classes, img_hw=cfg.img_hw)
+    data_fn = lambda step, batch: image_batch(task, step, batch)
+    cm = AbstractCostModel(ideal_shutdown=True)
+    costs = []
+    for lam in (1e-9, 1e-4):
+        scfg = engine.SearchConfig(lam=lam, objective="energy",
+                                   pretrain_steps=20, search_steps=50,
+                                   finetune_steps=10, batch=16,
+                                   eval_batches=2)
+        res = engine.run_odimo(cnn.get_model(cfg), cfg, ODiMOSpec(), cm,
+                               scfg, data_fn)
+        costs.append(res.energy)
+    assert costs[1] <= costs[0] * 1.05, costs

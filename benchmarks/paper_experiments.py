@@ -16,14 +16,10 @@ import json
 import time
 from pathlib import Path
 
-import jax
 import numpy as np
 
+from repro.api import Platform, SearchConfig, SearchPipeline, cnn_handle
 from repro.core import baselines as BL
-from repro.core import engine
-from repro.core.cost_models import AbstractCostModel, DianaCostModel
-from repro.core.losses import exact_energy, exact_latency
-from repro.core.odimo import ODiMOSpec
 from repro.data.pipeline import ImageTaskConfig, image_batch
 from repro.models import cnn
 
@@ -63,23 +59,17 @@ def _data_fn(cfg):
 
 def _scfg(preset, lam, objective):
     p = PRESETS[preset]
-    return engine.SearchConfig(
+    return SearchConfig(
         lam=lam, objective=objective, pretrain_steps=p["pretrain"],
         search_steps=p["search"], finetune_steps=p["finetune"],
         batch=p["batch"], eval_batches=p["evalb"])
 
 
-def _plan_geoms(cfg):
-    _, _, plan_fn = cnn.get_model(cfg)
-    plan = plan_fn(cfg)
-    return ([g for (_, g, _) in plan], [s for (_, _, s) in plan])
-
-
-def run_baselines(model_name: str, preset: str, cost_model, out: list):
+def run_baselines(model_name: str, preset: str, platform, out: list):
     cfg = MODEL_CFGS[model_name]
-    geoms, searchable = _plan_geoms(cfg)
-    spec = ODiMOSpec()
-    model = cnn.get_model(cfg)
+    handle = cnn_handle(cfg)
+    geoms, searchable = handle.geometries(), handle.searchable()
+    cost_model = Platform.get(platform).cost_model()
     data_fn = _data_fn(cfg)
     scfg = _scfg(preset, 0.0, "latency")
     base_defs = {
@@ -95,8 +85,8 @@ def run_baselines(model_name: str, preset: str, cost_model, out: list):
             if not s:
                 assigns[li][:] = 0
         t0 = time.time()
-        res = engine.evaluate_fixed_mapping(model, cfg, spec, cost_model,
-                                            scfg, data_fn, assigns)
+        res = SearchPipeline.fixed_mapping(handle, assigns, platform,
+                                           config=scfg, data_fn=data_fn).run()
         rec = dict(kind="baseline", model=model_name, name=name,
                    accuracy=res.accuracy, latency=res.latency,
                    energy=res.energy,
@@ -113,16 +103,16 @@ def _aimc_frac(counts):
     return aimc / max(tot, 1)
 
 
-def run_odimo_sweep(model_name: str, preset: str, cost_model, objective: str,
+def run_odimo_sweep(model_name: str, preset: str, platform, objective: str,
                     out: list, tag: str):
     cfg = MODEL_CFGS[model_name]
-    spec = ODiMOSpec()
-    model = cnn.get_model(cfg)
+    handle = cnn_handle(cfg)
     data_fn = _data_fn(cfg)
     for lam in PRESETS[preset]["lambdas"]:
         t0 = time.time()
         scfg = _scfg(preset, lam, objective)
-        res = engine.run_odimo(model, cfg, spec, cost_model, scfg, data_fn)
+        res = SearchPipeline(handle, platform, config=scfg,
+                             data_fn=data_fn).run()
         rec = dict(kind=f"odimo_{tag}", model=model_name, objective=objective,
                    lam=lam, accuracy=res.accuracy, latency=res.latency,
                    energy=res.energy, aimc_ch=_aimc_frac(res.counts),
@@ -136,33 +126,31 @@ def run_odimo_sweep(model_name: str, preset: str, cost_model, objective: str,
 
 def fig4(preset: str, results: list):
     """Accuracy vs latency + accuracy vs energy Pareto fronts on DIANA."""
-    cm = DianaCostModel()
     for m in PRESETS[preset]["models"]:
         print(f"[fig4] {m}")
-        run_baselines(m, preset, cm, results)
+        run_baselines(m, preset, "diana", results)
         for obj in ("latency", "energy"):
-            run_odimo_sweep(m, preset, cm, obj, results, tag="diana")
+            run_odimo_sweep(m, preset, "diana", obj, results, tag="diana")
 
 
 def fig5(preset: str, results: list):
     """Abstract HW models: P_idle = P_act and P_idle = 0 (HW independence)."""
     m = PRESETS[preset]["models"][0]
-    for shutdown, tag in ((False, "abs_noshut"), (True, "abs_shut")):
-        cm = AbstractCostModel(ideal_shutdown=shutdown)
-        print(f"[fig5] {m} ideal_shutdown={shutdown}")
-        run_odimo_sweep(m, preset, cm, "energy", results, tag=tag)
+    for platform, tag in (("diana_abstract", "abs_noshut"),
+                          ("diana_ideal_shutdown", "abs_shut")):
+        print(f"[fig5] {m} platform={platform}")
+        run_odimo_sweep(m, preset, platform, "energy", results, tag=tag)
 
 
 def table1(results: list):
     """Deployment accounting (Table I): utilization per accelerator and
     AIMC-channel fraction, from the discretized mappings of fig4."""
-    cm = DianaCostModel()
+    cm = Platform.get("diana").cost_model()
     rows = []
     for r in results:
         if r["kind"] != "odimo_diana" or "counts" not in r:
             continue
-        cfg = MODEL_CFGS[r["model"]]
-        geoms, _ = _plan_geoms(cfg)
+        geoms = cnn_handle(MODEL_CFGS[r["model"]]).geometries()
         lat_dig = lat_aimc = lat_tot = 0.0
         for geom, counts in zip(geoms, r["counts"]):
             lat = cm.latency(geom, np.asarray(counts, np.float32))

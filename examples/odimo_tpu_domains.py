@@ -1,84 +1,38 @@
 """ODiMO with the TPU cost model: per-channel int8/bf16 precision-domain
-assignment on a transformer-style FFN stack (the DESIGN.md §2 adaptation,
-exercised end-to-end with the paper's own DNAS machinery).
+assignment on an MLP stack (the DESIGN.md §2 adaptation, exercised
+end-to-end with the paper's own DNAS machinery via `repro.api`).
 
 The "accelerators" here are the two MXU precision domains of one TPU chip:
   domain 0: int8 path (2x peak FLOP/s, 1-byte weight stream)
   domain 1: bf16 path
-TPUCostModel's latency is roofline-based, so channels drift to the int8
-domain until the accuracy regularizer pushes sensitive channels back —
-exactly the paper's accuracy-vs-cost trade, on TPU terms.
+The ``"tpu_v5e"`` platform's latency is roofline-based, so channels drift to
+the int8 domain until the accuracy regularizer pushes sensitive channels
+back — exactly the paper's accuracy-vs-cost trade, on TPU terms.
 
 Run:  PYTHONPATH=src python examples/odimo_tpu_domains.py
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import engine
-from repro.core.cost_models import LayerGeometry, TPUCostModel
-from repro.core.odimo import ODiMOSpec
-from repro.core.quant import TPU_DOMAINS
+from repro.api import SearchConfig, SearchPipeline, mlp_handle
 from repro.data.pipeline import ImageTaskConfig, image_batch
-from repro.models import managed as mg
 
-
-# ---- a small MLP façade over managed Dense layers (engine-compatible) ----
-
-WIDTHS = [128, 256, 256, 128]
+IMG_HW = (8, 8)
 N_CLASSES = 10
-IN_DIM = 8 * 8 * 3
-
-
-class MLPCfg:
-    name = "mlp_tpu_domains"
-
-
-def init_fn(key, cfg, spec):
-    ks = jax.random.split(key, len(WIDTHS) + 1)
-    dims = [IN_DIM] + WIDTHS
-    layers = [mg.init_dense(ks[i], dims[i], dims[i + 1], spec)
-              for i in range(len(WIDTHS))]
-    head = mg.init_dense(ks[-1], WIDTHS[-1], N_CLASSES, spec)
-    return {"layers": layers, "head": head}
-
-
-def apply_fn(p, x, cfg, spec=None, mode="fp", tau=1.0):
-    h = x.reshape(x.shape[0], -1)
-    for lp in p["layers"]:
-        h = jax.nn.relu(mg.dense(lp, h, spec, mode, tau))
-    return mg.dense(p["head"], h, spec, mode, tau)
-
-
-def plan_fn(cfg):
-    dims = [IN_DIM] + WIDTHS
-    plan = [(f"layers/{i}", LayerGeometry(c_in=dims[i], c_out=dims[i + 1]),
-             True) for i in range(len(WIDTHS))]
-    plan.append(("head", LayerGeometry(c_in=WIDTHS[-1], c_out=N_CLASSES),
-                 True))
-    return plan
-
-
-def managed_fn(params):
-    return list(params["layers"]) + [params["head"]]
 
 
 def main():
-    spec = ODiMOSpec(domains=TPU_DOMAINS, act_bits=8)
-    cm = TPUCostModel()
-    task = ImageTaskConfig(n_classes=N_CLASSES, img_hw=(8, 8), noise=0.6)
+    handle = mlp_handle(in_dim=IMG_HW[0] * IMG_HW[1] * 3,
+                        widths=(128, 256, 256, 128), n_classes=N_CLASSES,
+                        name="mlp_tpu_domains")
+    task = ImageTaskConfig(n_classes=N_CLASSES, img_hw=IMG_HW, noise=0.6)
     data_fn = lambda step, batch: image_batch(task, step, batch)
 
     print("=== ODiMO x TPU precision domains (int8 @2x peak vs bf16) ===")
     for lam in (1e2, 1e5):
-        scfg = engine.SearchConfig(lam=lam, objective="latency",
-                                   pretrain_steps=80, search_steps=120,
-                                   finetune_steps=60, batch=64,
-                                   eval_batches=4)
-        res = engine.run_odimo((init_fn, apply_fn, plan_fn), MLPCfg(), spec,
-                               cm, scfg, data_fn, managed_fn=managed_fn)
-        int8_frac = sum(int((a == 0).sum()) for a in res.assignments) / \
-            sum(a.size for a in res.assignments)
+        scfg = SearchConfig(lam=lam, objective="latency",
+                            pretrain_steps=80, search_steps=120,
+                            finetune_steps=60, batch=64, eval_batches=4)
+        res = SearchPipeline(handle, platform="tpu_v5e", config=scfg,
+                             data_fn=data_fn).run()
+        int8_frac = float(res.artifact.domain_channel_fractions()[0])
         print(f"lambda={lam:.0e}: acc={res.accuracy:.3f} "
               f"roofline-lat={res.latency:.3e}s int8-channels={int8_frac:.0%}")
     print("higher lambda -> more channels on the fast int8 domain, the")

@@ -1,46 +1,60 @@
-"""Quickstart: ODiMO end-to-end on a small CNN, in ~2 minutes on CPU.
+"""Quickstart: ODiMO end-to-end on a small CNN via the `repro.api` mapping
+API, in ~2 minutes on CPU.
 
   1. pretrain fp32        -> baseline accuracy
   2. DNAS search (Eq. 2)  -> per-channel accelerator assignment
-  3. discretize + Fig. 3 reorg pass  -> contiguous per-domain sub-layers
+  3. discretize           -> serializable mapping artifact (JSON)
   4. deploy one layer through the fused split-precision Pallas kernel
-     (interpret mode on CPU) and check it matches the fake-quant semantics
+     (interpret mode on CPU) using the RELOADED artifact, and check it
+     matches the fake-quant semantics
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--fast]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import engine
-from repro.core.cost_models import DianaCostModel
-from repro.core.odimo import ODiMOSpec
+from repro.api import (MappingArtifact, SearchConfig, SearchPipeline,
+                       VerboseCallback, cnn_handle)
 from repro.data.pipeline import ImageTaskConfig, image_batch
 from repro.models import cnn
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-speed step counts (seconds, not minutes)")
+    ap.add_argument("--artifact", default="experiments/quickstart_mapping.json")
+    args = ap.parse_args(argv)
+
     cfg = cnn.RESNET20_TINY
     task = ImageTaskConfig(n_classes=cfg.n_classes, img_hw=cfg.img_hw)
     data_fn = lambda step, batch: image_batch(task, step, batch)
-    spec = ODiMOSpec()
-    cost_model = DianaCostModel()
 
     print("=== ODiMO search (latency objective, lambda=5e-7) ===")
-    scfg = engine.SearchConfig(lam=5e-7, objective="latency",
-                               pretrain_steps=60, search_steps=80,
-                               finetune_steps=60, batch=32, eval_batches=4)
-    res = engine.run_odimo(cnn.get_model(cfg), cfg, spec, cost_model, scfg,
-                           data_fn, verbose=True)
+    steps = (10, 12, 8) if args.fast else (60, 80, 60)
+    scfg = SearchConfig(lam=5e-7, objective="latency",
+                        pretrain_steps=steps[0], search_steps=steps[1],
+                        finetune_steps=steps[2], batch=32, eval_batches=4)
+    pipe = SearchPipeline(cnn_handle(cfg), platform="diana", config=scfg,
+                          data_fn=data_fn, callbacks=[VerboseCallback()])
+    res = pipe.run()
     print(f"accuracy={res.accuracy:.3f}  modeled latency={res.latency:.3e} "
           f"cycles  energy={res.energy:.3e}")
     print("channel split per layer (digital, aimc):",
           [tuple(int(x) for x in c) for c in res.counts][:8], "...")
 
-    print("\n=== Fig. 3 reorg + fused split-precision kernel deploy ===")
+    path = res.artifact.save(args.artifact)
+    print(f"\n=== mapping artifact -> {path} ===")
+    art = MappingArtifact.load(path)   # round-trip through JSON
+    print(f"platform={art.platform} layers={len(art.layers)} "
+          f"aimc channel fraction={art.domain_channel_fractions()[1]:.1%}")
+
+    print("\n=== fused split-precision kernel deploy (from the artifact) ===")
     # deploy the classifier head through the fused kernel
     head = res.params["head"]
-    assign = res.assignments[-1]
+    assign = art.assignments()[-1]
     from repro.core import quant
     from repro.kernels import ops
     x = jax.random.normal(jax.random.PRNGKey(0), (32, head["w"].shape[0]))

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# One-command reproducible green/red state for the repo:
+#   1. install test deps (skip with SKIP_INSTALL=1 for hermetic containers)
+#   2. tier-1 test suite (ROADMAP.md verify command)
+#   3. quickstart example in fast mode (exercises the repro.api pipeline,
+#      mapping artifact, and the fused split-precision kernel end-to-end)
+#
+# Usage:  bash scripts/ci_smoke.sh            # installs requirements-dev.txt
+#         SKIP_INSTALL=1 bash scripts/ci_smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${SKIP_INSTALL:-0}" != "1" ]]; then
+    python -m pip install -r requirements-dev.txt
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== quickstart (fast) =="
+python examples/quickstart.py --fast
+
+echo "ci_smoke OK"

@@ -1,0 +1,89 @@
+"""repro.api — the first-class mapping API.
+
+This package is the one way examples, benchmarks, tests, and the launch
+drivers run a precision-aware mapping search.  Three pillars:
+
+`ModelHandle` (repro.api.handle)
+    Typed model façade: ``init(key, spec)``, ``apply(params, x, spec, mode,
+    tau)``, ``plan()`` and ``managed_layers`` (defaults to resolving plan
+    names as paths into the params pytree).  Adapters:
+
+        cnn_handle(cnn.RESNET20_CFG)       # paper CNNs (repro.models.cnn)
+        mlp_handle(in_dim=192, widths=(128, 128), n_classes=10)
+        transformer_handle(n_tokens=16, d_model=64, n_layers=2, n_classes=10)
+        ModelHandle.from_legacy((init_fn, apply_fn, plan_fn), cfg)  # shim
+
+`Platform` (repro.api.platforms)
+    Registry bundling `PrecisionDomain`s + a `CostModel` under a string
+    name.  Built-ins: ``"diana"``, ``"diana_abstract"``,
+    ``"diana_ideal_shutdown"``, ``"tpu_v5e"``.  A new accelerator is one
+    registration::
+
+        Platform.register(Platform("my_soc", domains, MyCostModel))
+        plat = Platform.get("my_soc"); plat.spec(); plat.cost_model()
+
+`SearchPipeline` (repro.api.pipeline)
+    The paper's flow as composable stages — `Pretrain`, `DNASSearch`,
+    `Discretize`, `Finetune`, `Evaluate` — sharing one jitted step, with
+    `PipelineCallback` hooks per stage/step.  ``SearchPipeline.fixed_mapping``
+    (stages `ApplyMapping`, `FinetuneFixed`, `Evaluate`) evaluates baseline
+    mappings.  Example::
+
+        pipe = SearchPipeline(cnn_handle(cfg), platform="diana",
+                              config=SearchConfig(lam=5e-7, objective="latency"),
+                              data_fn=data_fn, callbacks=[VerboseCallback()])
+        res = pipe.run()
+        res.artifact.save("experiments/mapping.json")
+
+Mapping artifact (repro.api.artifact)
+    `Discretize`/`ApplyMapping` emit a `MappingArtifact`, serialized as::
+
+        {"schema_version": 1, "model": ..., "platform": ..., "objective": ...,
+         "lam": ..., "seed": ...,
+         "domains": [{"name", "weight_bits", "act_bits"}, ...],
+         "layers":  [{"name", "searchable", "assignment": [dom per out ch],
+                      "counts": [ch per dom]}, ...],
+         "metrics": {"accuracy", "latency", "energy"}}
+
+    Consumers: ``launch/serve.py --mapping art.json`` (chooses the serving
+    weight dtype from the majority domain) and
+    ``core.discretize.reorg_chain_from_artifact`` (Fig. 3 reorg pass driven
+    by the stored assignment; takes the plain dict, so `core` never imports
+    `api`).  ``launch/train.py --emit-mapping`` writes one from a static
+    min-cost split.
+
+Migrating from the tuple façade
+    Old::
+
+        engine.run_odimo((init_fn, apply_fn, plan_fn), cfg, spec, cost_model,
+                         scfg, data_fn, managed_fn=managed_fn)
+
+    New::
+
+        SearchPipeline(ModelHandle.from_legacy((init_fn, apply_fn, plan_fn),
+                                               cfg, managed_fn),
+                       platform="diana", config=scfg, data_fn=data_fn).run()
+
+    ``engine.run_odimo`` / ``engine.evaluate_fixed_mapping`` remain as thin
+    wrappers over the pipeline and return the legacy `SearchResult`.
+"""
+from repro.api.artifact import MappingArtifact
+from repro.api.handle import (ModelHandle, cnn_handle, mlp_handle,
+                              transformer_handle)
+from repro.api.pipeline import (ApplyMapping, Discretize, DNASSearch,
+                                Evaluate, Finetune, FinetuneFixed,
+                                PipelineCallback, PipelineResult,
+                                PipelineState, Pretrain, SearchPipeline,
+                                Stage, VerboseCallback, default_stages,
+                                fixed_mapping_stages)
+from repro.api.platforms import Platform
+from repro.core.engine import SearchConfig, SearchResult
+
+__all__ = [
+    "ApplyMapping", "Discretize", "DNASSearch", "Evaluate", "Finetune",
+    "FinetuneFixed", "MappingArtifact", "ModelHandle", "Platform",
+    "PipelineCallback", "PipelineResult", "PipelineState", "Pretrain",
+    "SearchConfig", "SearchPipeline", "SearchResult", "Stage",
+    "VerboseCallback", "cnn_handle", "default_stages",
+    "fixed_mapping_stages", "mlp_handle", "transformer_handle",
+]

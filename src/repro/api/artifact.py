@@ -1,0 +1,119 @@
+"""`MappingArtifact`: the serializable result of a mapping search.
+
+One JSON document records everything needed to re-deploy (or re-evaluate) a
+discovered channel->domain mapping without re-running the DNAS:
+
+    {
+      "schema_version": 1,
+      "model": "resnet20_tiny",
+      "platform": "diana",            # registry name, or null for ad hoc
+      "objective": "latency",
+      "lam": 5e-07,
+      "seed": 0,
+      "domains": [{"name": "digital", "weight_bits": 8, "act_bits": 8}, ...],
+      "layers": [{"name": "stem", "searchable": true,
+                  "assignment": [0, 1, ...],     # domain idx per out channel
+                  "counts": [12, 4]}, ...],      # channels per domain
+      "metrics": {"accuracy": ..., "latency": ..., "energy": ...}
+    }
+
+`launch/serve.py --mapping` and `core/discretize.reorg_chain_from_artifact`
+consume this document directly (the latter takes the plain dict so `core`
+never imports `api`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Sequence
+
+import numpy as np
+
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass
+class MappingArtifact:
+    model: str
+    domains: List[Dict[str, Any]]
+    layers: List[Dict[str, Any]]
+    platform: str | None = None
+    objective: str | None = None
+    lam: float | None = None
+    seed: int | None = None
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+    schema_version: int = SCHEMA_VERSION
+
+    # ---- construction ----------------------------------------------------
+
+    @classmethod
+    def from_search(cls, model_name: str, spec, plan, assignments,
+                    counts, platform=None, objective=None, lam=None,
+                    seed=None, metrics=None) -> "MappingArtifact":
+        if not (len(plan) == len(assignments) == len(counts)):
+            raise ValueError(f"plan/assignments/counts length mismatch: "
+                             f"{len(plan)}/{len(assignments)}/{len(counts)}")
+        domains = [dict(name=d.name, weight_bits=d.weight_bits,
+                        act_bits=d.act_bits) for d in spec.domains]
+        layers = [dict(name=name, searchable=bool(searchable),
+                       assignment=[int(v) for v in np.asarray(a)],
+                       counts=[int(v) for v in np.asarray(c)])
+                  for (name, _, searchable), a, c
+                  in zip(plan, assignments, counts)]
+        return cls(model=model_name, domains=domains, layers=layers,
+                   platform=platform, objective=objective, lam=lam,
+                   seed=seed, metrics=dict(metrics or {}))
+
+    # ---- accessors -------------------------------------------------------
+
+    def assignments(self) -> List[np.ndarray]:
+        return [np.asarray(l["assignment"], dtype=np.int64)
+                for l in self.layers]
+
+    def counts(self) -> List[np.ndarray]:
+        return [np.asarray(l["counts"], dtype=np.int64) for l in self.layers]
+
+    @property
+    def n_domains(self) -> int:
+        return len(self.domains)
+
+    def domain_channel_fractions(self) -> np.ndarray:
+        """Fraction of all channels assigned to each domain."""
+        tot = np.zeros(self.n_domains, dtype=np.float64)
+        for l in self.layers:
+            tot += np.asarray(l["counts"], dtype=np.float64)
+        return tot / max(tot.sum(), 1.0)
+
+    # ---- (de)serialization ----------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: int | None = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MappingArtifact":
+        d = dict(d)
+        version = d.pop("schema_version", SCHEMA_VERSION)
+        if version > SCHEMA_VERSION:
+            raise ValueError(f"mapping artifact schema v{version} is newer "
+                             f"than supported v{SCHEMA_VERSION}")
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(schema_version=version,
+                   **{k: v for k, v in d.items() if k in fields})
+
+    @classmethod
+    def from_json(cls, s: str) -> "MappingArtifact":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path) -> Path:
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(self.to_json())
+        return p
+
+    @classmethod
+    def load(cls, path) -> "MappingArtifact":
+        return cls.from_json(Path(path).read_text())

@@ -1,0 +1,131 @@
+"""`ModelHandle`: the typed model façade the mapping API searches over.
+
+A handle bundles everything ODiMO needs from a model — parameter init, the
+mode-aware forward pass, the layer plan (geometry + searchability), and a way
+to locate the ODiMO-managed layer dicts inside the params pytree — replacing
+the old positional ``(init_fn, apply_fn, plan_fn)`` tuple plus ``managed_fn``
+kwarg.  Model config is bound at construction time, so the engine never sees
+it.
+
+The default managed-layer lookup resolves the *plan names* as slash-separated
+paths into the params pytree (``"blocks/0/c1"`` -> ``params["blocks"][0]["c1"]``),
+which covers every façade in the repo; custom pytree layouts override
+``managed_layers``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_models import LayerGeometry
+from repro.models.managed import get_by_path
+
+Plan = List[Tuple[str, LayerGeometry, bool]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelHandle:
+    """Typed façade over a searchable model.
+
+    init(key, spec)                  -> params pytree
+    apply(params, x, spec, mode, tau)-> logits
+    plan()                           -> [(name, LayerGeometry, searchable)]
+    managed_layers(params)           -> managed layer dicts, plan order
+                                        (None => path lookup by plan names)
+    """
+    name: str
+    init: Callable[..., Any]
+    apply: Callable[..., jax.Array]
+    plan: Callable[[], Plan]
+    managed_layers: Callable[[Any], List[dict]] | None = None
+    config: Any = None
+
+    def layers(self, params) -> List[dict]:
+        """Managed layer dicts of ``params``, in plan order."""
+        if self.managed_layers is not None:
+            return self.managed_layers(params)
+        return [get_by_path(params, name) for (name, _, _) in self.plan()]
+
+    def geometries(self) -> List[LayerGeometry]:
+        return [g for (_, g, _) in self.plan()]
+
+    def searchable(self) -> List[bool]:
+        return [s for (_, _, s) in self.plan()]
+
+    def with_assignments(self, params, assignments: Sequence[np.ndarray],
+                         n_domains: int, margin: float = 10.0):
+        """Return a NEW params pytree whose alphas one-hot-encode a fixed
+        channel->domain mapping (large-margin logits).
+
+        Functional: the managed dicts are located via ``layers`` and the
+        matching alpha leaves are swapped by identity, so nothing depends on
+        dict aliasing into ``params`` and the input pytree is left untouched.
+        """
+        layers = self.layers(params)
+        if len(assignments) != len(layers):
+            raise ValueError(
+                f"{self.name}: {len(assignments)} assignments for "
+                f"{len(layers)} managed layers (one per plan entry required)")
+        replacements = {}
+        for d, a in zip(layers, assignments):
+            if "odimo" not in d:
+                continue
+            onehot = jnp.asarray(np.eye(n_domains)[np.asarray(a)].T * margin,
+                                 dtype=jnp.float32)
+            replacements[id(d["odimo"]["alpha"])] = onehot
+        leaf_ids = {id(leaf) for leaf in jax.tree.leaves(params)}
+        if not set(replacements).issubset(leaf_ids):
+            raise ValueError(
+                f"{self.name}: managed_layers returned alpha arrays that are "
+                "not leaves of the given params pytree; with_assignments "
+                "needs the original (non-copied) layer dicts")
+        return jax.tree.map(lambda leaf: replacements.get(id(leaf), leaf),
+                            params)
+
+    # ---- adapters --------------------------------------------------------
+
+    @classmethod
+    def from_legacy(cls, model, cfg, managed_fn=None,
+                    name: str | None = None) -> "ModelHandle":
+        """Wrap the old ``(init_fn, apply_fn, plan_fn)`` tuple (+ optional
+        ``managed_fn``).  Back-compat shim for `engine.run_odimo`."""
+        init_fn, apply_raw, plan_fn = model
+        return cls(
+            name=name or getattr(cfg, "name", "legacy"),
+            init=lambda key, spec: init_fn(key, cfg, spec),
+            apply=lambda p, x, spec, mode, tau: apply_raw(p, x, cfg, spec,
+                                                          mode, tau),
+            plan=lambda: plan_fn(cfg),
+            managed_layers=managed_fn,
+            config=cfg,
+        )
+
+
+def cnn_handle(cfg) -> ModelHandle:
+    """Handle over the paper CNN façades (``repro.models.cnn``)."""
+    from repro.models import cnn
+    return ModelHandle.from_legacy(cnn.get_model(cfg), cfg, name=cfg.name)
+
+
+def mlp_handle(cfg=None, **kw) -> ModelHandle:
+    """Handle over the managed-Dense MLP façade (``repro.models.facades``)."""
+    from repro.models import facades
+    if cfg is None:
+        cfg = facades.MLPConfig(**kw)
+    return ModelHandle.from_legacy(
+        (facades.mlp_init, facades.mlp_apply, facades.mlp_plan), cfg,
+        name=cfg.name)
+
+
+def transformer_handle(cfg=None, **kw) -> ModelHandle:
+    """Handle over the managed transformer-encoder classifier façade."""
+    from repro.models import facades
+    if cfg is None:
+        cfg = facades.EncoderConfig(**kw)
+    return ModelHandle.from_legacy(
+        (facades.encoder_init, facades.encoder_apply, facades.encoder_plan),
+        cfg, name=cfg.name)

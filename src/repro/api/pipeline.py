@@ -1,0 +1,431 @@
+"""`SearchPipeline`: the ODiMO search as composable stages.
+
+The paper's training flow (Sec. III-B) —
+
+    pretrain (fp) -> DNAS search (Eq. 2) -> discretize -> finetune -> evaluate
+
+— is decomposed into stage objects that share one jit-compiled train/eval
+step and a mutable `PipelineState`.  The default stage list reproduces
+`engine.run_odimo` bit-for-bit; swapping stages composes other flows, e.g.
+``[ApplyMapping(a), FinetuneFixed(), Evaluate()]`` is the fixed-mapping
+baseline evaluation.  Per-stage/per-step callbacks replace the old
+``verbose`` flag, and `Discretize` emits a serializable `MappingArtifact`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.artifact import MappingArtifact
+from repro.api.handle import ModelHandle
+from repro.api.platforms import Platform
+from repro.core import engine, losses, odimo
+from repro.core.cost_models import CostModel
+from repro.core.odimo import ODiMOSpec
+from repro.optim import adamw
+
+# Disjoint data-stream offsets, inherited from the legacy engine so that
+# pipeline runs are bit-identical to historical `run_odimo` results.
+SEARCH_DATA_OFFSET = 10_000
+FINETUNE_DATA_OFFSET = 20_000
+EVAL_DATA_OFFSET = 90_000
+
+
+# --------------------------------------------------------------------------
+# Callbacks
+# --------------------------------------------------------------------------
+
+class PipelineCallback:
+    """Observer hooks; override any subset."""
+
+    def on_stage_start(self, stage: "Stage", state: "PipelineState") -> None:
+        pass
+
+    def on_stage_end(self, stage: "Stage", state: "PipelineState") -> None:
+        pass
+
+    def on_step(self, stage: "Stage", step: int,
+                metrics: Dict[str, float]) -> None:
+        pass
+
+
+class VerboseCallback(PipelineCallback):
+    """Legacy-style progress prints every ``every`` steps."""
+
+    def __init__(self, every: int = 100):
+        self.every = every
+
+    def on_step(self, stage, step, metrics):
+        if step % self.every:
+            return
+        extra = " ".join(f"{k}={v:.4g}" for k, v in metrics.items()
+                         if k != "loss")
+        print(f"[{stage.name} {step}] loss={metrics.get('loss', 0.0):.4f}"
+              + (f" {extra}" if extra else ""))
+
+
+# --------------------------------------------------------------------------
+# State + context
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PipelineState:
+    """Mutable state threaded through the stages."""
+    params: Any
+    history: Dict[str, list] = dataclasses.field(default_factory=dict)
+    assignments: List[np.ndarray] | None = None
+    counts: List[np.ndarray] | None = None
+    accuracy: float | None = None
+    latency: float | None = None
+    energy: float | None = None
+    artifact: MappingArtifact | None = None
+
+
+@dataclasses.dataclass
+class PipelineContext:
+    """Immutable per-run machinery shared by all stages."""
+    handle: ModelHandle
+    spec: ODiMOSpec
+    cost_model: CostModel
+    scfg: engine.SearchConfig
+    data_fn: Callable[[int, int], Any]
+    plan: list
+    train_step: Callable
+    eval_step: Callable
+    apply_fn: Callable
+    ocfg: adamw.AdamWConfig
+    platform_name: str | None
+    callbacks: Sequence[PipelineCallback]
+
+    @property
+    def geoms(self):
+        return [g for (_, g, _) in self.plan]
+
+    @property
+    def searchable(self):
+        return [s for (_, _, s) in self.plan]
+
+    def emit_step(self, stage, step, metrics):
+        for cb in self.callbacks:
+            cb.on_step(stage, step, metrics)
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    """Search outcome; superset of the legacy `engine.SearchResult`."""
+    params: Any
+    assignments: List[np.ndarray]
+    counts: List[np.ndarray]
+    accuracy: float
+    latency: float
+    energy: float
+    history: dict
+    artifact: MappingArtifact | None = None
+
+
+# --------------------------------------------------------------------------
+# Stages
+# --------------------------------------------------------------------------
+
+class Stage:
+    name = "stage"
+
+    def run(self, ctx: PipelineContext, state: PipelineState) -> None:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class Pretrain(Stage):
+    """Phase 1: full-precision task pretraining."""
+    steps: int | None = None
+    name = "pretrain"
+
+    def run(self, ctx, state):
+        scfg = ctx.scfg
+        steps = self.steps if self.steps is not None else scfg.pretrain_steps
+        opt = adamw.init(state.params, ctx.ocfg)
+        hist = state.history.setdefault("pretrain", [])
+        for step in range(steps):
+            batch = ctx.data_fn(step, scfg.batch)
+            state.params, opt, l, task, _ = ctx.train_step(
+                state.params, opt, batch, 1.0, scfg.lr, "fp")
+            hist.append(float(l))
+            ctx.emit_step(self, step, {"loss": float(l)})
+
+
+@dataclasses.dataclass
+class DNASSearch(Stage):
+    """Phase 2: DNAS over channel->domain alphas (Eq. 2, tau annealed)."""
+    steps: int | None = None
+    name = "search"
+
+    def run(self, ctx, state):
+        scfg = ctx.scfg
+        steps = self.steps if self.steps is not None else scfg.search_steps
+        opt = adamw.init(state.params, ctx.ocfg)
+        hist = state.history.setdefault("search", [])
+        for step in range(steps):
+            tau = float(odimo.tau_schedule(step, steps, ctx.spec))
+            batch = ctx.data_fn(SEARCH_DATA_OFFSET + step, scfg.batch)
+            state.params, opt, l, task, reg = ctx.train_step(
+                state.params, opt, batch, tau, scfg.lr, "search")
+            hist.append((float(task), float(reg)))
+            ctx.emit_step(self, step, {"loss": float(l), "task": float(task),
+                                       "reg": float(reg), "tau": tau})
+
+
+@dataclasses.dataclass
+class Discretize(Stage):
+    """Phase 3: argmax assignment per channel + mapping artifact."""
+    name = "discretize"
+
+    def run(self, ctx, state):
+        layer_dicts = ctx.handle.layers(state.params)
+        assignments, counts = [], []
+        for d, s in zip(layer_dicts, ctx.searchable):
+            if s and "odimo" in d:
+                a = np.asarray(odimo.assignment(d["odimo"]))
+            else:
+                a = np.zeros(d["w"].shape[-1], dtype=np.int64)  # pinned: dom 0
+            assignments.append(a)
+            counts.append(np.asarray([int((a == i).sum())
+                                      for i in range(ctx.spec.n_domains)]))
+        state.assignments, state.counts = assignments, counts
+        state.artifact = MappingArtifact.from_search(
+            ctx.handle.name, ctx.spec, ctx.plan, assignments, counts,
+            platform=ctx.platform_name, objective=ctx.scfg.objective,
+            lam=ctx.scfg.lam, seed=ctx.scfg.seed)
+
+
+@dataclasses.dataclass
+class Finetune(Stage):
+    """Phase 4: task-loss-only finetuning in exact discretized formats."""
+    steps: int | None = None
+    lr_scale: float = 0.3
+    name = "finetune"
+
+    def run(self, ctx, state):
+        scfg = ctx.scfg
+        steps = self.steps if self.steps is not None else scfg.finetune_steps
+        opt = adamw.init(state.params, ctx.ocfg)
+        hist = state.history.setdefault("finetune", [])
+        for step in range(steps):
+            batch = ctx.data_fn(FINETUNE_DATA_OFFSET + step, scfg.batch)
+            state.params, opt, l, task, _ = ctx.train_step(
+                state.params, opt, batch, 1.0, scfg.lr * self.lr_scale,
+                "finetune")
+            hist.append(float(l))
+            ctx.emit_step(self, step, {"loss": float(l)})
+
+
+@dataclasses.dataclass
+class ApplyMapping(Stage):
+    """Inject a FIXED channel->domain mapping (one-hot alphas) — the entry
+    stage of baseline evaluations.  Functional: see
+    `ModelHandle.with_assignments`."""
+    assignments: Sequence[np.ndarray] = ()
+    name = "apply_mapping"
+
+    def run(self, ctx, state):
+        assigns = [np.asarray(a, dtype=np.int64) for a in self.assignments]
+        state.params = ctx.handle.with_assignments(
+            state.params, assigns, ctx.spec.n_domains)
+        state.assignments = assigns
+        state.counts = [np.asarray([int((a == i).sum())
+                                    for i in range(ctx.spec.n_domains)])
+                        for a in assigns]
+        state.artifact = MappingArtifact.from_search(
+            ctx.handle.name, ctx.spec, ctx.plan, assigns, state.counts,
+            platform=ctx.platform_name, objective=ctx.scfg.objective,
+            lam=ctx.scfg.lam, seed=ctx.scfg.seed)
+
+
+@dataclasses.dataclass
+class FinetuneFixed(Stage):
+    """Train with frozen alphas (fixed mapping), task loss only."""
+    steps: int | None = None
+    name = "finetune_fixed"
+
+    def run(self, ctx, state):
+        scfg = ctx.scfg
+        steps = self.steps if self.steps is not None else (
+            scfg.pretrain_steps + scfg.finetune_steps)
+
+        @jax.jit
+        def ft_step(params, opt, batch):
+            def lf(p):
+                x, y = batch
+                logits = ctx.apply_fn(p, x, "finetune", 1.0)
+                return losses.cross_entropy(logits, y)
+            l, grads = jax.value_and_grad(lf)(params)
+            grads = jax.tree_util.tree_map_with_path(
+                lambda path, g: (jnp.zeros_like(g)
+                                 if any(getattr(q, "key", None) == "alpha"
+                                        for q in path) else g), grads)
+            params, opt, _ = adamw.update(grads, opt, params, ctx.ocfg,
+                                          lr=scfg.lr)
+            return params, opt, l
+
+        opt = adamw.init(state.params, ctx.ocfg)
+        hist = state.history.setdefault("finetune_fixed", [])
+        for step in range(steps):
+            state.params, opt, l = ft_step(state.params, opt,
+                                           ctx.data_fn(step, scfg.batch))
+            hist.append(float(l))
+            ctx.emit_step(self, step, {"loss": float(l)})
+
+
+@dataclasses.dataclass
+class Evaluate(Stage):
+    """Final accuracy + exact (discretized) latency/energy."""
+    name = "evaluate"
+
+    def run(self, ctx, state):
+        scfg = ctx.scfg
+        accs = []
+        for b in range(scfg.eval_batches):
+            batch = ctx.data_fn(EVAL_DATA_OFFSET + b, scfg.batch)
+            accs.append(float(ctx.eval_step(state.params, batch, 1.0,
+                                            "finetune")))
+        state.accuracy = float(np.mean(accs))
+        if state.counts is None:
+            raise ValueError("Evaluate needs counts: run Discretize or "
+                             "ApplyMapping first")
+        state.latency = float(losses.exact_latency(ctx.cost_model, ctx.geoms,
+                                                   state.counts))
+        state.energy = float(losses.exact_energy(ctx.cost_model, ctx.geoms,
+                                                 state.counts))
+        if state.artifact is not None:
+            state.artifact.metrics.update(accuracy=state.accuracy,
+                                          latency=state.latency,
+                                          energy=state.energy)
+
+
+def default_stages() -> List[Stage]:
+    """The paper's full flow (== legacy `run_odimo`)."""
+    return [Pretrain(), DNASSearch(), Discretize(), Finetune(), Evaluate()]
+
+
+def fixed_mapping_stages(assignments,
+                         train_steps: int | None = None) -> List[Stage]:
+    """Baseline flow (== legacy `evaluate_fixed_mapping`)."""
+    return [ApplyMapping(assignments), FinetuneFixed(train_steps), Evaluate()]
+
+
+# --------------------------------------------------------------------------
+# Pipeline
+# --------------------------------------------------------------------------
+
+class SearchPipeline:
+    """Composable ODiMO mapping search over a `ModelHandle`.
+
+    Hardware comes either from a registered `Platform` (by name or instance)
+    or from an explicit (spec, cost_model) pair; explicit values override the
+    platform's defaults.
+
+        pipe = SearchPipeline(cnn_handle(cfg), platform="diana",
+                              config=SearchConfig(lam=5e-7), data_fn=data_fn)
+        res = pipe.run()            # PipelineResult, res.artifact is JSON-able
+    """
+
+    def __init__(self, handle: ModelHandle, platform=None, *,
+                 spec: ODiMOSpec | None = None,
+                 cost_model: CostModel | None = None,
+                 config: engine.SearchConfig | None = None,
+                 data_fn: Callable[[int, int], Any],
+                 stages: Sequence[Stage] | None = None,
+                 callbacks: Sequence[PipelineCallback] = ()):
+        self.handle = handle
+        plat = Platform.get(platform) if platform is not None else None
+        self.platform_name = plat.name if plat is not None else None
+        if spec is not None:
+            self.spec = spec
+        elif plat is not None:
+            self.spec = plat.spec()
+        else:
+            self.spec = ODiMOSpec()
+        if cost_model is not None:
+            self.cost_model = cost_model
+        elif plat is not None:
+            self.cost_model = plat.cost_model()
+        else:
+            raise ValueError("SearchPipeline needs a platform or an explicit "
+                             "cost_model")
+        self.scfg = config if config is not None else engine.SearchConfig()
+        self.data_fn = data_fn
+        self.stages = list(stages) if stages is not None else default_stages()
+        self.callbacks = tuple(callbacks)
+
+    @classmethod
+    def fixed_mapping(cls, handle, assignments, platform=None, *,
+                      train_steps: int | None = None, **kw) -> "SearchPipeline":
+        """Pipeline evaluating a FIXED mapping (baselines)."""
+        return cls(handle, platform,
+                   stages=fixed_mapping_stages(assignments, train_steps), **kw)
+
+    # ------------------------------------------------------------------
+
+    def _build_context(self) -> PipelineContext:
+        scfg, spec = self.scfg, self.spec
+        handle = self.handle
+        plan = handle.plan()
+        apply_fn = lambda p, x, mode, tau: handle.apply(p, x, spec, mode, tau)
+        ocfg = adamw.AdamWConfig(lr=scfg.lr)
+        loss_fn = engine.make_loss_fn(apply_fn, plan, spec, self.cost_model,
+                                      scfg, handle.layers)
+
+        @partial(jax.jit, static_argnames=("mode",))
+        def train_step(params, opt, batch, tau, lr, mode):
+            (l, (task, reg)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, tau, mode)
+            # alpha gets its own lr by pre-scaling its grads
+            ratio = scfg.alpha_lr / scfg.lr
+
+            def scale(path, g):
+                if any(getattr(p, "key", None) == "alpha" for p in path):
+                    return g * ratio
+                return g
+            grads = jax.tree_util.tree_map_with_path(scale, grads)
+            params, opt, _ = adamw.update(grads, opt, params, ocfg, lr=lr)
+            return params, opt, l, task, reg
+
+        @partial(jax.jit, static_argnames=("mode",))
+        def eval_step(params, batch, tau, mode):
+            x, y = batch
+            logits = apply_fn(params, x, mode=mode, tau=tau)
+            return jnp.mean(jnp.argmax(logits, -1) == y)
+
+        return PipelineContext(handle=handle, spec=spec,
+                               cost_model=self.cost_model, scfg=scfg,
+                               data_fn=self.data_fn, plan=plan,
+                               train_step=train_step, eval_step=eval_step,
+                               apply_fn=apply_fn, ocfg=ocfg,
+                               platform_name=self.platform_name,
+                               callbacks=self.callbacks)
+
+    def run(self, init_params=None) -> PipelineResult:
+        ctx = self._build_context()
+        if init_params is None:
+            key = jax.random.PRNGKey(self.scfg.seed)
+            init_params = self.handle.init(key, self.spec)
+        state = PipelineState(params=init_params)
+        for stage in self.stages:
+            for cb in self.callbacks:
+                cb.on_stage_start(stage, state)
+            stage.run(ctx, state)
+            for cb in self.callbacks:
+                cb.on_stage_end(stage, state)
+        return PipelineResult(
+            params=state.params,
+            assignments=state.assignments if state.assignments is not None
+            else [],
+            counts=state.counts if state.counts is not None else [],
+            accuracy=state.accuracy if state.accuracy is not None else 0.0,
+            latency=state.latency if state.latency is not None else 0.0,
+            energy=state.energy if state.energy is not None else 0.0,
+            history=state.history, artifact=state.artifact)

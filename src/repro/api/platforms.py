@@ -1,0 +1,102 @@
+"""`Platform`: named bundles of precision domains + a cost model.
+
+A platform is everything hardware-specific that the search needs: the
+``PrecisionDomain`` tuple (which fixes the alpha dimensionality and the
+fake-quant formats) and a ``CostModel`` factory (which prices a channel
+split).  Registering a new accelerator is one ``Platform.register(...)``
+call instead of edits across cost_models/engine/examples/benchmarks.
+
+Built-ins:
+    "diana"                 DIANA SoC analytical models (paper Sec. III-C)
+    "diana_abstract"        Fig. 5 abstract model, P_idle = P_act
+    "diana_ideal_shutdown"  Fig. 5 abstract model, P_idle = 0
+    "tpu_v5e"               TPU roofline model (int8 vs bf16 MXU domains)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Sequence, Tuple
+
+from repro.core import quant
+from repro.core.cost_models import (AbstractCostModel, CostModel,
+                                    DianaCostModel, TPUCostModel)
+from repro.core.odimo import ODiMOSpec
+from repro.core.quant import PrecisionDomain
+
+_REGISTRY: Dict[str, "Platform"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    """A named accelerator target for the mapping search."""
+    name: str
+    domains: Tuple[PrecisionDomain, ...]
+    cost_model_factory: Callable[[], CostModel]
+    description: str = ""
+
+    def spec(self, **overrides) -> ODiMOSpec:
+        """ODiMOSpec for this platform; shared activations default to the
+        worst-case bit-width across domains (paper Sec. III-B)."""
+        kw = dict(domains=self.domains,
+                  act_bits=min(d.act_bits for d in self.domains))
+        kw.update(overrides)
+        return ODiMOSpec(**kw)
+
+    def cost_model(self, **kw) -> CostModel:
+        return self.cost_model_factory(**kw)
+
+    # ---- registry --------------------------------------------------------
+
+    @staticmethod
+    def register(platform: "Platform", overwrite: bool = False) -> "Platform":
+        if platform.name in _REGISTRY and not overwrite:
+            raise ValueError(
+                f"platform {platform.name!r} already registered "
+                f"(pass overwrite=True to replace)")
+        _REGISTRY[platform.name] = platform
+        return platform
+
+    @staticmethod
+    def get(name: "str | Platform") -> "Platform":
+        if isinstance(name, Platform):
+            return name
+        try:
+            return _REGISTRY[name]
+        except KeyError:
+            raise KeyError(f"unknown platform {name!r}; "
+                           f"registered: {sorted(_REGISTRY)}") from None
+
+    @staticmethod
+    def names() -> Sequence[str]:
+        return sorted(_REGISTRY)
+
+    @staticmethod
+    def unregister(name: str) -> None:
+        _REGISTRY.pop(name, None)
+
+
+Platform.register(Platform(
+    name="diana",
+    domains=tuple(quant.DIANA_DOMAINS),
+    cost_model_factory=DianaCostModel,
+    description="DIANA digital (8-bit) + AIMC (ternary), Sec. III-C models"))
+
+Platform.register(Platform(
+    name="diana_abstract",
+    domains=tuple(quant.DIANA_DOMAINS),
+    cost_model_factory=lambda **kw: AbstractCostModel(ideal_shutdown=False,
+                                                      **kw),
+    description="Fig. 5 abstract HW, P_idle = P_act"))
+
+Platform.register(Platform(
+    name="diana_ideal_shutdown",
+    domains=tuple(quant.DIANA_DOMAINS),
+    cost_model_factory=lambda **kw: AbstractCostModel(ideal_shutdown=True,
+                                                      **kw),
+    description="Fig. 5 abstract HW, P_idle = 0 (ideal shutdown)"))
+
+Platform.register(Platform(
+    name="tpu_v5e",
+    domains=tuple(quant.TPU_DOMAINS),
+    cost_model_factory=TPUCostModel,
+    description="TPU v5e roofline: int8 MXU @2x peak vs bf16"))

@@ -86,3 +86,34 @@ def sublayer_slices(bounds: List[int]):
         out.append((start, end))
         start = end
     return out
+
+
+# --------------------------------------------------------------------------
+# Mapping-artifact consumption (repro.api JSON schema; plain dicts here so
+# core never imports api)
+# --------------------------------------------------------------------------
+
+def assignments_from_artifact(artifact) -> List[np.ndarray]:
+    """Per-layer (C_out,) domain assignments from a mapping artifact
+    (a `repro.api.MappingArtifact` or its plain-dict/JSON form)."""
+    if hasattr(artifact, "to_dict"):
+        artifact = artifact.to_dict()
+    return [np.asarray(l["assignment"], dtype=np.int64)
+            for l in artifact["layers"]]
+
+
+def reorg_chain_from_artifact(layers: Sequence[ReorgLayer], artifact):
+    """Fig. 3 reorg pass driven by a stored mapping artifact.
+
+    ``layers`` is the sequential chain in artifact layer order; each layer's
+    ``assign`` is overridden by the artifact's assignment, then `reorg_chain`
+    runs with the artifact's domain count."""
+    if hasattr(artifact, "to_dict"):
+        artifact = artifact.to_dict()
+    assigns = assignments_from_artifact(artifact)
+    if len(assigns) != len(layers):
+        raise ValueError(f"artifact has {len(assigns)} layers, chain has "
+                         f"{len(layers)}")
+    layers = [dataclasses.replace(l, assign=a)
+              for l, a in zip(layers, assigns)]
+    return reorg_chain(layers, len(artifact["domains"]))

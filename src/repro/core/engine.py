@@ -3,24 +3,22 @@
     pretrain (fp) -> DNAS search (Eq. 2, tau annealed) -> discretize
     -> fine-tune (task loss only, exact formats) -> evaluate mapping
 
-Generic over a model façade (init/apply/plan from models/cnn.py or the LM
-zoo).  Jit-compiled steps; everything runs on CPU for the repro and on the
-production mesh via launch/train.py.
+The flow itself lives in `repro.api.pipeline` as composable stages; this
+module keeps the shared configuration/result types, the Eq. 2 loss builder,
+and thin back-compat wrappers (`run_odimo`, `evaluate_fixed_mapping`) over
+the legacy ``(init_fn, apply_fn, plan_fn)`` tuple façade.  New code should
+use `repro.api` directly.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import losses, odimo
-from repro.core.cost_models import CostModel, LayerGeometry
+from repro.core.cost_models import CostModel
 from repro.core.odimo import ODiMOSpec
-from repro.optim import adamw
 
 
 @dataclasses.dataclass
@@ -35,14 +33,6 @@ class SearchConfig:
     alpha_lr: float = 1e-2
     eval_batches: int = 8
     seed: int = 0
-
-
-def _split_params(params):
-    """Partition pytree leaves into (alpha, rest) for two-group optimization."""
-    def is_alpha(path):
-        return any(getattr(p, "key", None) == "alpha" for p in path)
-    flat = jax.tree_util.tree_flatten_with_path(params)[0]
-    return flat
 
 
 def make_loss_fn(apply_fn, plan, spec: ODiMOSpec, cost_model: CostModel,
@@ -83,166 +73,42 @@ class SearchResult:
     history: dict
 
 
+def _as_search_result(res) -> SearchResult:
+    return SearchResult(params=res.params, assignments=res.assignments,
+                        counts=res.counts, accuracy=res.accuracy,
+                        latency=res.latency, energy=res.energy,
+                        history=res.history)
+
+
 def run_odimo(model, cfg_model, spec: ODiMOSpec, cost_model: CostModel,
               scfg: SearchConfig, data_fn: Callable[[int, int], Any],
               verbose: bool = False, managed_fn=None) -> SearchResult:
-    """Full paper pipeline on a model façade.
+    """Back-compat wrapper: full paper pipeline on a legacy model façade.
 
-    model = (init_fn, apply_fn, plan_fn) with signatures from models/cnn.py;
-    data_fn(step, batch) -> (x, y).  ``managed_fn(params) -> [layer dicts]``
-    overrides the CNN-path lookup for non-CNN façades (e.g. MLP/transformer
-    stacks; see examples/odimo_tpu_domains.py).
+    ``model = (init_fn, apply_fn, plan_fn)`` with signatures from
+    models/cnn.py.  ``managed_fn(params) -> [layer dicts]`` overrides the
+    default plan-name path lookup for custom pytree layouts.  New code:
+    ``repro.api.SearchPipeline``.
     """
-    init_fn, apply_raw, plan_fn = model
-    plan = plan_fn(cfg_model)
-    geoms = [g for (_, g, _) in plan]
-    searchable = [s for (_, _, s) in plan]
-
-    if managed_fn is None:
-        from repro.models import cnn as _cnn
-        managed_fn = lambda p: _cnn.managed_layer_dicts(p, cfg_model)
-    managed_paths_fn = managed_fn
-
-    apply_fn = lambda p, x, mode, tau: apply_raw(p, x, cfg_model, spec, mode, tau)
-
-    key = jax.random.PRNGKey(scfg.seed)
-    params = init_fn(key, cfg_model, spec)
-
-    ocfg = adamw.AdamWConfig(lr=scfg.lr)
-    loss_fn = make_loss_fn(apply_fn, plan, spec, cost_model, scfg, managed_paths_fn)
-
-    @partial(jax.jit, static_argnames=("mode",))
-    def train_step(params, opt, batch, tau, lr, mode):
-        (l, (task, reg)), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, batch, tau, mode)
-        # alpha gets its own lr by pre-scaling its grads
-        ratio = scfg.alpha_lr / scfg.lr
-
-        def scale(path, g):
-            if any(getattr(p, "key", None) == "alpha" for p in path):
-                return g * ratio
-            return g
-        grads = jax.tree_util.tree_map_with_path(scale, grads)
-        params, opt, gn = adamw.update(grads, opt, params, ocfg, lr=lr)
-        return params, opt, l, task, reg
-
-    @partial(jax.jit, static_argnames=("mode",))
-    def eval_step(params, batch, tau, mode):
-        x, y = batch
-        logits = apply_fn(params, x, mode=mode, tau=tau)
-        return jnp.mean(jnp.argmax(logits, -1) == y)
-
-    history = {"pretrain": [], "search": [], "finetune": []}
-
-    # ---- phase 1: fp pretrain -------------------------------------------
-    opt = adamw.init(params, ocfg)
-    for step in range(scfg.pretrain_steps):
-        batch = data_fn(step, scfg.batch)
-        params, opt, l, task, _ = train_step(params, opt, batch, 1.0, scfg.lr, "fp")
-        if verbose and step % 100 == 0:
-            print(f"[pretrain {step}] loss={float(l):.4f}")
-        history["pretrain"].append(float(l))
-
-    # ---- phase 2: DNAS search (Eq. 2) -----------------------------------
-    opt = adamw.init(params, ocfg)
-    for step in range(scfg.search_steps):
-        tau = float(odimo.tau_schedule(step, scfg.search_steps, spec))
-        batch = data_fn(10_000 + step, scfg.batch)
-        params, opt, l, task, reg = train_step(params, opt, batch, tau, scfg.lr, "search")
-        if verbose and step % 100 == 0:
-            print(f"[search {step}] loss={float(l):.4f} task={float(task):.4f} "
-                  f"reg={float(reg):.3e} tau={tau:.3f}")
-        history["search"].append((float(task), float(reg)))
-
-    # ---- phase 3: discretize --------------------------------------------
-    layer_dicts = managed_paths_fn(params)
-    assignments, counts = [], []
-    for d, s in zip(layer_dicts, searchable):
-        if s and "odimo" in d:
-            a = np.asarray(odimo.assignment(d["odimo"]))
-        else:
-            a = np.zeros(d["w"].shape[-1], dtype=np.int64)  # pinned: domain 0
-        assignments.append(a)
-        counts.append(np.asarray([int((a == i).sum()) for i in range(spec.n_domains)]))
-
-    # ---- phase 4: fine-tune (task loss only, exact formats) --------------
-    opt = adamw.init(params, ocfg)
-    for step in range(scfg.finetune_steps):
-        batch = data_fn(20_000 + step, scfg.batch)
-        params, opt, l, task, _ = train_step(params, opt, batch, 1.0,
-                                             scfg.lr * 0.3, "finetune")
-        history["finetune"].append(float(l))
-
-    # ---- evaluate --------------------------------------------------------
-    accs = []
-    for b in range(scfg.eval_batches):
-        batch = data_fn(90_000 + b, scfg.batch)
-        accs.append(float(eval_step(params, batch, 1.0, "finetune")))
-    acc = float(np.mean(accs))
-
-    lat = float(losses.exact_latency(cost_model, geoms, counts))
-    en = float(losses.exact_energy(cost_model, geoms, counts))
-    return SearchResult(params=params, assignments=assignments, counts=counts,
-                        accuracy=acc, latency=lat, energy=en, history=history)
+    from repro.api import ModelHandle, SearchPipeline, VerboseCallback
+    handle = ModelHandle.from_legacy(model, cfg_model, managed_fn=managed_fn)
+    pipe = SearchPipeline(handle, spec=spec, cost_model=cost_model,
+                          config=scfg, data_fn=data_fn,
+                          callbacks=(VerboseCallback(),) if verbose else ())
+    return _as_search_result(pipe.run())
 
 
 def evaluate_fixed_mapping(model, cfg_model, spec, cost_model: CostModel,
                            scfg: SearchConfig, data_fn,
                            assignments: List[np.ndarray],
-                           train_steps: int | None = None) -> SearchResult:
-    """Train a model with a FIXED channel->domain mapping (the baselines)."""
-    init_fn, apply_raw, plan_fn = model
-    plan = plan_fn(cfg_model)
-    geoms = [g for (_, g, _) in plan]
-    apply_fn = lambda p, x, mode, tau: apply_raw(p, x, cfg_model, spec, mode, tau)
-
-    key = jax.random.PRNGKey(scfg.seed)
-    params = init_fn(key, cfg_model, spec)
-
-    # overwrite alpha with one-hot of the fixed assignment (large margin)
-    from repro.models import cnn as _cnn
-    layer_dicts = _cnn.managed_layer_dicts(params, cfg_model)
-    for d, a in zip(layer_dicts, assignments):
-        onehot = jnp.asarray(np.eye(spec.n_domains)[a].T * 10.0)  # (N, C)
-        d["odimo"]["alpha"] = onehot
-
-    ocfg = adamw.AdamWConfig(lr=scfg.lr)
-    loss_fn = make_loss_fn(apply_fn, plan, spec, cost_model, scfg,
-                           lambda p: _cnn.managed_layer_dicts(p, cfg_model))
-
-    @jax.jit
-    def ft_step(params, opt, batch, lr):
-        def lf(p):
-            x, y = batch
-            logits = apply_fn(p, x, mode="finetune", tau=1.0)
-            return losses.cross_entropy(logits, y)
-        l, grads = jax.value_and_grad(lf)(params)
-        # freeze alpha during fixed-mapping training
-        grads = jax.tree_util.tree_map_with_path(
-            lambda path, g: (jnp.zeros_like(g)
-                             if any(getattr(q, "key", None) == "alpha" for q in path)
-                             else g), grads)
-        params, opt, _ = adamw.update(grads, opt, params, ocfg, lr=lr)
-        return params, opt, l
-
-    @jax.jit
-    def eval_step(params, batch):
-        x, y = batch
-        logits = apply_fn(params, x, mode="finetune", tau=1.0)
-        return jnp.mean(jnp.argmax(logits, -1) == y)
-
-    steps = train_steps if train_steps is not None else (
-        scfg.pretrain_steps + scfg.finetune_steps)
-    opt = adamw.init(params, ocfg)
-    for step in range(steps):
-        params, opt, l = ft_step(params, opt, data_fn(step, scfg.batch), scfg.lr)
-
-    accs = [float(eval_step(params, data_fn(90_000 + b, scfg.batch)))
-            for b in range(scfg.eval_batches)]
-    counts = [np.asarray([int((a == i).sum()) for i in range(spec.n_domains)])
-              for a in assignments]
-    lat = float(losses.exact_latency(cost_model, geoms, counts))
-    en = float(losses.exact_energy(cost_model, geoms, counts))
-    return SearchResult(params=params, assignments=list(assignments),
-                        counts=counts, accuracy=float(np.mean(accs)),
-                        latency=lat, energy=en, history={})
+                           train_steps: int | None = None,
+                           managed_fn=None) -> SearchResult:
+    """Back-compat wrapper: train with a FIXED channel->domain mapping (the
+    baselines).  New code: ``repro.api.SearchPipeline.fixed_mapping``."""
+    from repro.api import ModelHandle, SearchPipeline
+    handle = ModelHandle.from_legacy(model, cfg_model, managed_fn=managed_fn)
+    pipe = SearchPipeline.fixed_mapping(handle, assignments,
+                                        train_steps=train_steps, spec=spec,
+                                        cost_model=cost_model, config=scfg,
+                                        data_fn=data_fn)
+    return _as_search_result(pipe.run())

@@ -1,0 +1,6 @@
+"""JAX version compatibility for the Pallas TPU kernels."""
+from jax.experimental.pallas import tpu as _pltpu
+
+# Renamed TPUCompilerParams -> CompilerParams across JAX releases.
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or \
+    _pltpu.TPUCompilerParams

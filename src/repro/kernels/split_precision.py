@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 128, 128, 512
 
 
@@ -81,7 +83,7 @@ def split_precision_matmul(x, x_q, sx, w_bf16, w_q, sw, boundary, *,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32),
                         pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, x_q, w_bf16, w_q, sw.reshape(1, n), sx.reshape(1))

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 128, 128, 512
 
 
@@ -51,7 +53,7 @@ def ternary_matmul(x_q, w_t, sx, sw, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_q, w_t, sw.reshape(1, n), sx.reshape(1))

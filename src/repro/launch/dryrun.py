@@ -176,6 +176,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older JAX: one dict per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     colls = parse_collectives(hlo)
 

@@ -8,6 +8,7 @@ Example (CPU, reduced model):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -16,6 +17,26 @@ import numpy as np
 
 from repro.configs import base as cfgbase
 from repro.models import transformer as T
+
+
+def apply_mapping_artifact(cfg, artifact):
+    """Pick serving dtypes from a `repro.api.MappingArtifact`.
+
+    The artifact's majority precision domain (by assigned channels) decides
+    the weight stream: a <=8-bit majority serves int8 projections; an int8
+    activation majority additionally quantizes the KV cache.  Returns the
+    updated cfg and the majority domain dict.
+    """
+    fractions = artifact.domain_channel_fractions()
+    dom = artifact.domains[int(np.argmax(fractions))]
+    updates = {}
+    if dom["weight_bits"] <= 8:
+        updates["serve_weight_dtype"] = "int8"
+    if dom.get("act_bits", 16) <= 8:
+        updates["kv_cache_dtype"] = "int8"
+    if updates:
+        cfg = dataclasses.replace(cfg, **updates)
+    return cfg, dom
 
 
 def sample_greedy(logits):
@@ -57,12 +78,22 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mapping", default=None,
+                    help="mapping artifact JSON (repro.api schema); the "
+                         "majority domain picks the serving dtypes")
     args = ap.parse_args(argv)
 
     cfgbase.load_all()
     cfg = cfgbase.get(args.arch)
     if args.reduce:
         cfg = cfgbase.reduce_for_smoke(cfg)
+    if args.mapping:
+        from repro.api import MappingArtifact
+        art = MappingArtifact.load(args.mapping)
+        cfg, dom = apply_mapping_artifact(cfg, art)
+        print(f"[serve] mapping {args.mapping}: model={art.model} "
+              f"platform={art.platform} majority domain={dom['name']} "
+              f"-> weights={cfg.serve_weight_dtype} kv={cfg.kv_cache_dtype}")
 
     key = jax.random.PRNGKey(args.seed)
     params = T.init_lm(key, cfg)

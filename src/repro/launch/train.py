@@ -32,6 +32,45 @@ from repro.models import transformer as T
 from repro.optim import adamw, compression
 
 
+def emit_static_mapping(params, cfg, platform, out_path, max_cout=512):
+    """Write a `repro.api` mapping artifact for the trained LM's 2-D weight
+    matrices: per-layer min-cost static channel split (paper Sec. IV
+    baselines) under the named platform's cost model.
+
+    Layer names are params-pytree paths in flatten order (not network
+    order), so the artifact drives serving-dtype selection and accounting
+    (``serve.py --mapping``), NOT the Fig. 3 reorg pass.  Layers wider than
+    ``max_cout`` output channels are pinned to domain 0 — the exhaustive
+    per-layer split search is O(C_out) cost evaluations.
+    """
+    from repro.api import MappingArtifact, Platform
+    from repro.core import baselines
+    from repro.core.cost_models import LayerGeometry
+
+    plat = Platform.get(platform)
+    cm, spec = plat.cost_model(), plat.spec()
+    names, geoms, searchable = [], [], []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        if getattr(leaf, "ndim", 0) != 2:
+            continue
+        parts = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        if parts and parts[-1] == "w":   # drop the leaf key: name the layer
+            parts = parts[:-1]
+        name = "/".join(parts)
+        names.append(name)
+        geoms.append(LayerGeometry(c_in=leaf.shape[0], c_out=leaf.shape[1]))
+        searchable.append(leaf.shape[1] <= max_cout)
+    assigns = baselines.min_cost(cm, geoms, "latency", searchable)
+    counts = baselines.counts_from_assignments(assigns, spec.n_domains)
+    plan = [(n, g, s) for n, g, s in zip(names, geoms, searchable)]
+    art = MappingArtifact.from_search(cfg.name, spec, plan, assigns, counts,
+                                      platform=plat.name, objective="latency")
+    art.save(out_path)
+    print(f"[train] wrote mapping artifact ({len(names)} layers, "
+          f"platform={plat.name}) -> {out_path}")
+    return art
+
+
 def make_step(cfg, ocfg, compress: bool):
     def train_step(params, opt_state, residual, batch, lr):
         loss, grads = jax.value_and_grad(
@@ -61,12 +100,20 @@ def main(argv=None):
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--platform", default="tpu_v5e",
+                    help="repro.api platform name for --emit-mapping")
+    ap.add_argument("--emit-mapping", default=None,
+                    help="write a static min-cost mapping artifact (JSON) "
+                         "for the trained weights to this path")
     args = ap.parse_args(argv)
 
     cfgbase.load_all()
     cfg = cfgbase.get(args.arch)
     if args.reduce:
         cfg = cfgbase.reduce_for_smoke(cfg)
+    if args.emit_mapping:
+        from repro.api import Platform
+        Platform.get(args.platform)   # unknown name fails before training
 
     ocfg = adamw.AdamWConfig(lr=args.lr, weight_decay=0.01)
     params = T.init_lm(jax.random.PRNGKey(args.seed), cfg)
@@ -125,6 +172,8 @@ def main(argv=None):
     if saver:
         saver.save(args.steps, (params, opt_state), {"step": args.steps})
         saver.wait()
+    if args.emit_mapping:
+        emit_static_mapping(params, cfg, args.platform, args.emit_mapping)
     print(f"[train] done. first loss={losses[0]:.4f} last={losses[-1]:.4f}")
     return losses
 

@@ -192,10 +192,7 @@ def get_model(cfg: CNNConfig):
 
 
 def get_by_path(params, path: str):
-    node = params
-    for part in path.split("/"):
-        node = node[int(part)] if isinstance(node, list) else node[part]
-    return node
+    return mg.get_by_path(params, path)
 
 
 def managed_layer_dicts(params, cfg: CNNConfig):

@@ -1,0 +1,135 @@
+"""Small ODiMO-managed façades beyond the paper CNNs: an MLP stack and a
+transformer-encoder classifier, both built from managed Dense layers
+(``repro.models.managed``) so every weight matrix is channel-wise searchable.
+
+Both follow the standard façade contract consumed by
+`repro.api.ModelHandle.from_legacy`:
+
+    init(key, cfg, spec)                      -> params pytree
+    apply(params, x, cfg, spec, mode, tau)    -> logits
+    plan(cfg)                                 -> [(name, geometry, searchable)]
+
+Plan names are params-pytree paths, so the default managed-layer lookup of
+`ModelHandle` works without a custom ``managed_layers``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_models import LayerGeometry
+from repro.models import managed as mg
+
+
+# --------------------------------------------------------------------------
+# MLP over flattened inputs (the TPU-domains example model)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    in_dim: int
+    widths: Tuple[int, ...]
+    n_classes: int
+    name: str = "mlp"
+
+
+def mlp_init(key, cfg: MLPConfig, spec):
+    ks = jax.random.split(key, len(cfg.widths) + 1)
+    dims = [cfg.in_dim] + list(cfg.widths)
+    layers = [mg.init_dense(ks[i], dims[i], dims[i + 1], spec)
+              for i in range(len(cfg.widths))]
+    head = mg.init_dense(ks[-1], cfg.widths[-1], cfg.n_classes, spec)
+    return {"layers": layers, "head": head}
+
+
+def mlp_apply(p, x, cfg: MLPConfig, spec=None, mode="fp", tau=1.0):
+    h = x.reshape(x.shape[0], -1)
+    for lp in p["layers"]:
+        h = jax.nn.relu(mg.dense(lp, h, spec, mode, tau))
+    return mg.dense(p["head"], h, spec, mode, tau)
+
+
+def mlp_plan(cfg: MLPConfig) -> List[Tuple[str, LayerGeometry, bool]]:
+    dims = [cfg.in_dim] + list(cfg.widths)
+    plan = [(f"layers/{i}", mg.dense_geometry(dims[i], dims[i + 1]), True)
+            for i in range(len(cfg.widths))]
+    plan.append(("head", mg.dense_geometry(cfg.widths[-1], cfg.n_classes),
+                 True))
+    return plan
+
+
+# --------------------------------------------------------------------------
+# Transformer-encoder classifier (patchify -> blocks -> mean-pool -> head)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    in_dim: int                 # per-token input dim after patchify
+    n_tokens: int
+    d_model: int
+    n_layers: int
+    n_classes: int
+    n_heads: int = 4
+    ffn_mult: int = 2
+    name: str = "encoder"
+
+
+def _block_init(key, cfg: EncoderConfig, spec):
+    ks = jax.random.split(key, 4)
+    d, f = cfg.d_model, cfg.d_model * cfg.ffn_mult
+    return {
+        "qkv": mg.init_dense(ks[0], d, 3 * d, spec),
+        "proj": mg.init_dense(ks[1], d, d, spec),
+        "ffn1": mg.init_dense(ks[2], d, f, spec),
+        "ffn2": mg.init_dense(ks[3], f, d, spec),
+    }
+
+
+def encoder_init(key, cfg: EncoderConfig, spec):
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    return {
+        "embed": mg.init_dense(ks[0], cfg.in_dim, cfg.d_model, spec),
+        "blocks": [_block_init(ks[1 + i], cfg, spec)
+                   for i in range(cfg.n_layers)],
+        "head": mg.init_dense(ks[-1], cfg.d_model, cfg.n_classes, spec),
+    }
+
+
+def _attention(h, qkv, cfg: EncoderConfig):
+    B, S, D = h.shape
+    hd = D // cfg.n_heads
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    shape = (B, S, cfg.n_heads, hd)
+    q, k, v = (t.reshape(shape).transpose(0, 2, 1, 3) for t in (q, k, v))
+    att = jax.nn.softmax(q @ k.transpose(0, 1, 3, 2) / hd ** 0.5, axis=-1)
+    return (att @ v).transpose(0, 2, 1, 3).reshape(B, S, D)
+
+
+def _tokens(x, cfg: EncoderConfig):
+    """Flatten any input into (B, n_tokens, in_dim) patch tokens."""
+    return x.reshape(x.shape[0], cfg.n_tokens, cfg.in_dim)
+
+
+def encoder_apply(p, x, cfg: EncoderConfig, spec=None, mode="fp", tau=1.0):
+    h = mg.dense(p["embed"], _tokens(x, cfg), spec, mode, tau)
+    for blk in p["blocks"]:
+        a = _attention(h, mg.dense(blk["qkv"], h, spec, mode, tau), cfg)
+        h = h + mg.dense(blk["proj"], a, spec, mode, tau)
+        f = jax.nn.relu(mg.dense(blk["ffn1"], h, spec, mode, tau))
+        h = h + mg.dense(blk["ffn2"], f, spec, mode, tau)
+    return mg.dense(p["head"], jnp.mean(h, axis=1), spec, mode, tau)
+
+
+def encoder_plan(cfg: EncoderConfig) -> List[Tuple[str, LayerGeometry, bool]]:
+    d, f = cfg.d_model, cfg.d_model * cfg.ffn_mult
+    plan = [("embed", mg.dense_geometry(cfg.in_dim, d), True)]
+    for i in range(cfg.n_layers):
+        plan += [(f"blocks/{i}/qkv", mg.dense_geometry(d, 3 * d), True),
+                 (f"blocks/{i}/proj", mg.dense_geometry(d, d), True),
+                 (f"blocks/{i}/ffn1", mg.dense_geometry(d, f), True),
+                 (f"blocks/{i}/ffn2", mg.dense_geometry(f, d), True)]
+    plan.append(("head", mg.dense_geometry(d, cfg.n_classes), True))
+    return plan

@@ -94,6 +94,14 @@ def dense(p: dict, x: jax.Array, spec: ODiMOSpec | None = None,
     return y
 
 
+def get_by_path(params, path: str):
+    """Resolve ``"a/0/b"`` into ``params["a"][0]["b"]`` (plan-name lookup)."""
+    node = params
+    for part in path.split("/"):
+        node = node[int(part)] if isinstance(node, list) else node[part]
+    return node
+
+
 def conv_geometry(kh, kw, c_in, c_out, out_hw, groups=1) -> LayerGeometry:
     return LayerGeometry(c_in=c_in, c_out=c_out, fx=kw, fy=kh,
                          ox=out_hw[1], oy=out_hw[0], groups=groups)

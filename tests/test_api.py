@@ -1,0 +1,335 @@
+"""Tests for the first-class mapping API (`repro.api`): Platform registry
+round-trip, pipeline-vs-legacy bit-for-bit equivalence, mapping-artifact
+serialization and its consumers."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (MappingArtifact, ModelHandle, Platform, SearchConfig,
+                       SearchPipeline, cnn_handle, mlp_handle,
+                       transformer_handle)
+from repro.core import baselines as BL
+from repro.core import discretize, engine
+from repro.core.cost_models import AbstractCostModel
+from repro.data.pipeline import ImageTaskConfig, image_batch
+from repro.models import cnn
+
+TINY = SearchConfig(lam=1e-6, objective="latency", pretrain_steps=4,
+                    search_steps=6, finetune_steps=3, batch=8, eval_batches=2)
+
+
+def _data_fn(cfg):
+    task = ImageTaskConfig(n_classes=cfg.n_classes, img_hw=cfg.img_hw)
+    return lambda step, batch: image_batch(task, step, batch)
+
+
+# --------------------------------------------------------------------------
+# Platform registry
+# --------------------------------------------------------------------------
+
+def test_platform_registry_roundtrip():
+    from repro.core.quant import DIANA_DOMAINS
+    plat = Platform(name="_test_soc", domains=tuple(DIANA_DOMAINS),
+                    cost_model_factory=lambda: AbstractCostModel(True))
+    try:
+        Platform.register(plat)
+        assert Platform.get("_test_soc") is plat
+        assert "_test_soc" in Platform.names()
+        spec = plat.spec()
+        assert spec.domains == tuple(DIANA_DOMAINS)
+        assert spec.act_bits == 7  # worst case of (8, 7)
+        assert plat.cost_model().ideal_shutdown
+        # duplicate registration must be an explicit error...
+        with pytest.raises(ValueError, match="already registered"):
+            Platform.register(plat)
+        # ...unless overwrite is requested
+        Platform.register(plat, overwrite=True)
+    finally:
+        Platform.unregister("_test_soc")
+    assert "_test_soc" not in Platform.names()
+    with pytest.raises(KeyError, match="unknown platform"):
+        Platform.get("_test_soc")
+
+
+def test_builtin_platforms_present():
+    for name in ("diana", "diana_abstract", "diana_ideal_shutdown",
+                 "tpu_v5e"):
+        plat = Platform.get(name)
+        assert plat.cost_model().latency is not None
+        assert plat.spec().n_domains == len(plat.domains)
+
+
+# --------------------------------------------------------------------------
+# Pipeline vs legacy engine: bit-for-bit
+# --------------------------------------------------------------------------
+
+def _legacy_run_odimo(model, cfg_model, spec, cost_model, scfg, data_fn):
+    """Verbatim copy of the pre-refactor `engine.run_odimo` loop (seed
+    revision), kept here so the equivalence test pins the HISTORICAL
+    semantics independently of the pipeline implementation."""
+    import jax.numpy as jnp
+    from functools import partial
+    from repro.core import losses, odimo
+    from repro.optim import adamw
+
+    init_fn, apply_raw, plan_fn = model
+    plan = plan_fn(cfg_model)
+    geoms = [g for (_, g, _) in plan]
+    searchable = [s for (_, _, s) in plan]
+    managed_paths_fn = lambda p: cnn.managed_layer_dicts(p, cfg_model)
+    apply_fn = lambda p, x, mode, tau: apply_raw(p, x, cfg_model, spec, mode,
+                                                 tau)
+    key = jax.random.PRNGKey(scfg.seed)
+    params = init_fn(key, cfg_model, spec)
+    ocfg = adamw.AdamWConfig(lr=scfg.lr)
+
+    def loss_fn(params, batch, tau, mode):
+        x, y = batch
+        logits = apply_fn(params, x, mode=mode, tau=tau)
+        task = losses.cross_entropy(logits, y)
+        if mode != "search":
+            return task, (task, 0.0)
+        layer_dicts = managed_paths_fn(params)
+        abars, g_s = [], []
+        for d, geom, s in zip(layer_dicts, geoms, searchable):
+            if not s or "odimo" not in d:
+                continue
+            abars.append(odimo.alpha_bar(d["odimo"]["alpha"], tau))
+            g_s.append(geom)
+        if scfg.objective == "latency":
+            reg = losses.latency_loss(cost_model, g_s, abars)
+        else:
+            reg = losses.energy_loss(cost_model, g_s, abars)
+        return task + scfg.lam * reg, (task, reg)
+
+    @partial(jax.jit, static_argnames=("mode",))
+    def train_step(params, opt, batch, tau, lr, mode):
+        (l, (task, reg)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, tau, mode)
+        ratio = scfg.alpha_lr / scfg.lr
+
+        def scale(path, g):
+            if any(getattr(p, "key", None) == "alpha" for p in path):
+                return g * ratio
+            return g
+        grads = jax.tree_util.tree_map_with_path(scale, grads)
+        params, opt, gn = adamw.update(grads, opt, params, ocfg, lr=lr)
+        return params, opt, l, task, reg
+
+    @partial(jax.jit, static_argnames=("mode",))
+    def eval_step(params, batch, tau, mode):
+        x, y = batch
+        logits = apply_fn(params, x, mode=mode, tau=tau)
+        return jnp.mean(jnp.argmax(logits, -1) == y)
+
+    opt = adamw.init(params, ocfg)
+    for step in range(scfg.pretrain_steps):
+        params, opt, *_ = train_step(params, opt, data_fn(step, scfg.batch),
+                                     1.0, scfg.lr, "fp")
+    opt = adamw.init(params, ocfg)
+    for step in range(scfg.search_steps):
+        tau = float(odimo.tau_schedule(step, scfg.search_steps, spec))
+        params, opt, *_ = train_step(params, opt,
+                                     data_fn(10_000 + step, scfg.batch),
+                                     tau, scfg.lr, "search")
+    layer_dicts = managed_paths_fn(params)
+    assignments, counts = [], []
+    for d, s in zip(layer_dicts, searchable):
+        if s and "odimo" in d:
+            a = np.asarray(odimo.assignment(d["odimo"]))
+        else:
+            a = np.zeros(d["w"].shape[-1], dtype=np.int64)
+        assignments.append(a)
+        counts.append(np.asarray([int((a == i).sum())
+                                  for i in range(spec.n_domains)]))
+    opt = adamw.init(params, ocfg)
+    for step in range(scfg.finetune_steps):
+        params, opt, *_ = train_step(params, opt,
+                                     data_fn(20_000 + step, scfg.batch),
+                                     1.0, scfg.lr * 0.3, "finetune")
+    accs = [float(eval_step(params, data_fn(90_000 + b, scfg.batch), 1.0,
+                            "finetune"))
+            for b in range(scfg.eval_batches)]
+    lat = float(losses.exact_latency(cost_model, geoms, counts))
+    en = float(losses.exact_energy(cost_model, geoms, counts))
+    return assignments, float(np.mean(accs)), lat, en
+
+
+def test_pipeline_reproduces_legacy_run_odimo():
+    """`SearchPipeline` must agree bit-for-bit (assignments, accuracy,
+    latency, energy) with the pre-refactor engine loop on a fixed seed."""
+    cfg = cnn.RESNET20_TINY
+    data_fn = _data_fn(cfg)
+    plat = Platform.get("diana")
+
+    res_pipe = SearchPipeline(cnn_handle(cfg), "diana", config=TINY,
+                              data_fn=data_fn).run()
+    assigns, acc, lat, en = _legacy_run_odimo(
+        cnn.get_model(cfg), cfg, plat.spec(), plat.cost_model(), TINY,
+        data_fn)
+
+    assert len(res_pipe.assignments) == len(assigns)
+    for a, b in zip(res_pipe.assignments, assigns):
+        np.testing.assert_array_equal(a, b)
+    assert res_pipe.accuracy == acc
+    assert res_pipe.latency == lat
+    assert res_pipe.energy == en
+    # the pipeline additionally emits the serializable artifact
+    assert res_pipe.artifact is not None
+    assert res_pipe.artifact.metrics["accuracy"] == res_pipe.accuracy
+    # and the back-compat wrapper routes through the same pipeline
+    res_wrap = engine.run_odimo(cnn.get_model(cfg), cfg, plat.spec(),
+                                plat.cost_model(), TINY, data_fn)
+    assert res_wrap.accuracy == acc and res_wrap.latency == lat
+
+
+def test_fixed_mapping_matches_legacy_wrapper():
+    cfg = cnn.RESNET20_TINY
+    data_fn = _data_fn(cfg)
+    handle = cnn_handle(cfg)
+    assigns = BL.io8_backbone_ternary(handle.geometries())
+    plat = Platform.get("diana")
+    scfg = SearchConfig(pretrain_steps=2, finetune_steps=2, batch=8,
+                        eval_batches=2)
+
+    res_pipe = SearchPipeline.fixed_mapping(handle, assigns, "diana",
+                                            config=scfg,
+                                            data_fn=data_fn).run()
+    res_legacy = engine.evaluate_fixed_mapping(cnn.get_model(cfg), cfg,
+                                               plat.spec(), plat.cost_model(),
+                                               scfg, data_fn, assigns)
+    assert res_pipe.accuracy == res_legacy.accuracy
+    assert res_pipe.latency == res_legacy.latency
+    assert res_pipe.energy == res_legacy.energy
+
+
+def test_with_assignments_is_functional():
+    """Alpha injection must not mutate the input pytree (the old code relied
+    on dict aliasing and hardcoded the CNN path)."""
+    cfg = cnn.RESNET20_TINY
+    handle = cnn_handle(cfg)
+    spec = Platform.get("diana").spec()
+    params = handle.init(jax.random.PRNGKey(0), spec)
+    before = np.asarray(handle.layers(params)[0]["odimo"]["alpha"]).copy()
+    assigns = BL.all_ternary(handle.geometries())
+    mapped = handle.with_assignments(params, assigns, spec.n_domains)
+    np.testing.assert_array_equal(
+        np.asarray(handle.layers(params)[0]["odimo"]["alpha"]), before)
+    a0 = np.asarray(handle.layers(mapped)[0]["odimo"]["alpha"])
+    np.testing.assert_array_equal(a0.argmax(axis=0), assigns[0])
+    # a partial assignment list is an explicit error, not silent truncation
+    with pytest.raises(ValueError, match="assignments"):
+        handle.with_assignments(params, assigns[:-1], spec.n_domains)
+
+
+# --------------------------------------------------------------------------
+# Handles
+# --------------------------------------------------------------------------
+
+def test_legacy_tuple_handle_path_lookup():
+    """Default managed-layer lookup resolves plan names as pytree paths — no
+    CNN-specific fallback anywhere."""
+    cfg = cnn.RESNET20_TINY
+    handle = ModelHandle.from_legacy(cnn.get_model(cfg), cfg)
+    spec = Platform.get("diana").spec()
+    params = handle.init(jax.random.PRNGKey(0), spec)
+    layers = handle.layers(params)
+    assert len(layers) == len(handle.plan())
+    assert all("w" in d for d in layers)
+    expected = cnn.managed_layer_dicts(params, cfg)
+    assert all(a is b for a, b in zip(layers, expected))
+
+
+@pytest.mark.parametrize("make_handle", [
+    lambda: mlp_handle(in_dim=768, widths=(16, 16), n_classes=10),
+    lambda: transformer_handle(in_dim=48, n_tokens=16, d_model=16,
+                               n_layers=1, n_classes=10, n_heads=2),
+])
+def test_facade_handles_run_end_to_end(make_handle):
+    cfg = cnn.RESNET20_TINY  # only used for the synthetic image geometry
+    handle = make_handle()
+    res = SearchPipeline(handle, "tpu_v5e", config=TINY,
+                         data_fn=_data_fn(cfg)).run()
+    assert len(res.assignments) == len(handle.plan())
+    assert res.artifact.platform == "tpu_v5e"
+    assert 0.0 <= res.accuracy <= 1.0 and res.latency > 0
+
+
+# --------------------------------------------------------------------------
+# Mapping artifact + consumers
+# --------------------------------------------------------------------------
+
+def _tiny_artifact():
+    handle = mlp_handle(in_dim=8, widths=(6, 4), n_classes=3)
+    spec = Platform.get("diana").spec()
+    assigns = [np.array([0, 1, 0, 1, 0, 1]), np.array([1, 1, 0, 0]),
+               np.array([0, 0, 0])]
+    counts = BL.counts_from_assignments(assigns, 2)
+    return handle, MappingArtifact.from_search(
+        "tiny_mlp", spec, handle.plan(), assigns, counts, platform="diana",
+        objective="latency", lam=1e-6, seed=0,
+        metrics=dict(accuracy=0.9, latency=1.0, energy=2.0))
+
+
+def test_artifact_json_roundtrip(tmp_path):
+    _, art = _tiny_artifact()
+    p = art.save(tmp_path / "mapping.json")
+    loaded = MappingArtifact.load(p)
+    assert loaded.to_dict() == art.to_dict()
+    doc = json.loads(p.read_text())
+    assert doc["schema_version"] == 1
+    assert doc["layers"][0]["assignment"] == [0, 1, 0, 1, 0, 1]
+    assert doc["domains"][0]["name"] == "digital"
+    for a, b in zip(loaded.assignments(), art.assignments()):
+        np.testing.assert_array_equal(a, b)
+    # future schema versions are rejected, not silently misread
+    doc["schema_version"] = 99
+    with pytest.raises(ValueError, match="newer"):
+        MappingArtifact.from_dict(doc)
+
+
+def test_discretize_consumes_artifact():
+    """`reorg_chain_from_artifact` runs the Fig. 3 pass off the stored
+    assignment: same-domain channels become contiguous and the next layer's
+    input axis is permuted consistently."""
+    handle, art = _tiny_artifact()
+    spec = Platform.get("diana").spec()
+    params = handle.init(jax.random.PRNGKey(0), spec)
+    dicts = handle.layers(params)
+    layers = [discretize.ReorgLayer(w=d["w"], b=d.get("b"),
+                                    assign=np.zeros(d["w"].shape[-1],
+                                                    dtype=np.int64))
+              for d in dicts]
+    new_layers, bounds = discretize.reorg_chain_from_artifact(layers,
+                                                              art.to_dict())
+    # first layer's channels are now grouped (0,0,0, 1,1,1)
+    np.testing.assert_array_equal(new_layers[0].assign,
+                                  np.array([0, 0, 0, 1, 1, 1]))
+    assert bounds[0] == [3, 6]
+    # the reorg is a pure permutation: forward pass is preserved
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8))
+    def fwd(ls):
+        h = x
+        for l in ls:
+            h = h @ l.w + l.b
+        return h
+    np.testing.assert_allclose(np.asarray(fwd(layers)),
+                               np.asarray(fwd(new_layers)), rtol=1e-5)
+    # length mismatch is an explicit error
+    with pytest.raises(ValueError, match="layers"):
+        discretize.reorg_chain_from_artifact(layers[:-1], art.to_dict())
+
+
+def test_serve_consumes_artifact():
+    from repro.configs import base as cfgbase
+    from repro.launch import serve
+    cfgbase.load_all()
+    cfg = cfgbase.reduce_for_smoke(cfgbase.get("yi-9b"))
+    _, art = _tiny_artifact()
+    # majority domain of the tiny artifact is digital 8-bit/8-bit acts
+    new_cfg, dom = serve.apply_mapping_artifact(cfg, art)
+    assert dom["name"] == "digital"
+    assert new_cfg.serve_weight_dtype == "int8"
+    assert new_cfg.kv_cache_dtype == "int8"

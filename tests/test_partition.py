@@ -2,6 +2,7 @@
 latency-balanced sizing."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional test dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import partition as P

@@ -39,23 +39,21 @@ def test_serve_driver_generates():
 
 def test_odimo_lambda_monotone_cost():
     """Core paper behavior: larger lambda -> cheaper discovered mapping."""
-    from repro.core import engine
-    from repro.core.cost_models import AbstractCostModel
-    from repro.core.odimo import ODiMOSpec
+    from repro.api import SearchConfig, SearchPipeline, cnn_handle
     from repro.data.pipeline import ImageTaskConfig, image_batch
     from repro.models import cnn
 
     cfg = cnn.RESNET20_TINY
     task = ImageTaskConfig(n_classes=cfg.n_classes, img_hw=cfg.img_hw)
     data_fn = lambda step, batch: image_batch(task, step, batch)
-    cm = AbstractCostModel(ideal_shutdown=True)
+    handle = cnn_handle(cfg)
     costs = []
     for lam in (1e-9, 1e-4):
-        scfg = engine.SearchConfig(lam=lam, objective="energy",
-                                   pretrain_steps=20, search_steps=50,
-                                   finetune_steps=10, batch=16,
-                                   eval_batches=2)
-        res = engine.run_odimo(cnn.get_model(cfg), cfg, ODiMOSpec(), cm,
-                               scfg, data_fn)
+        scfg = SearchConfig(lam=lam, objective="energy",
+                            pretrain_steps=20, search_steps=50,
+                            finetune_steps=10, batch=16,
+                            eval_batches=2)
+        res = SearchPipeline(handle, "diana_ideal_shutdown", config=scfg,
+                             data_fn=data_fn).run()
         costs.append(res.energy)
     assert costs[1] <= costs[0] * 1.05, costs

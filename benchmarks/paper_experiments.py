@@ -1,5 +1,6 @@
 """Paper experiments: Fig. 4 (Pareto sweep), Fig. 5 (abstract HW models),
-Table I (deployment accounting).
+Table I (deployment accounting), plus a cross-platform Pareto row
+(DIANA vs the 3-domain gap9_like SoC vs the TPU v5e roofline).
 
 Real datasets are offline-unavailable; tasks are learnable synthetic
 distributions of identical geometry (see data/pipeline.py), so accuracy
@@ -142,6 +143,38 @@ def fig5(preset: str, results: list):
         run_odimo_sweep(m, preset, platform, "energy", results, tag=tag)
 
 
+def crossplat(preset: str, results: list):
+    """Cross-platform Pareto row: the same model and lambda searched on each
+    registered target — DIANA (2 domains), the 3-domain gap9_like SoC and
+    the TPU v5e roofline — reporting the per-domain channel fractions the
+    search settles on under each platform's cost structure."""
+    m = PRESETS[preset]["models"][0]
+    cfg = MODEL_CFGS[m]
+    handle = cnn_handle(cfg)
+    data_fn = _data_fn(cfg)
+    lambdas = PRESETS[preset]["lambdas"]
+    lam = lambdas[len(lambdas) // 2]
+    for platform in ("diana", "gap9_like", "tpu_v5e"):
+        t0 = time.time()
+        scfg = _scfg(preset, lam, "latency")
+        res = SearchPipeline(handle, platform, config=scfg,
+                             data_fn=data_fn).run()
+        art = res.artifact
+        fracs = {d["name"]: float(f) for d, f in
+                 zip(art.domains, art.domain_channel_fractions())}
+        rec = dict(kind="crossplat", model=m, platform=platform, lam=lam,
+                   objective="latency", accuracy=res.accuracy,
+                   latency=res.latency, energy=res.energy,
+                   domain_fractions=fracs,
+                   counts=[c.tolist() for c in res.counts],
+                   wall_s=time.time() - t0)
+        results.append(rec)
+        frac_s = " ".join(f"{k}={v:.1%}" for k, v in fracs.items())
+        print(f"  [crossplat {platform} lam={lam:.1e}] "
+              f"acc={res.accuracy:.4f} lat={res.latency:.3e} "
+              f"en={res.energy:.3e} {frac_s}")
+
+
 def table1(results: list):
     """Deployment accounting (Table I): utilization per accelerator and
     AIMC-channel fraction, from the discretized mappings of fig4."""
@@ -179,7 +212,7 @@ def main(argv=None):
     ap.add_argument("--preset", default="quick", choices=list(PRESETS))
     ap.add_argument("--out", default="experiments/paper")
     ap.add_argument("--only", default=None,
-                    choices=[None, "fig4", "fig5", "table1"])
+                    choices=[None, "fig4", "fig5", "table1", "crossplat"])
     args = ap.parse_args(argv)
     results: list = []
     t0 = time.time()
@@ -189,6 +222,8 @@ def main(argv=None):
         fig5(args.preset, results)
     if args.only in (None, "table1"):
         table1(results)
+    if args.only in (None, "crossplat"):
+        crossplat(args.preset, results)
     outdir = Path(args.out)
     outdir.mkdir(parents=True, exist_ok=True)
     (outdir / f"results_{args.preset}.json").write_text(

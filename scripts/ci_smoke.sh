@@ -4,6 +4,9 @@
 #   2. tier-1 test suite (ROADMAP.md verify command)
 #   3. quickstart example in fast mode (exercises the repro.api pipeline,
 #      mapping artifact, and the fused split-precision kernel end-to-end)
+#   4. the full artifact pipeline: train --emit-mapping (schema-v2 artifact)
+#      -> repro.runtime lowering (ExecutionPlan) -> serve --mapping
+#      (per-layer planned kernel execution)
 #
 # Usage:  bash scripts/ci_smoke.sh            # installs requirements-dev.txt
 #         SKIP_INSTALL=1 bash scripts/ci_smoke.sh
@@ -21,5 +24,19 @@ python -m pytest -x -q
 
 echo "== quickstart (fast) =="
 python examples/quickstart.py --fast
+
+echo "== mapping runtime loop (train --emit-mapping -> lower -> serve --mapping) =="
+MAPDIR=$(mktemp -d)
+trap 'rm -rf "$MAPDIR"' EXIT
+python -m repro.launch.train --arch zamba2-1.2b --reduce --steps 2 \
+    --batch 2 --seq 32 --platform tpu_v5e \
+    --emit-mapping "$MAPDIR/mapping.json"
+python -m repro.runtime "$MAPDIR/mapping.json" --arch zamba2-1.2b --reduce \
+    --out "$MAPDIR/plan.json"
+test -s "$MAPDIR/plan.json"
+python -m repro.launch.serve --arch zamba2-1.2b --reduce --requests 2 \
+    --prompt-len 16 --gen-len 4 --mapping "$MAPDIR/mapping.json" \
+    | tee "$MAPDIR/serve.log"
+grep -q "per-layer planned execution" "$MAPDIR/serve.log"
 
 echo "ci_smoke OK"

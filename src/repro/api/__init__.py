@@ -35,22 +35,47 @@ drivers run a precision-aware mapping search.  Three pillars:
         res = pipe.run()
         res.artifact.save("experiments/mapping.json")
 
-Mapping artifact (repro.api.artifact)
+Mapping artifact (repro.api.artifact) — schema v2
     `Discretize`/`ApplyMapping` emit a `MappingArtifact`, serialized as::
 
-        {"schema_version": 1, "model": ..., "platform": ..., "objective": ...,
+        {"schema_version": 2, "model": ..., "platform": ..., "objective": ...,
          "lam": ..., "seed": ...,
          "domains": [{"name", "weight_bits", "act_bits"}, ...],
          "layers":  [{"name", "searchable", "assignment": [dom per out ch],
-                      "counts": [ch per dom]}, ...],
+                      "counts": [ch per dom],
+                      "scales": {"w_log_scales": [per domain],
+                                 "act_log_scale": f | null}},  # v2, optional
+                     ...],
          "metrics": {"accuracy", "latency", "energy"}}
 
-    Consumers: ``launch/serve.py --mapping art.json`` (chooses the serving
-    weight dtype from the majority domain) and
+    Consumers: `lower` (below), ``launch/serve.py --mapping art.json`` and
     ``core.discretize.reorg_chain_from_artifact`` (Fig. 3 reorg pass driven
     by the stored assignment; takes the plain dict, so `core` never imports
     `api`).  ``launch/train.py --emit-mapping`` writes one from a static
-    min-cost split.
+    min-cost split, scales included.
+
+Execution plans (re-exported from repro.runtime)
+    `lower(artifact, params=..., handle=...)` compiles an artifact into an
+    `ExecutionPlan`: per layer, the Fig. 3 channel permutation, the
+    block-aligned domain boundaries, the quant scales and the chosen kernel
+    (split-precision pallas / quant-matmul / ternary / fp fallback), with
+    shape + capability validation (`LoweringError` on mismatch)::
+
+        plan = lower(res.artifact, params=res.params, handle=handle)
+        backend = runtime.PlannedBackend(plan, res.params, handle=handle)
+        logits = handle.apply(res.params, x, spec, "deploy", 1.0)  # with
+        # repro.models.managed.matmul_backend(backend) installed, every
+        # covered dense executes through its planned Pallas kernel.
+
+    ``launch/serve.py --mapping`` runs exactly this path over the LM
+    projections and demotes the old global majority-dtype choice to a
+    fallback; ``launch/dryrun.py --mapping`` reports the per-layer kernel
+    selection against an arch's weight shapes.
+
+    Migration (v1 -> v2): v1 artifacts (no per-layer ``scales``) still load
+    and lower — executors then derive weight scales from max-abs statistics
+    of the weights they bind to and quantize activations dynamically.
+    Documents with ``schema_version`` > 2 are rejected.
 
 Migrating from the tuple façade
     Old::
@@ -78,12 +103,14 @@ from repro.api.pipeline import (ApplyMapping, Discretize, DNASSearch,
                                 fixed_mapping_stages)
 from repro.api.platforms import Platform
 from repro.core.engine import SearchConfig, SearchResult
+from repro.runtime import ExecutionPlan, LayerPlan, LoweringError, lower
 
 __all__ = [
-    "ApplyMapping", "Discretize", "DNASSearch", "Evaluate", "Finetune",
-    "FinetuneFixed", "MappingArtifact", "ModelHandle", "Platform",
-    "PipelineCallback", "PipelineResult", "PipelineState", "Pretrain",
-    "SearchConfig", "SearchPipeline", "SearchResult", "Stage",
-    "VerboseCallback", "cnn_handle", "default_stages",
-    "fixed_mapping_stages", "mlp_handle", "transformer_handle",
+    "ApplyMapping", "Discretize", "DNASSearch", "Evaluate", "ExecutionPlan",
+    "Finetune", "FinetuneFixed", "LayerPlan", "LoweringError",
+    "MappingArtifact", "ModelHandle", "Platform", "PipelineCallback",
+    "PipelineResult", "PipelineState", "Pretrain", "SearchConfig",
+    "SearchPipeline", "SearchResult", "Stage", "VerboseCallback",
+    "cnn_handle", "default_stages", "fixed_mapping_stages", "lower",
+    "mlp_handle", "transformer_handle",
 ]

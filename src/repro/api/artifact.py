@@ -4,7 +4,7 @@ One JSON document records everything needed to re-deploy (or re-evaluate) a
 discovered channel->domain mapping without re-running the DNAS:
 
     {
-      "schema_version": 1,
+      "schema_version": 2,
       "model": "resnet20_tiny",
       "platform": "diana",            # registry name, or null for ad hoc
       "objective": "latency",
@@ -13,13 +13,24 @@ discovered channel->domain mapping without re-running the DNAS:
       "domains": [{"name": "digital", "weight_bits": 8, "act_bits": 8}, ...],
       "layers": [{"name": "stem", "searchable": true,
                   "assignment": [0, 1, ...],     # domain idx per out channel
-                  "counts": [12, 4]}, ...],      # channels per domain
+                  "counts": [12, 4],             # channels per domain
+                  "scales": {                    # v2: quant scales (optional)
+                    "w_log_scales": [s_dom0, s_dom1, ...],
+                    "act_log_scale": 0.13 | null}}, ...],
       "metrics": {"accuracy": ..., "latency": ..., "energy": ...}
     }
 
-`launch/serve.py --mapping` and `core/discretize.reorg_chain_from_artifact`
-consume this document directly (the latter takes the plain dict so `core`
-never imports `api`).
+Schema v2 adds the optional per-layer ``scales`` block so the artifact is
+self-contained for *execution*: `repro.runtime.lower` compiles it into an
+`ExecutionPlan` (per-layer kernel + reorg permutation + aligned boundaries).
+v1 documents (no ``scales``) still load and lower — executors then fall back
+to max-abs scale statistics of the weights they bind to.
+
+Consumers: `repro.runtime.lower` (-> per-layer planned execution in
+``launch/serve.py --mapping``), `launch/serve.py:apply_mapping_artifact`
+(global majority-dtype FALLBACK) and `core/discretize.
+reorg_chain_from_artifact` (the latter takes the plain dict so `core` never
+imports `api`).
 """
 from __future__ import annotations
 
@@ -30,7 +41,7 @@ from typing import Any, Dict, List, Sequence
 
 import numpy as np
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 
 @dataclasses.dataclass
@@ -50,17 +61,27 @@ class MappingArtifact:
     @classmethod
     def from_search(cls, model_name: str, spec, plan, assignments,
                     counts, platform=None, objective=None, lam=None,
-                    seed=None, metrics=None) -> "MappingArtifact":
+                    seed=None, metrics=None, scales=None) -> "MappingArtifact":
+        """``scales``: optional per-layer list of
+        ``{"w_log_scales": [...], "act_log_scale": float | None}`` dicts
+        (None entries allowed) — the schema-v2 execution scales."""
         if not (len(plan) == len(assignments) == len(counts)):
             raise ValueError(f"plan/assignments/counts length mismatch: "
                              f"{len(plan)}/{len(assignments)}/{len(counts)}")
+        if scales is not None and len(scales) != len(plan):
+            raise ValueError(f"plan/scales length mismatch: "
+                             f"{len(plan)}/{len(scales)}")
         domains = [dict(name=d.name, weight_bits=d.weight_bits,
                         act_bits=d.act_bits) for d in spec.domains]
-        layers = [dict(name=name, searchable=bool(searchable),
-                       assignment=[int(v) for v in np.asarray(a)],
-                       counts=[int(v) for v in np.asarray(c)])
-                  for (name, _, searchable), a, c
-                  in zip(plan, assignments, counts)]
+        layers = []
+        for i, ((name, _, searchable), a, c) in enumerate(
+                zip(plan, assignments, counts)):
+            layer = dict(name=name, searchable=bool(searchable),
+                         assignment=[int(v) for v in np.asarray(a)],
+                         counts=[int(v) for v in np.asarray(c)])
+            if scales is not None and scales[i] is not None:
+                layer["scales"] = scales[i]
+            layers.append(layer)
         return cls(model=model_name, domains=domains, layers=layers,
                    platform=platform, objective=objective, lam=lam,
                    seed=seed, metrics=dict(metrics or {}))
@@ -78,11 +99,22 @@ class MappingArtifact:
     def n_domains(self) -> int:
         return len(self.domains)
 
-    def domain_channel_fractions(self) -> np.ndarray:
-        """Fraction of all channels assigned to each domain."""
+    def domain_channel_fractions(self, searchable_only: bool = False
+                                 ) -> np.ndarray:
+        """Fraction of all channels assigned to each domain.
+
+        ``searchable_only=True`` counts only ``searchable: true`` layers —
+        pinned layers never had a choice, so they must not vote when a
+        consumer (e.g. the serve fallback) derives a majority domain.  Falls
+        back to all layers when none are searchable.
+        """
         tot = np.zeros(self.n_domains, dtype=np.float64)
         for l in self.layers:
+            if searchable_only and not l.get("searchable", True):
+                continue
             tot += np.asarray(l["counts"], dtype=np.float64)
+        if searchable_only and tot.sum() == 0.0:
+            return self.domain_channel_fractions(searchable_only=False)
         return tot / max(tot.sum(), 1.0)
 
     # ---- (de)serialization ----------------------------------------------

@@ -179,6 +179,23 @@ class DNASSearch(Stage):
                                        "reg": float(reg), "tau": tau})
 
 
+def _layer_scales(layer_dicts) -> list:
+    """Schema-v2 per-layer quant scales from the trained ODiMO states (None
+    for unmanaged layers) — what `repro.runtime.lower` executes with."""
+    scales = []
+    for d in layer_dicts:
+        if "odimo" in d:
+            entry = {"w_log_scales": [float(v) for v in
+                                      np.asarray(d["odimo"]["log_scales"])]}
+            als = d.get("act_log_scale")
+            entry["act_log_scale"] = (float(als) if als is not None
+                                      else None)
+            scales.append(entry)
+        else:
+            scales.append(None)
+    return scales
+
+
 @dataclasses.dataclass
 class Discretize(Stage):
     """Phase 3: argmax assignment per channel + mapping artifact."""
@@ -199,7 +216,8 @@ class Discretize(Stage):
         state.artifact = MappingArtifact.from_search(
             ctx.handle.name, ctx.spec, ctx.plan, assignments, counts,
             platform=ctx.platform_name, objective=ctx.scfg.objective,
-            lam=ctx.scfg.lam, seed=ctx.scfg.seed)
+            lam=ctx.scfg.lam, seed=ctx.scfg.seed,
+            scales=_layer_scales(layer_dicts))
 
 
 @dataclasses.dataclass
@@ -242,7 +260,8 @@ class ApplyMapping(Stage):
         state.artifact = MappingArtifact.from_search(
             ctx.handle.name, ctx.spec, ctx.plan, assigns, state.counts,
             platform=ctx.platform_name, objective=ctx.scfg.objective,
-            lam=ctx.scfg.lam, seed=ctx.scfg.seed)
+            lam=ctx.scfg.lam, seed=ctx.scfg.seed,
+            scales=_layer_scales(ctx.handle.layers(state.params)))
 
 
 @dataclasses.dataclass
@@ -331,6 +350,15 @@ class SearchPipeline:
         pipe = SearchPipeline(cnn_handle(cfg), platform="diana",
                               config=SearchConfig(lam=5e-7), data_fn=data_fn)
         res = pipe.run()            # PipelineResult, res.artifact is JSON-able
+
+    Stage-level checkpointing: with ``checkpoint_dir`` set, params are
+    persisted (via `repro.checkpoint`, atomic + hash-verified) after every
+    `Pretrain` stage — the expensive prefix shared by all lambda points of a
+    Pareto sweep.  A later pipeline constructed with
+    ``resume_from=checkpoint_dir`` (same handle/stage list) restores those
+    params and restarts at the stage AFTER the checkpointed one (the paper
+    flow: straight at `DNASSearch`), bit-identical to an uninterrupted run
+    because the search/finetune data streams are offset-addressed.
     """
 
     def __init__(self, handle: ModelHandle, platform=None, *,
@@ -339,7 +367,9 @@ class SearchPipeline:
                  config: engine.SearchConfig | None = None,
                  data_fn: Callable[[int, int], Any],
                  stages: Sequence[Stage] | None = None,
-                 callbacks: Sequence[PipelineCallback] = ()):
+                 callbacks: Sequence[PipelineCallback] = (),
+                 checkpoint_dir: str | None = None,
+                 resume_from: str | None = None):
         self.handle = handle
         plat = Platform.get(platform) if platform is not None else None
         self.platform_name = plat.name if plat is not None else None
@@ -360,6 +390,8 @@ class SearchPipeline:
         self.data_fn = data_fn
         self.stages = list(stages) if stages is not None else default_stages()
         self.callbacks = tuple(callbacks)
+        self.checkpoint_dir = checkpoint_dir
+        self.resume_from = resume_from
 
     @classmethod
     def fixed_mapping(cls, handle, assignments, platform=None, *,
@@ -409,15 +441,30 @@ class SearchPipeline:
                                callbacks=self.callbacks)
 
     def run(self, init_params=None) -> PipelineResult:
+        from repro.checkpoint import checkpoint as ckpt
         ctx = self._build_context()
         if init_params is None:
             key = jax.random.PRNGKey(self.scfg.seed)
             init_params = self.handle.init(key, self.spec)
+        stages = list(enumerate(self.stages))
+        if self.resume_from is not None:
+            step = ckpt.latest_step(self.resume_from)
+            if step is None:
+                raise FileNotFoundError(
+                    f"resume_from={self.resume_from!r}: no committed "
+                    f"pipeline checkpoint found")
+            extra = ckpt.restore_extra(self.resume_from, step)
+            init_params = ckpt.restore(self.resume_from, step, init_params)
+            done = int(extra["stage_index"])
+            stages = stages[done + 1:]
         state = PipelineState(params=init_params)
-        for stage in self.stages:
+        for i, stage in stages:
             for cb in self.callbacks:
                 cb.on_stage_start(stage, state)
             stage.run(ctx, state)
+            if self.checkpoint_dir is not None and isinstance(stage, Pretrain):
+                ckpt.save(self.checkpoint_dir, i + 1, state.params,
+                          extra={"stage": stage.name, "stage_index": i})
             for cb in self.callbacks:
                 cb.on_stage_end(stage, state)
         return PipelineResult(

@@ -11,6 +11,8 @@ Built-ins:
     "diana_abstract"        Fig. 5 abstract model, P_idle = P_act
     "diana_ideal_shutdown"  Fig. 5 abstract model, P_idle = 0
     "tpu_v5e"               TPU roofline model (int8 vs bf16 MXU domains)
+    "gap9_like"             GAP9-class 3-domain SoC: digital int8 NE16,
+                            analog 2-bit in-memory array, fp16 DSP cluster
 """
 from __future__ import annotations
 
@@ -100,3 +102,22 @@ Platform.register(Platform(
     domains=tuple(quant.TPU_DOMAINS),
     cost_model_factory=TPUCostModel,
     description="TPU v5e roofline: int8 MXU @2x peak vs bf16"))
+
+# GAP9-class 3-domain SoC.  Domain 0 stays the digital int8 accelerator so
+# the paper's pinning convention (depthwise / non-searchable layers -> domain
+# 0) keeps its meaning; the analog in-memory array is fastest/cheapest but
+# 2-bit, the fp16 DSP cluster is the slow high-precision escape hatch.
+GAP9_DOMAINS = (
+    PrecisionDomain("ne16", weight_bits=8, act_bits=8),
+    PrecisionDomain("analog", weight_bits=2, act_bits=7),
+    PrecisionDomain("cluster_fp16", weight_bits=16, act_bits=16),
+)
+
+Platform.register(Platform(
+    name="gap9_like",
+    domains=GAP9_DOMAINS,
+    cost_model_factory=lambda **kw: AbstractCostModel(
+        ideal_shutdown=False, domains=GAP9_DOMAINS,
+        p_act=(10.0, 1.0, 40.0), throughput=(4.0, 16.0, 1.0), **kw),
+    description="GAP9-like: digital int8 NE16 + analog 2-bit array + "
+                "fp16 cluster, OP-proportional latency model"))

@@ -128,17 +128,30 @@ class AbstractCostModel(CostModel):
 
     ``ideal_shutdown=False`` -> P_idle = P_act  (energy == latency objective)
     ``ideal_shutdown=True``  -> P_idle = 0
+
+    Generalizes to any domain tuple: ``domains`` (default: the paper's
+    2-domain DIANA) with per-domain ``p_act`` and ``throughput`` (MACs per
+    time unit; default 1 per domain reproduces the Fig. 5 OP-proportional
+    latency) — enough to describe N-accelerator SoCs like the 3-domain
+    ``gap9_like`` platform.
     """
 
-    def __init__(self, ideal_shutdown: bool, p_act=(10.0, 1.0)):
+    def __init__(self, ideal_shutdown: bool, p_act=(10.0, 1.0),
+                 domains=None, throughput=None):
         from repro.core.quant import DIANA_DOMAINS
-        self.domains = DIANA_DOMAINS
+        self.domains = tuple(domains) if domains is not None \
+            else tuple(DIANA_DOMAINS)
+        n = len(self.domains)
         self.ideal_shutdown = ideal_shutdown
-        self._p_act = jnp.asarray(p_act)
-        self._p_idle = jnp.zeros(2) if ideal_shutdown else self._p_act
+        self._p_act = jnp.asarray(p_act, jnp.float32)
+        self._thr = (jnp.asarray(throughput, jnp.float32)
+                     if throughput is not None else jnp.ones(n))
+        if self._p_act.shape[0] != n or self._thr.shape[0] != n:
+            raise ValueError(f"p_act/throughput must match {n} domains")
+        self._p_idle = jnp.zeros(n) if ideal_shutdown else self._p_act
 
     def latency(self, geom: LayerGeometry, c_out_per_domain: jax.Array) -> jax.Array:
-        return geom.macs_per_out_channel * c_out_per_domain
+        return geom.macs_per_out_channel * c_out_per_domain / self._thr
 
     def p_act(self) -> jax.Array:
         return self._p_act

@@ -22,6 +22,15 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
+def align_boundary(boundary: int, bn: int) -> int:
+    """Round a domain boundary UP to the N-block size.  The extra columns
+    execute on the quantized domain — conservative, matching the paper's
+    group-aligned channel split.  This is THE alignment rule: the runtime's
+    `lower()` records boundaries aligned with exactly this function so plans
+    agree with what `split_precision_op` executes."""
+    return int(-(-int(boundary) // int(bn)) * int(bn))
+
+
 def _pad_to(x, mult, axis):
     s = x.shape[axis]
     pad = (-s) % mult
@@ -70,7 +79,7 @@ def split_precision_op(x, x_q, sx, w_bf16, w_q, sw, boundary,
     interpret = _on_cpu() if interpret is None else interpret
     m, n = x.shape[0], w_bf16.shape[1]
     bm_, bn_, bk_ = (min(bm, max(8, m)), min(bn, max(128, n)), bk)
-    b_al = int(-(-boundary // bn_) * bn_)
+    b_al = align_boundary(boundary, bn_)
     xp = _pad_to(_pad_to(x, bm_, 0), bk_, 1)
     xqp = _pad_to(_pad_to(x_q, bm_, 0), bk_, 1)
     wb = _pad_to(_pad_to(w_bf16, bk_, 0), bn_, 1)

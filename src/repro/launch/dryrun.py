@@ -91,8 +91,42 @@ VARIANTS = {
 }
 
 
+def mapping_plan_report(cfg, mapping_path: str) -> dict:
+    """Lower a mapping artifact against the arch's weight SHAPES (no
+    concrete params needed) and report the per-layer kernel selection the
+    runtime would execute — the compile-time view of `serve.py --mapping`."""
+    import json as _json
+
+    from repro.models import transformer as T
+    from repro.runtime import lower
+
+    from repro.runtime import LoweringError
+
+    artifact = _json.loads(Path(mapping_path).read_text())
+    pshapes = jax.eval_shape(lambda k: T.init_lm(k, cfg),
+                             jax.random.PRNGKey(0))
+    try:
+        plan = lower(artifact, params=pshapes)
+    except LoweringError as e:
+        print(f"[dryrun] mapping {mapping_path} does not lower onto "
+              f"{cfg.name}: {e}")
+        return {"error": str(e)}
+    rec = {"kernels": plan.kernel_histogram(),
+           "layers": [{"name": lp.name, "kernel": lp.kernel,
+                       "counts": lp.counts,
+                       "aligned_boundaries": lp.aligned_boundaries,
+                       **({"note": lp.note} if lp.note else {})}
+                      for lp in plan.layers]}
+    print(f"[dryrun] mapping {mapping_path}: {plan.summary()}")
+    for l in rec["layers"]:
+        note = f"  ({l['note']})" if "note" in l else ""
+        print(f"[dryrun]   {l['name']}: {l['kernel']} "
+              f"counts={l['counts']}{note}")
+    return rec
+
+
 def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
-             variant: str = "base") -> dict:
+             variant: str = "base", mapping: str | None = None) -> dict:
     import dataclasses as _dc
     cfg = cfgbase.get(arch)
     if VARIANTS[variant]:
@@ -203,6 +237,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
         "collectives": colls,
         "scan_repeats": scanned_repeats(cfg),
     }
+    if mapping:
+        rec["mapping_plan"] = mapping_plan_report(cfg, mapping)
     print(f"[dryrun] {arch} x {shape} ({'2x16x16' if multi_pod else '16x16'})"
           f" OK  compile={t_compile:.0f}s  temp="
           f"{mem_rec['temp_size_in_bytes']/2**30:.2f}GiB/dev "
@@ -232,6 +268,9 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--variant", default="base", choices=list(VARIANTS))
     ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--mapping", default=None,
+                    help="mapping artifact JSON: report the per-layer "
+                         "kernel selection the runtime would execute")
     args = ap.parse_args()
     out = Path(args.out)
 
@@ -243,7 +282,7 @@ def main():
                     run_cell(arch, shape, mp, out)
     else:
         run_cell(args.arch, args.shape, args.multi_pod, out,
-                 variant=args.variant)
+                 variant=args.variant, mapping=args.mapping)
 
 
 if __name__ == "__main__":

@@ -1,13 +1,26 @@
 """Batched serving driver: continuous-batching-style loop with prefill +
 decode over a shared KV cache pool.
 
+With ``--mapping`` the driver lowers the mapping artifact onto the model's
+actual weights (`repro.runtime.lower`) and executes every projection matmul
+the plan binds to through its per-layer planned kernel — split-precision /
+quant-matmul / ternary, interpret mode on CPU — via the pluggable matmul
+backend (`repro.runtime.PlannedBackend`); the artifact's activation
+majority still decides the KV-cache dtype (an activation-precision choice
+the per-layer weight kernels don't cover).  Weights that only exist stacked
+inside the layer scan run the default bf16 path (see ROADMAP runtime
+follow-ups); artifacts that fail to lower (shape mismatch / wrong model)
+fall back to the legacy global majority-dtype path
+(`apply_mapping_artifact`).
+
 Example (CPU, reduced model):
     PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduce \
-        --requests 8 --prompt-len 32 --gen-len 16
+        --requests 8 --prompt-len 32 --gen-len 16 [--mapping art.json]
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import time
 
@@ -17,17 +30,25 @@ import numpy as np
 
 from repro.configs import base as cfgbase
 from repro.models import transformer as T
+from repro.models.managed import matmul_backend
 
 
 def apply_mapping_artifact(cfg, artifact):
-    """Pick serving dtypes from a `repro.api.MappingArtifact`.
+    """FALLBACK consumer: pick GLOBAL serving dtypes from a
+    `repro.api.MappingArtifact` majority vote.
 
-    The artifact's majority precision domain (by assigned channels) decides
-    the weight stream: a <=8-bit majority serves int8 projections; an int8
-    activation majority additionally quantizes the KV cache.  Returns the
-    updated cfg and the majority domain dict.
+    Only ``searchable: true`` layers vote (pinned layers never had a choice;
+    counting them would let a wide pinned stem outvote the search).  The
+    majority precision domain decides the weight stream: a <=8-bit majority
+    serves int8 projections; an int8 activation majority additionally
+    quantizes the KV cache.  Returns the updated cfg and the majority domain
+    dict.
+
+    This is the documented fallback when no `ExecutionPlan` can be lowered —
+    the first-class path is per-layer planned execution via
+    `plan_mapping_execution`.
     """
-    fractions = artifact.domain_channel_fractions()
+    fractions = artifact.domain_channel_fractions(searchable_only=True)
     dom = artifact.domains[int(np.argmax(fractions))]
     updates = {}
     if dom["weight_bits"] <= 8:
@@ -39,32 +60,58 @@ def apply_mapping_artifact(cfg, artifact):
     return cfg, dom
 
 
+def plan_mapping_execution(params, artifact, interpret=None):
+    """Lower ``artifact`` against ``params`` and bind a planned backend.
+
+    Returns (plan, backend).  Raises `repro.runtime.LoweringError` when the
+    artifact does not match the model (callers fall back to
+    `apply_mapping_artifact`).
+    """
+    from repro.runtime import PlannedBackend, lower
+    plan = lower(artifact, params=params)
+    backend = PlannedBackend(plan, params, interpret=interpret)
+    return plan, backend
+
+
 def sample_greedy(logits):
     return jnp.argmax(logits, axis=-1)
 
 
-def serve_batch(cfg, params, prompts, gen_len: int, frontend=None):
-    """prompts: (B, P) int32. Returns generated (B, gen_len)."""
+def serve_batch(cfg, params, prompts, gen_len: int, frontend=None,
+                backend=None):
+    """prompts: (B, P) int32. Returns generated (B, gen_len).
+
+    With a matmul ``backend`` the steps run eagerly (outside jit) so the
+    backend can match weight leaves by identity; covered projections then
+    execute through their planned Pallas kernels.
+    """
     B, P = prompts.shape
     S_max = P + gen_len
     caches = T.init_cache(cfg, B, S_max)
 
-    prefill = jax.jit(lambda p, t, c, f: T.prefill(p, cfg, t, c,
-                                                   cross_source=f))
-    decode = jax.jit(lambda p, t, c, i: T.decode_step(p, cfg, t, c, i))
+    if backend is None:
+        prefill = jax.jit(lambda p, t, c, f: T.prefill(p, cfg, t, c,
+                                                       cross_source=f))
+        decode = jax.jit(lambda p, t, c, i: T.decode_step(p, cfg, t, c, i))
+        ctx = contextlib.nullcontext()
+    else:
+        prefill = lambda p, t, c, f: T.prefill(p, cfg, t, c, cross_source=f)
+        decode = lambda p, t, c, i: T.decode_step(p, cfg, t, c, i)
+        ctx = matmul_backend(backend)
 
-    t0 = time.monotonic()
-    logits, caches = prefill(params, prompts, caches, frontend)
-    tok = sample_greedy(logits)
-    t_prefill = time.monotonic() - t0
-
-    out = [tok]
-    t0 = time.monotonic()
-    for i in range(gen_len - 1):
-        logits, caches = decode(params, tok, caches, P + i)
+    with ctx:
+        t0 = time.monotonic()
+        logits, caches = prefill(params, prompts, caches, frontend)
         tok = sample_greedy(logits)
-        out.append(tok)
-    t_decode = time.monotonic() - t0
+        t_prefill = time.monotonic() - t0
+
+        out = [tok]
+        t0 = time.monotonic()
+        for i in range(gen_len - 1):
+            logits, caches = decode(params, tok, caches, P + i)
+            tok = sample_greedy(logits)
+            out.append(tok)
+        t_decode = time.monotonic() - t0
     gen = jnp.stack(out, axis=1)
     return gen, {"prefill_s": t_prefill, "decode_s": t_decode,
                  "tok_per_s": B * (gen_len - 1) / max(t_decode, 1e-9)}
@@ -79,24 +126,61 @@ def main(argv=None):
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mapping", default=None,
-                    help="mapping artifact JSON (repro.api schema); the "
-                         "majority domain picks the serving dtypes")
+                    help="mapping artifact JSON (repro.api schema); lowered "
+                         "to per-layer ExecutionPlans, with the global "
+                         "majority-dtype path as fallback")
+    ap.add_argument("--mapping-fallback", action="store_true",
+                    help="skip plan lowering and use the legacy global "
+                         "majority-dtype path directly")
     args = ap.parse_args(argv)
 
     cfgbase.load_all()
     cfg = cfgbase.get(args.arch)
     if args.reduce:
         cfg = cfgbase.reduce_for_smoke(cfg)
+
+    art = None
     if args.mapping:
         from repro.api import MappingArtifact
         art = MappingArtifact.load(args.mapping)
-        cfg, dom = apply_mapping_artifact(cfg, art)
-        print(f"[serve] mapping {args.mapping}: model={art.model} "
-              f"platform={art.platform} majority domain={dom['name']} "
-              f"-> weights={cfg.serve_weight_dtype} kv={cfg.kv_cache_dtype}")
 
     key = jax.random.PRNGKey(args.seed)
     params = T.init_lm(key, cfg)
+
+    backend = None
+    if art is not None:
+        from repro.runtime import LoweringError
+        plan = None
+        if not args.mapping_fallback:
+            try:
+                plan, backend = plan_mapping_execution(params, art)
+            except LoweringError as e:
+                print(f"[serve] mapping {args.mapping} failed to lower "
+                      f"({e}); falling back to majority-dtype serving")
+        if backend is not None:
+            # KV-cache precision follows the artifact's activation majority
+            # even on the planned path (the weight kernels don't cover it)
+            fractions = art.domain_channel_fractions(searchable_only=True)
+            dom = art.domains[int(np.argmax(fractions))]
+            if dom.get("act_bits", 16) <= 8:
+                cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+            hist = " ".join(f"{k}:{v}" for k, v in
+                            sorted(plan.kernel_histogram().items()))
+            print(f"[serve] mapping {args.mapping}: model={art.model} "
+                  f"platform={art.platform} -> per-layer planned execution "
+                  f"({hist}; {backend.coverage()}; kv={cfg.kv_cache_dtype})")
+            for lp in plan.layers:
+                mark = "*" if lp.name in backend.bound else " "
+                note = f"  ({lp.note})" if lp.note else ""
+                print(f"[serve]  {mark} {lp.name}: {lp.kernel} "
+                      f"counts={lp.counts}{note}")
+        else:
+            cfg, dom = apply_mapping_artifact(cfg, art)
+            print(f"[serve] mapping {args.mapping}: model={art.model} "
+                  f"platform={art.platform} FALLBACK majority domain="
+                  f"{dom['name']} -> weights={cfg.serve_weight_dtype} "
+                  f"kv={cfg.kv_cache_dtype}")
+
     prompts = jax.random.randint(key, (args.requests, args.prompt_len),
                                  0, cfg.vocab)
     frontend = None
@@ -104,7 +188,8 @@ def main(argv=None):
         frontend = jax.random.normal(
             key, (args.requests, cfg.frontend_tokens, cfg.d_model),
             jnp.bfloat16)
-    gen, stats = serve_batch(cfg, params, prompts, args.gen_len, frontend)
+    gen, stats = serve_batch(cfg, params, prompts, args.gen_len, frontend,
+                             backend=backend)
     assert gen.shape == (args.requests, args.gen_len)
     assert np.isfinite(np.asarray(gen)).all()
     print(f"[serve] {cfg.name}: {args.requests} reqs, prefill "

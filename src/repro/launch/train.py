@@ -33,41 +33,51 @@ from repro.optim import adamw, compression
 
 
 def emit_static_mapping(params, cfg, platform, out_path, max_cout=512):
-    """Write a `repro.api` mapping artifact for the trained LM's 2-D weight
-    matrices: per-layer min-cost static channel split (paper Sec. IV
-    baselines) under the named platform's cost model.
+    """Write a schema-v2 `repro.api` mapping artifact for the trained LM's
+    2-D weight matrices: per-layer min-cost static channel split (paper
+    Sec. IV baselines) under the named platform's cost model, with max-abs
+    weight quant scales so the artifact lowers to an executable
+    `ExecutionPlan` (``serve.py --mapping`` per-layer planned execution).
 
     Layer names are params-pytree paths in flatten order (not network
-    order), so the artifact drives serving-dtype selection and accounting
-    (``serve.py --mapping``), NOT the Fig. 3 reorg pass.  Layers wider than
-    ``max_cout`` output channels are pinned to domain 0 — the exhaustive
-    per-layer split search is O(C_out) cost evaluations.
+    order).  Activation scales are left null (the executors quantize with
+    dynamic max-abs statistics).  Layers wider than ``max_cout`` output
+    channels are pinned to domain 0 — the exhaustive per-layer split search
+    is O(C_out) cost evaluations.
     """
     from repro.api import MappingArtifact, Platform
-    from repro.core import baselines
+    from repro.core import baselines, quant
     from repro.core.cost_models import LayerGeometry
 
     plat = Platform.get(platform)
     cm, spec = plat.cost_model(), plat.spec()
-    names, geoms, searchable = [], [], []
+    names, geoms, searchable, scales = [], [], [], []
     for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
         if getattr(leaf, "ndim", 0) != 2:
             continue
         parts = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
-        if parts and parts[-1] == "w":   # drop the leaf key: name the layer
-            parts = parts[:-1]
+        # dense layers only ({"w": ...} dicts, the repo-wide convention) —
+        # stacked scan params make 1-D leaves (norm scales, ssm params)
+        # look 2-D, and those can never execute as channel-split matmuls
+        if not parts or parts[-1] != "w":
+            continue
+        parts = parts[:-1]               # drop the leaf key: name the layer
         name = "/".join(parts)
         names.append(name)
         geoms.append(LayerGeometry(c_in=leaf.shape[0], c_out=leaf.shape[1]))
         searchable.append(leaf.shape[1] <= max_cout)
+        ls = float(quant.init_log_scale(np.asarray(leaf, dtype=np.float32)))
+        scales.append({"w_log_scales": [ls] * spec.n_domains,
+                       "act_log_scale": None})
     assigns = baselines.min_cost(cm, geoms, "latency", searchable)
     counts = baselines.counts_from_assignments(assigns, spec.n_domains)
     plan = [(n, g, s) for n, g, s in zip(names, geoms, searchable)]
     art = MappingArtifact.from_search(cfg.name, spec, plan, assigns, counts,
-                                      platform=plat.name, objective="latency")
+                                      platform=plat.name, objective="latency",
+                                      scales=scales)
     art.save(out_path)
-    print(f"[train] wrote mapping artifact ({len(names)} layers, "
-          f"platform={plat.name}) -> {out_path}")
+    print(f"[train] wrote mapping artifact ({len(names)} layers, schema v"
+          f"{art.schema_version}, platform={plat.name}) -> {out_path}")
     return art
 
 

@@ -1,0 +1,38 @@
+"""Pluggable matmul backend shared by every dense primitive in the repo.
+
+A backend is any callable ``backend(p, x) -> y | None`` where ``p`` is a
+dense param dict (``{"w": ..., "b"?: ...}``) and ``x`` the input activations;
+returning ``None`` declines the call and the primitive runs its default
+path.  `repro.models.managed.dense`/`conv2d`, `repro.models.layers.dense`
+and the LM head projection all consult the active backend, so installing one
+swaps the execution of every covered matmul WITHOUT forking model code —
+this is how `repro.runtime.PlannedBackend` slots per-layer split-precision
+kernels into serving.
+
+Deliberately dependency-free (both `layers` and `managed` import it).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Optional
+
+MatmulBackend = Callable[[dict, object], object]
+
+_ACTIVE: Optional[MatmulBackend] = None
+
+
+def current() -> Optional[MatmulBackend]:
+    """The backend dense primitives should consult (None = default path)."""
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def use(backend: Optional[MatmulBackend]):
+    """Install ``backend`` for the duration of the context."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = backend
+    try:
+        yield backend
+    finally:
+        _ACTIVE = prev

@@ -11,9 +11,16 @@ Both follow the standard façade contract consumed by
 
 Plan names are params-pytree paths, so the default managed-layer lookup of
 `ModelHandle` works without a custom ``managed_layers``.
+
+Both apply functions take a pluggable matmul ``backend`` (the
+`repro.models._backend` protocol): with ``mode="deploy"`` and a
+`repro.runtime.PlannedBackend`, every covered dense executes through its
+planned split-precision/quant kernel while declined layers fall back to the
+discretized fake-quant weights — mapping execution without forking the model.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import List, Tuple
 
@@ -22,6 +29,8 @@ import jax.numpy as jnp
 
 from repro.core.cost_models import LayerGeometry
 from repro.models import managed as mg
+
+_null_ctx = contextlib.nullcontext
 
 
 # --------------------------------------------------------------------------
@@ -45,11 +54,14 @@ def mlp_init(key, cfg: MLPConfig, spec):
     return {"layers": layers, "head": head}
 
 
-def mlp_apply(p, x, cfg: MLPConfig, spec=None, mode="fp", tau=1.0):
-    h = x.reshape(x.shape[0], -1)
-    for lp in p["layers"]:
-        h = jax.nn.relu(mg.dense(lp, h, spec, mode, tau))
-    return mg.dense(p["head"], h, spec, mode, tau)
+def mlp_apply(p, x, cfg: MLPConfig, spec=None, mode="fp", tau=1.0,
+              backend=None):
+    with mg.matmul_backend(backend) if backend is not None else \
+            _null_ctx():
+        h = x.reshape(x.shape[0], -1)
+        for lp in p["layers"]:
+            h = jax.nn.relu(mg.dense(lp, h, spec, mode, tau))
+        return mg.dense(p["head"], h, spec, mode, tau)
 
 
 def mlp_plan(cfg: MLPConfig) -> List[Tuple[str, LayerGeometry, bool]]:
@@ -113,14 +125,17 @@ def _tokens(x, cfg: EncoderConfig):
     return x.reshape(x.shape[0], cfg.n_tokens, cfg.in_dim)
 
 
-def encoder_apply(p, x, cfg: EncoderConfig, spec=None, mode="fp", tau=1.0):
-    h = mg.dense(p["embed"], _tokens(x, cfg), spec, mode, tau)
-    for blk in p["blocks"]:
-        a = _attention(h, mg.dense(blk["qkv"], h, spec, mode, tau), cfg)
-        h = h + mg.dense(blk["proj"], a, spec, mode, tau)
-        f = jax.nn.relu(mg.dense(blk["ffn1"], h, spec, mode, tau))
-        h = h + mg.dense(blk["ffn2"], f, spec, mode, tau)
-    return mg.dense(p["head"], jnp.mean(h, axis=1), spec, mode, tau)
+def encoder_apply(p, x, cfg: EncoderConfig, spec=None, mode="fp", tau=1.0,
+                  backend=None):
+    with mg.matmul_backend(backend) if backend is not None else \
+            _null_ctx():
+        h = mg.dense(p["embed"], _tokens(x, cfg), spec, mode, tau)
+        for blk in p["blocks"]:
+            a = _attention(h, mg.dense(blk["qkv"], h, spec, mode, tau), cfg)
+            h = h + mg.dense(blk["proj"], a, spec, mode, tau)
+            f = jax.nn.relu(mg.dense(blk["ffn1"], h, spec, mode, tau))
+            h = h + mg.dense(blk["ffn2"], f, spec, mode, tau)
+        return mg.dense(p["head"], jnp.mean(h, axis=1), spec, mode, tau)
 
 
 def encoder_plan(cfg: EncoderConfig) -> List[Tuple[str, LayerGeometry, bool]]:

@@ -8,6 +8,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.models import _backend
+
 
 def init_dense(key, d_in, d_out, dtype=jnp.bfloat16, scale=None, bias=False):
     s = scale if scale is not None else d_in ** -0.5
@@ -18,6 +20,11 @@ def init_dense(key, d_in, d_out, dtype=jnp.bfloat16, scale=None, bias=False):
 
 
 def dense(p, x):
+    be = _backend.current()
+    if be is not None:
+        y = be(p, x)
+        if y is not None:
+            return y  # planned kernel output, bias applied by the backend
     if "w_q" in p:
         # int8-domain weights: HBM stream is int8; dequant fuses into the
         # matmul operand load (per-output-channel scale)

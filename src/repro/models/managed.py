@@ -1,9 +1,15 @@
 """ODiMO-managed layer primitives shared by the CNN repro and the LM zoo.
 
 A *managed* layer is a Conv/Dense whose weight passes through the ODiMO
-mixing (search mode), the discretized per-channel quantization (finetune /
-deploy mode), or plain floats (fp32 mode).  Activations are fake-quantized
-at the spec's worst-case bit-width in the quantized modes (paper Sec. III-B).
+mixing (search mode), the discretized per-channel quantization (finetune
+mode), or plain floats (fp32 mode).  Activations are fake-quantized at the
+spec's worst-case bit-width in the quantized modes (paper Sec. III-B).
+
+Mode "deploy" is the mapping-execution path: with a matmul backend installed
+(``with matmul_backend(planned): ...`` — see `repro.runtime.PlannedBackend`)
+covered layers run through their planned Pallas kernels; layers the backend
+declines fall back to the discretized fake-quant weights, so a partially
+lowered plan still executes the searched mapping end to end.
 """
 from __future__ import annotations
 
@@ -15,8 +21,13 @@ import jax.numpy as jnp
 from repro.core import odimo, quant
 from repro.core.cost_models import LayerGeometry
 from repro.core.odimo import ODiMOSpec
+from repro.models import _backend
 
-Mode = Literal["fp", "search", "finetune"]
+Mode = Literal["fp", "search", "finetune", "deploy"]
+
+# Re-exported context manager installing a pluggable matmul backend for every
+# dense primitive in the repo (managed + LM layers).
+matmul_backend = _backend.use
 
 
 def init_conv(key, kh, kw, c_in, c_out, spec: ODiMOSpec | None, groups=1):
@@ -63,6 +74,11 @@ def conv2d(p: dict, x: jax.Array, spec: ODiMOSpec | None = None,
            mode: Mode = "fp", tau: float = 1.0, stride: int = 1,
            padding: str = "SAME", groups: int = 1) -> jax.Array:
     """NHWC conv with HWIO weights; ODiMO-managed when spec is given."""
+    be = _backend.current()
+    if be is not None and mode in ("fp", "deploy"):
+        y = be(p, x)
+        if y is not None:
+            return y
     w = _weight(p, spec, mode, tau).astype(x.dtype)
     y = jax.lax.conv_general_dilated(
         x, w, window_strides=(stride, stride), padding=padding,
@@ -87,6 +103,11 @@ def conv2d_linear(p: dict, x: jax.Array, spec=None, mode: Mode = "fp",
 
 def dense(p: dict, x: jax.Array, spec: ODiMOSpec | None = None,
           mode: Mode = "fp", tau: float = 1.0) -> jax.Array:
+    be = _backend.current()
+    if be is not None and mode in ("fp", "deploy"):
+        y = be(p, x)
+        if y is not None:
+            return y  # planned kernel output, bias applied by the backend
     w = _weight(p, spec, mode, tau).astype(x.dtype)
     y = x @ w
     if "b" in p:

@@ -372,6 +372,19 @@ def _head_weight(params, cfg: ArchConfig):
     return h["w"]
 
 
+def _project_logits(params, cfg: ArchConfig, h):
+    """Vocab projection of the last hidden states, routed through the
+    pluggable matmul backend when one is installed (per-layer planned
+    execution of the head; see repro.models._backend)."""
+    from repro.models import _backend
+    be = _backend.current()
+    if be is not None and not cfg.tie_embeddings and "head" in params:
+        y = be(params["head"], h)
+        if y is not None:
+            return y.astype(jnp.float32)
+    return (h @ _head_weight(params, cfg)).astype(jnp.float32)
+
+
 def chunked_ce(h, w, targets, chunk=512):
     """Cross-entropy with the vocab projection computed per sequence chunk
     (rematerialized in backward) — avoids materializing (B,S,V) logits."""
@@ -503,7 +516,7 @@ def prefill(params, cfg: ArchConfig, tokens, caches, cross_source=None):
     h, caches, _ = backbone(params, cfg, x, positions, caches=caches,
                             cache_index=0, cross_source=cross_source,
                             chunked=Sq > 2048)
-    logits = (h[:, -1] @ _head_weight(params, cfg)).astype(jnp.float32)
+    logits = _project_logits(params, cfg, h[:, -1])
     return logits, caches
 
 
@@ -516,7 +529,7 @@ def decode_step(params, cfg: ArchConfig, token, caches, index,
     positions = jnp.full((x.shape[0], 1), index)
     h, caches, _ = backbone(params, cfg, x, positions, caches=caches,
                             cache_index=index, cross_source=None)
-    logits = (h[:, -1] @ _head_weight(params, cfg)).astype(jnp.float32)
+    logits = _project_logits(params, cfg, h[:, -1])
     return logits, caches
 
 

@@ -1,0 +1,39 @@
+"""repro.runtime — mapping-execution runtime.
+
+Turns a `repro.api.MappingArtifact` (the *metadata* a search produces) into
+an *executable object*: an `ExecutionPlan` whose per-layer entries record the
+Fig. 3 channel permutation, the block-aligned domain boundaries, the quant
+scales and the chosen kernel, plus executors that run a planned layer through
+the matching Pallas kernel (interpret mode on CPU).
+
+    artifact = MappingArtifact.load("mapping.json")
+    plan     = lower(artifact, params=params)        # compile
+    backend  = PlannedBackend(plan, params)          # bind to weights
+    with matmul_backend(backend):                    # execute
+        logits = model_apply(params, x)
+
+`lower` validates the artifact against real weight shapes, reuses
+`core.discretize.stable_perm`/`split_points` for the reorg and the
+`kernels.ops` block-alignment rule, and picks one kernel per layer:
+``split_precision`` (fused int8+bf16), ``quant_matmul`` (w8a8),
+``ternary_matmul`` (AIMC analogue) or ``fp`` (identity fallback, with the
+reason recorded in ``LayerPlan.note``).
+
+This package never imports `repro.api` (artifacts are duck-typed via
+``to_dict``), so `repro.api` can re-export `lower`/`ExecutionPlan` as the
+public entry points without an import cycle.
+"""
+from repro.runtime.plan import (KERNEL_FP, KERNEL_QUANT, KERNEL_SPLIT,
+                                KERNEL_TERNARY, KERNELS, ExecutionPlan,
+                                LayerPlan, LoweringError)
+from repro.runtime.lower import lower, resolve_layer_params
+from repro.runtime.execute import (PlannedBackend, PreparedLayer,
+                                   execute_layer, prepare_layer,
+                                   reference_layer)
+
+__all__ = [
+    "ExecutionPlan", "LayerPlan", "LoweringError", "PlannedBackend",
+    "PreparedLayer", "KERNELS", "KERNEL_FP", "KERNEL_QUANT", "KERNEL_SPLIT",
+    "KERNEL_TERNARY", "execute_layer", "lower", "prepare_layer",
+    "reference_layer", "resolve_layer_params",
+]

@@ -1,0 +1,9 @@
+"""``python -m repro.runtime`` — the artifact->plan lowering CLI.
+
+Thin alias for ``repro.runtime.lower.main`` (avoids the runpy double-import
+warning of ``-m repro.runtime.lower``).
+"""
+from repro.runtime.lower import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,239 @@
+"""Per-layer executors for `ExecutionPlan`s.
+
+`prepare_layer` binds one `LayerPlan` to a concrete weight: it applies the
+plan's channel permutation, quantizes the weight stream with the plan's
+scales (max-abs fallback when the plan was lowered without scales), and
+packages everything the kernels need.  `execute_layer` then runs an input
+through the matching Pallas kernel — interpret mode on CPU — or through the
+pure-jnp reference oracle (``reference=True``), always returning outputs in
+the ORIGINAL channel order (the inverse permutation is applied, mirroring
+`kernels.ops.odimo_deployed_dense`; the full Fig. 3 reorg removes it by
+rewriting the next layer's input channels).
+
+`PlannedBackend` binds a whole plan to a params pytree and implements the
+pluggable matmul-backend protocol of `repro.models` (``backend(p, x) -> y``
+or ``None`` to decline): install it with
+``repro.models.managed.matmul_backend(backend)`` and every managed/LM dense
+whose weight the plan covers executes through its planned kernel, bias
+included — no model code forks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.kernels import ops, ref
+from repro.runtime.lower import _layer_weight, _walk_path
+from repro.runtime.plan import (KERNEL_FP, KERNEL_QUANT, KERNEL_SPLIT,
+                                KERNEL_TERNARY, ExecutionPlan, LayerPlan,
+                                LoweringError)
+
+
+class ExecutionError(RuntimeError):
+    """A planned layer cannot be executed as lowered."""
+
+
+@dataclasses.dataclass
+class PreparedLayer:
+    """A `LayerPlan` bound to concrete arrays, ready to execute."""
+    plan: LayerPlan
+    inv: np.ndarray                  # inverse channel permutation
+    w_perm: jax.Array                # permuted weights, original dtype (K, N)
+    b: jax.Array | None              # bias, ORIGINAL channel order
+    w_q: jax.Array | None            # int8 codes, permuted (quantized paths)
+    sw: jax.Array | None             # (N,) per-column dequant step, f32
+    act_log_scale: float | None      # None -> dynamic max-abs per call
+    block_n: int = 128               # N-block the plan was aligned with
+
+    @property
+    def kernel(self) -> str:
+        return self.plan.kernel
+
+
+def _quant_domain(lp: LayerPlan, domain_bits: List[int]) -> int:
+    """Index of the quantized domain whose scale drives the weight codes."""
+    active = lp.active_domains()
+    quantized = [i for i in active if domain_bits[i] < 16]
+    if not quantized:
+        raise ExecutionError(f"{lp.name}: no quantized domain for kernel "
+                             f"{lp.kernel}")
+    return quantized[0]
+
+
+def prepare_layer(lp: LayerPlan, w, b=None,
+                  domain_bits: List[int] | None = None,
+                  block_n: int = 128) -> PreparedLayer:
+    """Bind ``lp`` to a concrete (C_in, C_out) weight (+ optional bias)."""
+    if getattr(w, "ndim", 0) != 2:
+        raise ExecutionError(f"{lp.name}: planned execution covers 2-D "
+                             f"(dense) weights, got shape "
+                             f"{tuple(getattr(w, 'shape', ()))}")
+    if int(w.shape[-1]) != lp.c_out:
+        raise ExecutionError(f"{lp.name}: weight has {int(w.shape[-1])} "
+                             f"output channels, plan expects {lp.c_out}")
+    if domain_bits is None:
+        domain_bits = [8] * len(lp.counts)
+    w_perm = jnp.take(jnp.asarray(w), lp.perm, axis=-1)
+    w_q = sw = None
+    if lp.kernel in (KERNEL_QUANT, KERNEL_TERNARY, KERNEL_SPLIT):
+        dom = _quant_domain(lp, domain_bits)
+        bits = 2 if lp.kernel == KERNEL_TERNARY else min(domain_bits[dom], 8)
+        if lp.w_log_scales is not None:
+            ls = jnp.asarray(lp.w_log_scales[dom], jnp.float32)
+        else:  # lowered without scales: max-abs of the bound weight
+            ls = quant.init_log_scale(w_perm.astype(jnp.float32))
+        wf = w_perm.astype(jnp.float32)
+        # the whole (padded) matrix carries codes so block-aligned extra
+        # columns of the split kernel execute conservatively in int8
+        w_q = quant.quantize_int(wf, ls, bits)
+        step = jnp.exp(ls) / quant.qlevels(bits)
+        sw = jnp.full((lp.c_out,), step, jnp.float32)
+    return PreparedLayer(plan=lp, inv=lp.inv_perm(), w_perm=w_perm,
+                         b=(jnp.asarray(b) if b is not None else None),
+                         w_q=w_q, sw=sw, act_log_scale=lp.act_log_scale,
+                         block_n=block_n)
+
+
+def _act_quant(xf: jax.Array, act_log_scale: float | None):
+    """(x_q int8, sx step, xl log-scale); dynamic max-abs when no scale was
+    lowered (the v1-artifact migration path)."""
+    if act_log_scale is not None:
+        xl = jnp.asarray(act_log_scale, jnp.float32)
+    else:
+        xl = jnp.log(jnp.maximum(jnp.max(jnp.abs(xf)), 1e-8))
+    x_q = quant.quantize_int(xf, xl, 8)
+    sx = (jnp.exp(xl) / quant.qlevels(8)).astype(jnp.float32)
+    return x_q, sx
+
+
+def execute_layer(prep: PreparedLayer, x, *, interpret=None,
+                  reference: bool = False) -> jax.Array:
+    """Run ``x (..., C_in)`` through the prepared layer's kernel; returns
+    ``(..., C_out)`` in the original channel order, bias applied, in
+    ``x.dtype``.  ``reference=True`` routes through the pure-jnp oracles
+    (`kernels.ref`) instead of the Pallas kernels — the bit-tolerance
+    reference path."""
+    lp = prep.plan
+    if int(x.shape[-1]) != int(prep.w_perm.shape[0]):
+        raise ExecutionError(f"{lp.name}: input has {int(x.shape[-1])} "
+                             f"features, weight expects "
+                             f"{int(prep.w_perm.shape[0])}")
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    xf = x2.astype(jnp.float32)
+
+    if lp.kernel == KERNEL_FP:
+        y = xf @ prep.w_perm.astype(jnp.float32)
+    elif lp.kernel in (KERNEL_QUANT, KERNEL_TERNARY):
+        x_q, sx = _act_quant(xf, prep.act_log_scale)
+        if reference:
+            fn = (ref.ternary_matmul_ref if lp.kernel == KERNEL_TERNARY
+                  else ref.quant_matmul_ref)
+            y = fn(x_q, prep.w_q, sx, prep.sw)
+        else:
+            fn = (ops.ternary_matmul_op if lp.kernel == KERNEL_TERNARY
+                  else ops.quant_matmul_op)
+            y = fn(x_q, prep.w_q, sx, prep.sw, interpret=interpret)
+    elif lp.kernel == KERNEL_SPLIT:
+        x_q, sx = _act_quant(xf, prep.act_log_scale)
+        xb = x2.astype(jnp.bfloat16)
+        wb = prep.w_perm.astype(jnp.bfloat16)
+        boundary = lp.split_boundary()
+        # the op clamps the N-block to min(bn, max(128, n)) and rounds the
+        # boundary up to it; the oracle must split at the same column
+        bn_eff = min(prep.block_n, max(128, lp.c_out))
+        if reference:
+            y = ref.split_precision_matmul_ref(
+                xb, x_q, sx, wb, prep.w_q, prep.sw,
+                ops.align_boundary(boundary, bn_eff))
+        else:
+            y = ops.split_precision_op(xb, x_q, sx, wb, prep.w_q, prep.sw,
+                                       boundary, bn=prep.block_n,
+                                       interpret=interpret)
+    else:  # pragma: no cover - __post_init__ rejects unknown kernels
+        raise ExecutionError(f"{lp.name}: unknown kernel {lp.kernel}")
+
+    y = jnp.take(y, jnp.asarray(prep.inv), axis=-1)
+    if prep.b is not None:
+        y = y + prep.b.astype(y.dtype)
+    return y.reshape(*lead, lp.c_out).astype(x.dtype)
+
+
+def reference_layer(prep: PreparedLayer, x) -> jax.Array:
+    """Full-precision oracle: ``x @ w + b`` on the ORIGINAL weight order
+    (the parity target planned execution is pinned against)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    w = jnp.take(prep.w_perm, jnp.asarray(prep.inv), axis=-1)
+    y = x2 @ w.astype(jnp.float32)
+    if prep.b is not None:
+        y = y + prep.b.astype(y.dtype)
+    return y.reshape(*lead, prep.plan.c_out).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Pluggable matmul backend over a whole plan
+# --------------------------------------------------------------------------
+
+class PlannedBackend:
+    """Binds an `ExecutionPlan` to a params pytree and serves the
+    `repro.models` matmul-backend protocol.
+
+    Layers resolve exactly like `lower()` resolves them (handle plan order,
+    or artifact layer names as params paths); each resolved 2-D weight leaf
+    is prepared once and thereafter matched BY IDENTITY inside
+    ``dense(p, x)`` — stacked/scanned weights (leaves that only exist as
+    tracers inside a `jax.lax.scan` body) therefore never match and fall
+    through to the caller's default path.  ``bound``/``unbound`` record the
+    coverage split.
+    """
+
+    def __init__(self, plan: ExecutionPlan, params, handle=None, *,
+                 interpret=None, reference: bool = False):
+        self.plan = plan
+        self.interpret = interpret
+        self.reference = reference
+        domain_bits = [int(d["weight_bits"]) for d in plan.domains]
+        if handle is not None:
+            dicts = handle.layers(params)
+            if len(dicts) != len(plan.layers):
+                raise LoweringError(
+                    f"handle resolves {len(dicts)} managed layers but the "
+                    f"plan has {len(plan.layers)}")
+            resolved = list(zip(plan.layers, dicts))
+        else:
+            resolved = [(lp, _walk_path(params, lp.name))
+                        for lp in plan.layers]
+        self._by_id: Dict[int, PreparedLayer] = {}
+        self.bound: List[str] = []
+        self.unbound: List[str] = []
+        for lp, node in resolved:
+            w = _layer_weight(node)
+            if not isinstance(node, dict) or getattr(w, "ndim", 0) != 2 \
+                    or isinstance(w, jax.ShapeDtypeStruct):
+                self.unbound.append(lp.name)
+                continue
+            prep = prepare_layer(lp, w, b=node.get("b"),
+                                 domain_bits=domain_bits,
+                                 block_n=plan.block_n)
+            self._by_id[id(w)] = prep
+            self.bound.append(lp.name)
+
+    def __call__(self, p, x):
+        """Matmul-backend hook: ``p`` is a dense param dict.  Returns the
+        planned output (bias applied) or None to decline."""
+        w = p.get("w") if isinstance(p, dict) else None
+        prep = self._by_id.get(id(w)) if w is not None else None
+        if prep is None:
+            return None
+        return execute_layer(prep, x, interpret=self.interpret,
+                             reference=self.reference)
+
+    def coverage(self) -> str:
+        return (f"{len(self.bound)}/{len(self.plan.layers)} planned layers "
+                f"bound to weights")

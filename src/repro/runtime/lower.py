@@ -1,0 +1,290 @@
+"""`lower()`: compile a `MappingArtifact` onto the repo's kernels.
+
+The compiler takes the artifact (object or plain dict — this module never
+imports `repro.api`) plus, optionally, the model's params/handle, and emits
+an `ExecutionPlan`:
+
+  * reorg: `core.discretize.stable_perm` groups each layer's output channels
+    by domain; `split_points` gives the cumulative boundaries; the
+    `kernels.ops.align_boundary` rule rounds them up to the Pallas N-block.
+  * validation: artifact channel counts vs actual weight shapes, boundary
+    monotonicity/alignment, domain->kernel capability checks.
+  * kernel selection per layer (see `select_kernel`):
+      - one active >=16-bit domain            -> "fp"
+      - one active <=8-bit domain             -> "quant_matmul" (2-bit:
+                                                 "ternary_matmul")
+      - int8-ish + identity domains, quant
+        domain ordered first                  -> "split_precision"
+      - anything else                         -> "fp" fallback, reason in
+                                                 ``note`` (LoweringError if
+                                                 ``strict=True``)
+  * scales: artifact v2 per-layer scales win; otherwise the ODiMO state of
+    the resolved layer dict; otherwise max-abs statistics of the concrete
+    weight; otherwise None (v1 artifacts "lower without scales" — executors
+    then derive scales from the weights they bind to).
+
+CLI (the artifact pipeline's middle step, exercised by scripts/ci_smoke.sh):
+
+    PYTHONPATH=src python -m repro.runtime.lower mapping.json \
+        --out plan.json [--arch yi-9b --reduce] [--block-n 128]
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import quant
+from repro.core.discretize import split_points, stable_perm
+from repro.kernels.ops import align_boundary
+from repro.runtime.plan import (KERNEL_FP, KERNEL_QUANT, KERNEL_SPLIT,
+                                KERNEL_TERNARY, ExecutionPlan, LayerPlan,
+                                LoweringError, PLAN_SCHEMA_VERSION)
+
+
+def _artifact_dict(artifact) -> dict:
+    if hasattr(artifact, "to_dict"):
+        artifact = artifact.to_dict()
+    version = artifact.get("schema_version", 1)
+    if version > PLAN_SCHEMA_VERSION:
+        raise LoweringError(f"mapping artifact schema v{version} is newer "
+                            f"than supported v{PLAN_SCHEMA_VERSION}")
+    return artifact
+
+
+def _walk_path(params, name: str):
+    """Resolve a slash-separated layer name into the params pytree; returns
+    None when any segment is missing."""
+    node = params
+    for part in name.split("/"):
+        try:
+            if isinstance(node, (list, tuple)):
+                node = node[int(part)]
+            elif isinstance(node, dict):
+                node = node[part]
+            else:
+                return None
+        except (KeyError, IndexError, ValueError, TypeError):
+            return None
+    return node
+
+
+def resolve_layer_params(artifact, params=None, handle=None):
+    """Per artifact layer, the param node it names: a managed-layer dict
+    (``{"w": ..., "b"?, "odimo"?, "act_log_scale"?}``), a bare weight leaf,
+    or None when unresolvable / no params were given.
+
+    With a ``handle`` (any object with ``layers(params)``, e.g. a
+    `repro.api.ModelHandle`), layers come back in plan order — artifact
+    order by construction.  Otherwise artifact layer names are resolved as
+    slash-separated paths into ``params`` (the `launch/train.py
+    --emit-mapping` convention).
+    """
+    art = _artifact_dict(artifact)
+    names = [l["name"] for l in art["layers"]]
+    if handle is not None and params is not None:
+        dicts = handle.layers(params)
+        if len(dicts) != len(names):
+            raise LoweringError(
+                f"handle resolves {len(dicts)} managed layers but the "
+                f"artifact has {len(names)}")
+        return list(zip(names, dicts))
+    if params is None:
+        return [(n, None) for n in names]
+    return [(n, _walk_path(params, n)) for n in names]
+
+
+def _layer_weight(node) -> Any | None:
+    """The weight array (or ShapeDtypeStruct) of a resolved param node."""
+    if node is None:
+        return None
+    if isinstance(node, dict):
+        w = node.get("w")
+        return w if getattr(w, "ndim", 0) >= 2 else None
+    return node if getattr(node, "ndim", 0) >= 2 else None
+
+
+def _is_concrete(w) -> bool:
+    return w is not None and hasattr(w, "dtype") and not (
+        type(w).__name__ == "ShapeDtypeStruct")
+
+
+def select_kernel(counts: Sequence[int],
+                  domain_bits: Sequence[int]) -> Tuple[str, str]:
+    """(kernel, note) for a layer from its per-domain channel counts and the
+    domains' weight bit-widths.  ``note`` is non-empty iff the layer fell
+    back to fp for a capability reason."""
+    active = [i for i, c in enumerate(counts) if c > 0]
+    if not active:
+        return KERNEL_FP, "no channels assigned"
+    if len(active) == 1:
+        bits = domain_bits[active[0]]
+        if bits >= 16:
+            return KERNEL_FP, ""
+        if bits == 2:
+            return KERNEL_TERNARY, ""
+        if 2 < bits <= 8:
+            return KERNEL_QUANT, ""
+        return KERNEL_FP, f"no kernel for {bits}-bit weights"
+    if len(active) == 2:
+        lo, hi = active
+        lo_bits, hi_bits = domain_bits[lo], domain_bits[hi]
+        if 2 < lo_bits <= 8 and hi_bits >= 16:
+            return KERNEL_SPLIT, ""
+        if lo_bits >= 16 and 2 < hi_bits <= 8:
+            return KERNEL_FP, ("split kernel needs the quantized domain "
+                               "ordered before the identity domain")
+        return KERNEL_FP, (f"no fused kernel for {lo_bits}-bit + "
+                           f"{hi_bits}-bit domains")
+    return KERNEL_FP, f"{len(active)} active domains exceed fused kernels"
+
+
+def _layer_scales(art_layer: dict, node) -> Tuple[List[float] | None,
+                                                  float | None]:
+    """(w_log_scales, act_log_scale) by priority: artifact v2 scales ->
+    ODiMO state of the resolved layer dict -> None (lower() then falls back
+    to max-abs statistics of the concrete weight, when one is bound)."""
+    sc = art_layer.get("scales")
+    if sc:
+        wls = sc.get("w_log_scales")
+        als = sc.get("act_log_scale")
+        return ([float(v) for v in wls] if wls is not None else None,
+                float(als) if als is not None else None)
+    if isinstance(node, dict) and "odimo" in node:
+        wls = [float(v) for v in np.asarray(node["odimo"]["log_scales"])]
+        als = node.get("act_log_scale")
+        return wls, (float(als) if als is not None else None)
+    return None, None
+
+
+def lower(artifact, params=None, handle=None, *, block_n: int = 128,
+          strict: bool = False) -> ExecutionPlan:
+    """Compile ``artifact`` into an `ExecutionPlan`.
+
+    ``params``/``handle`` enable shape validation and scale recovery (see
+    `resolve_layer_params`); without them the plan is lowered from the
+    artifact alone.  ``strict=True`` turns capability fallbacks (layers that
+    would silently run fp) into `LoweringError`s; shape mismatches always
+    raise.
+    """
+    art = _artifact_dict(artifact)
+    domains = [dict(d) for d in art["domains"]]
+    domain_bits = [int(d["weight_bits"]) for d in domains]
+    n_domains = len(domains)
+    resolved = resolve_layer_params(art, params=params, handle=handle)
+
+    layers: List[LayerPlan] = []
+    for art_layer, (name, node) in zip(art["layers"], resolved):
+        assign = np.asarray(art_layer["assignment"], dtype=np.int64)
+        if assign.size and (assign.min() < 0 or assign.max() >= n_domains):
+            raise LoweringError(
+                f"layer {name!r}: assignment references domain "
+                f"{int(assign.max())} but the artifact declares only "
+                f"{n_domains} domains")
+        counts = [int((assign == i).sum()) for i in range(n_domains)]
+        art_counts = [int(c) for c in art_layer.get("counts", counts)]
+        if art_counts != counts:
+            raise LoweringError(
+                f"layer {name!r}: stored counts {art_counts} disagree with "
+                f"the assignment's {counts}")
+
+        if params is not None and handle is None and node is None:
+            raise LoweringError(
+                f"layer {name!r}: no param node at this path — the artifact "
+                f"was produced for a different model/config")
+        w = _layer_weight(node)
+        c_out = int(assign.size)
+        c_in = int(art_layer.get("c_in", 0))
+        if w is not None:
+            if int(w.shape[-1]) != c_out:
+                raise LoweringError(
+                    f"layer {name!r}: artifact assigns {c_out} output "
+                    f"channels but the bound weight has shape "
+                    f"{tuple(w.shape)} ({int(w.shape[-1])} channels) — "
+                    f"the artifact does not match this model")
+            c_in = int(np.prod(w.shape[:-1]))
+
+        perm = stable_perm(assign)
+        bounds = split_points(assign[perm], n_domains)
+        # the ops clamp the N-block to min(bn, max(128, n)); align with the
+        # SAME effective block so the plan records what actually executes
+        bn_eff = min(block_n, max(128, c_out)) if c_out else block_n
+        aligned = [min(align_boundary(b, bn_eff),
+                       align_boundary(c_out, bn_eff)) for b in bounds]
+        if any(b2 < b1 for b1, b2 in zip(aligned, aligned[1:])):
+            raise LoweringError(f"layer {name!r}: aligned boundaries "
+                                f"{aligned} are not monotone")
+
+        kernel, note = select_kernel(counts, domain_bits)
+        if strict and note:
+            raise LoweringError(f"layer {name!r}: {note}")
+
+        w_ls, act_ls = _layer_scales(art_layer, node)
+        if w_ls is None and _is_concrete(w):
+            ls = float(quant.init_log_scale(np.asarray(w, dtype=np.float32)))
+            w_ls = [ls] * n_domains
+
+        layers.append(LayerPlan(
+            name=name, kernel=kernel, c_in=c_in, c_out=c_out, perm=perm,
+            counts=counts, boundaries=[int(b) for b in bounds],
+            aligned_boundaries=[int(b) for b in aligned],
+            w_log_scales=w_ls, act_log_scale=act_ls,
+            searchable=bool(art_layer.get("searchable", True)), note=note))
+
+    return ExecutionPlan(model=art.get("model", "unknown"), domains=domains,
+                         layers=layers, platform=art.get("platform"),
+                         block_n=block_n)
+
+
+# --------------------------------------------------------------------------
+# CLI: mapping.json -> plan.json
+# --------------------------------------------------------------------------
+
+def _lm_param_shapes(arch: str, reduce: bool):
+    """ShapeDtypeStruct pytree of an LM's params (cheap: jax.eval_shape)."""
+    import jax
+    from repro.configs import base as cfgbase
+    from repro.models import transformer as T
+    cfgbase.load_all()
+    cfg = cfgbase.get(arch)
+    if reduce:
+        cfg = cfgbase.reduce_for_smoke(cfg)
+    return jax.eval_shape(lambda k: T.init_lm(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def main(argv=None):
+    import argparse
+    import json
+    from pathlib import Path
+
+    ap = argparse.ArgumentParser(
+        description="lower a mapping artifact to an execution plan")
+    ap.add_argument("artifact", help="mapping artifact JSON (repro.api)")
+    ap.add_argument("--out", default=None, help="plan JSON output path")
+    ap.add_argument("--arch", default=None,
+                    help="validate against this LM arch's weight shapes")
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--block-n", type=int, default=128)
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on fp capability fallbacks")
+    args = ap.parse_args(argv)
+
+    artifact = json.loads(Path(args.artifact).read_text())
+    params = (_lm_param_shapes(args.arch, args.reduce)
+              if args.arch else None)
+    plan = lower(artifact, params=params, block_n=args.block_n,
+                 strict=args.strict)
+    print(f"[lower] {plan.summary()}")
+    for lp in plan.layers:
+        extra = f"  ({lp.note})" if lp.note else ""
+        print(f"[lower]   {lp.name}: {lp.kernel} counts={lp.counts} "
+              f"aligned={lp.aligned_boundaries}{extra}")
+    if args.out:
+        plan.save(args.out)
+        print(f"[lower] wrote {args.out}")
+    return plan
+
+
+if __name__ == "__main__":
+    main()

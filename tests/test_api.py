@@ -279,7 +279,7 @@ def test_artifact_json_roundtrip(tmp_path):
     loaded = MappingArtifact.load(p)
     assert loaded.to_dict() == art.to_dict()
     doc = json.loads(p.read_text())
-    assert doc["schema_version"] == 1
+    assert doc["schema_version"] == 2
     assert doc["layers"][0]["assignment"] == [0, 1, 0, 1, 0, 1]
     assert doc["domains"][0]["name"] == "digital"
     for a, b in zip(loaded.assignments(), art.assignments()):

@@ -1,0 +1,365 @@
+"""Mapping-execution runtime tests (`repro.runtime`): artifact -> plan ->
+artifact round trips, per-layer planned execution parity against the fp
+reference (interpret mode), lowering validation, kernel capability
+selection, the serve fallback vote, pipeline stage checkpointing, and the
+3-domain gap9_like platform."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (MappingArtifact, Platform, SearchConfig,
+                       SearchPipeline, lower, mlp_handle)
+from repro.core import baselines as BL
+from repro.data.pipeline import ImageTaskConfig, image_batch
+from repro.runtime import (ExecutionPlan, KERNEL_FP, KERNEL_QUANT,
+                           KERNEL_SPLIT, KERNEL_TERNARY, LayerPlan,
+                           LoweringError, PlannedBackend, execute_layer,
+                           prepare_layer, reference_layer)
+from repro.runtime.lower import select_kernel
+
+TINY = SearchConfig(lam=1e-6, objective="latency", pretrain_steps=3,
+                    search_steps=5, finetune_steps=2, batch=8, eval_batches=2)
+
+
+def _data_fn(n_classes=10, img_hw=(4, 4)):
+    task = ImageTaskConfig(n_classes=n_classes, img_hw=img_hw)
+    return lambda step, batch: image_batch(task, step, batch)
+
+
+def _toy_artifact(rng=None):
+    """2-layer TPU-domain artifact + matching concrete params."""
+    rng = rng or np.random.default_rng(0)
+    spec = Platform.get("tpu_v5e").spec()
+    a0 = np.array(([0] * 3 + [1]) * 16)            # 64 cols, mixed
+    a1 = np.zeros(48, dtype=np.int64)              # all int8
+    assigns = [a0, a1]
+    counts = BL.counts_from_assignments(assigns, 2)
+    plan_list = [("l0", None, True), ("l1", None, False)]
+    art = MappingArtifact.from_search("toy", spec, plan_list, assigns,
+                                      counts, platform="tpu_v5e")
+    params = {
+        "l0": {"w": jnp.asarray(rng.normal(size=(32, 64)) * 0.3, jnp.float32),
+               "b": jnp.asarray(rng.normal(size=(64,)) * 0.1, jnp.float32)},
+        "l1": {"w": jnp.asarray(rng.normal(size=(64, 48)) * 0.2,
+                                jnp.float32)},
+    }
+    return art, params
+
+
+# --------------------------------------------------------------------------
+# (a) artifact -> plan -> artifact round trip
+# --------------------------------------------------------------------------
+
+def test_artifact_plan_artifact_roundtrip(tmp_path):
+    art, params = _toy_artifact()
+    plan = lower(art, params=params)
+    assert [lp.name for lp in plan.layers] == ["l0", "l1"]
+    for lp, a in zip(plan.layers, art.assignments()):
+        # the permutation groups channels by domain, stably
+        sorted_assign = a[lp.perm]
+        assert (np.diff(sorted_assign) >= 0).all()
+        np.testing.assert_array_equal(lp.perm, np.argsort(a, kind="stable"))
+        # boundaries are the counts' cumulative sums; aligned ones are
+        # block-multiples covering them
+        np.testing.assert_array_equal(lp.boundaries, np.cumsum(lp.counts))
+        for raw, al in zip(lp.boundaries, lp.aligned_boundaries):
+            assert al % plan.block_n == 0 or al >= lp.c_out
+            assert al >= min(raw, al)
+        # plan -> artifact: counts and assignment are recoverable
+        assert lp.counts == [int((a == i).sum()) for i in range(2)]
+        rebuilt = np.empty_like(a)
+        rebuilt[lp.perm] = sorted_assign
+        np.testing.assert_array_equal(rebuilt, a)
+    # searchability survives lowering
+    assert plan["l0"].searchable and not plan["l1"].searchable
+    # JSON round trip, to disk and back
+    p = plan.save(tmp_path / "plan.json")
+    loaded = ExecutionPlan.load(p)
+    assert loaded.to_dict() == plan.to_dict()
+    assert loaded.summary() == plan.summary()
+    # future plan schemas are rejected, not misread
+    doc = json.loads(p.read_text())
+    doc["schema_version"] = 99
+    with pytest.raises(ValueError, match="newer"):
+        ExecutionPlan.from_dict(doc)
+
+
+def test_v1_artifact_lowers_without_scales():
+    """Migration: v1 documents (no scales) load and lower; executors fall
+    back to max-abs scales of the bound weights."""
+    art, params = _toy_artifact()
+    doc = art.to_dict()
+    doc["schema_version"] = 1
+    for l in doc["layers"]:
+        l.pop("scales", None)
+    v1 = MappingArtifact.from_dict(doc)
+    assert v1.schema_version == 1
+    plan = lower(v1, params=params)
+    lp = plan["l0"]
+    w = params["l0"]["w"]
+    assert lp.act_log_scale is None
+    assert lp.w_log_scales == pytest.approx(
+        [float(np.log(np.max(np.abs(np.asarray(w)))))] * 2)
+    backend = PlannedBackend(plan, params)
+    x = jnp.ones((4, 32), jnp.float32)
+    assert backend(params["l0"], x).shape == (4, 64)
+
+
+# --------------------------------------------------------------------------
+# kernel capability selection
+# --------------------------------------------------------------------------
+
+def test_select_kernel_capability_matrix():
+    bits2 = [8, 16]
+    assert select_kernel([10, 0], bits2) == (KERNEL_QUANT, "")
+    assert select_kernel([0, 10], bits2) == (KERNEL_FP, "")
+    assert select_kernel([5, 5], bits2) == (KERNEL_SPLIT, "")
+    assert select_kernel([4, 0], [2, 16]) == (KERNEL_TERNARY, "")
+    # ternary + int8 (DIANA mixed layer): no fused kernel -> fp, with reason
+    k, note = select_kernel([5, 5], [8, 2])
+    assert k == KERNEL_FP and "no fused kernel" in note
+    # quant domain ordered after the identity domain: split layout impossible
+    k, note = select_kernel([5, 5], [16, 8])
+    assert k == KERNEL_FP and "ordered before" in note
+    # three active domains exceed the fused kernels
+    k, note = select_kernel([3, 3, 3], [8, 2, 16])
+    assert k == KERNEL_FP and "3 active domains" in note
+
+
+def test_strict_lowering_rejects_capability_fallbacks():
+    spec = Platform.get("diana").spec()   # digital int8 + ternary AIMC
+    a = np.array([0, 1] * 8)
+    art = MappingArtifact.from_search(
+        "mixed", spec, [("l", None, True)], [a],
+        BL.counts_from_assignments([a], 2))
+    plan = lower(art)                     # non-strict: fp fallback + note
+    assert plan["l"].kernel == KERNEL_FP and plan["l"].note
+    with pytest.raises(LoweringError, match="no fused kernel"):
+        lower(art, strict=True)
+
+
+# --------------------------------------------------------------------------
+# (b) planned execution parity (interpret mode)
+# --------------------------------------------------------------------------
+
+def _split_prepared(rng, m=16, k=64, n=256, boundary=128):
+    assign = np.array([0] * boundary + [1] * (n - boundary))
+    lp = LayerPlan(
+        name="l", kernel=KERNEL_SPLIT, c_in=k, c_out=n,
+        perm=np.arange(n), counts=[boundary, n - boundary],
+        boundaries=[boundary, n], aligned_boundaries=[128, 256],
+        w_log_scales=None, act_log_scale=None)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.25, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n,)) * 0.1, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    return prepare_layer(lp, w, b, domain_bits=[8, 16]), x
+
+
+def test_planned_execution_matches_quantized_reference():
+    """Pallas (interpret) vs the pure-jnp oracle: bit-tolerance parity on a
+    layer wide enough that BOTH split domains execute."""
+    prep, x = _split_prepared(np.random.default_rng(1))
+    y_kernel = execute_layer(prep, x, interpret=True)
+    y_oracle = execute_layer(prep, x, reference=True)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_block_n_agrees_between_plan_and_execution():
+    """Plans lowered with a non-default block_n align boundaries with the
+    SAME effective N-block the ops execute with (the ops clamp bn to
+    min(bn, max(128, n)))."""
+    art, params = _toy_artifact()
+    for bn, expect_eff in ((256, 128), (128, 128)):   # c_out = 64 -> eff 128
+        plan = lower(art, params=params, block_n=bn)
+        lp = plan["l0"]
+        assert lp.aligned_boundaries == [128, 128]
+        backend = PlannedBackend(plan, params)
+        prep = next(iter(backend._by_id.values()))
+        assert prep.block_n == bn
+        x = jnp.asarray(np.random.default_rng(3).normal(size=(4, 32)),
+                        jnp.float32)
+        y_kernel = execute_layer(prep, x, interpret=True)
+        y_oracle = execute_layer(prep, x, reference=True)
+        np.testing.assert_allclose(np.asarray(y_kernel),
+                                   np.asarray(y_oracle),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_planned_execution_vs_fp_reference_within_quant_tolerance():
+    prep, x = _split_prepared(np.random.default_rng(2))
+    y = np.asarray(execute_layer(prep, x, interpret=True), np.float64)
+    y_fp = np.asarray(reference_layer(prep, x), np.float64)
+    rel = np.linalg.norm(y - y_fp) / np.linalg.norm(y_fp)
+    assert rel < 0.05, rel
+    # the bf16 (identity) half must be much tighter than int8 quant error
+    rel_hi = (np.linalg.norm(y[:, 128:] - y_fp[:, 128:])
+              / np.linalg.norm(y_fp[:, 128:]))
+    assert rel_hi < 0.01, rel_hi
+
+
+def test_planned_model_execution_parity_mlp():
+    """End-to-end deploy mode: a fixed-mapping search artifact lowered and
+    executed through the façade's pluggable backend stays within quant
+    tolerance of the fp forward pass."""
+    handle = mlp_handle(in_dim=48, widths=(160, 144), n_classes=10)
+    data_fn = _data_fn()
+    assigns = [np.array([0] * 96 + [1] * 64),
+               np.array([0] * 80 + [1] * 64),
+               np.zeros(10, np.int64)]
+    res = SearchPipeline.fixed_mapping(handle, assigns, "tpu_v5e",
+                                       train_steps=2, config=TINY,
+                                       data_fn=data_fn).run()
+    art = res.artifact
+    assert art.schema_version == 2
+    assert art.layers[0]["scales"]["w_log_scales"] is not None
+    plan = lower(art, params=res.params, handle=handle)
+    assert plan.kernel_histogram() == {KERNEL_SPLIT: 2, KERNEL_QUANT: 1}
+    backend = PlannedBackend(plan, res.params, handle=handle)
+    assert backend.bound == [lp.name for lp in plan.layers]
+
+    from repro.models import facades
+    spec = Platform.get("tpu_v5e").spec()
+    x, _ = data_fn(0, 8)
+    y_dep = facades.mlp_apply(res.params, x, handle.config, spec,
+                              mode="deploy", backend=backend)
+    y_fp = facades.mlp_apply(res.params, x, handle.config, spec, mode="fp")
+    rel = float(jnp.linalg.norm(y_dep - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel < 0.15, rel
+    # without a backend the deploy mode still runs (discretized fallback)
+    y_fb = facades.mlp_apply(res.params, x, handle.config, spec,
+                             mode="deploy")
+    assert np.isfinite(np.asarray(y_fb)).all()
+
+
+def test_backend_declines_uncovered_layers():
+    art, params = _toy_artifact()
+    plan = lower(art, params=params)
+    backend = PlannedBackend(plan, params)
+    other = {"w": jnp.ones((32, 64), jnp.float32)}
+    assert backend(other, jnp.ones((2, 32))) is None
+    from repro.models import layers as L
+    from repro.models.managed import matmul_backend
+    with matmul_backend(backend):
+        y = L.dense(other, jnp.ones((2, 32), jnp.float32))  # default path
+    np.testing.assert_allclose(np.asarray(y), 32.0)
+
+
+# --------------------------------------------------------------------------
+# (c) lowering validation
+# --------------------------------------------------------------------------
+
+def test_lowering_rejects_shape_mismatched_artifact():
+    art, params = _toy_artifact()
+    bad = {"l0": {"w": jnp.zeros((32, 60), jnp.float32)},
+           "l1": params["l1"]}
+    with pytest.raises(LoweringError,
+                       match="assigns 64 output channels.*60 channels"):
+        lower(art, params=bad)
+    # inconsistent stored counts are rejected too
+    doc = art.to_dict()
+    doc["layers"][0]["counts"] = [1, 63]
+    with pytest.raises(LoweringError, match="disagree"):
+        lower(doc, params=params)
+    # out-of-range domain indices are rejected
+    doc = art.to_dict()
+    doc["layers"][0]["assignment"][0] = 7
+    with pytest.raises(LoweringError, match="references domain"):
+        lower(doc, params=params)
+    # a layer name that resolves nowhere means the wrong model was given
+    with pytest.raises(LoweringError, match="no param node"):
+        lower(art, params={"l1": params["l1"]})
+
+
+# --------------------------------------------------------------------------
+# serve fallback: searchable-only majority vote
+# --------------------------------------------------------------------------
+
+def test_apply_mapping_artifact_counts_searchable_votes_only():
+    from repro.configs import base as cfgbase
+    from repro.launch import serve
+    cfgbase.load_all()
+    cfg = cfgbase.reduce_for_smoke(cfgbase.get("yi-9b"))
+    spec = Platform.get("tpu_v5e").spec()
+    # a wide PINNED layer on int8 (domain 0) vs a small searchable layer
+    # whose channels chose bf16: only the searchable layer may vote
+    a_pinned = np.zeros(512, np.int64)
+    a_search = np.ones(32, np.int64)
+    art = MappingArtifact.from_search(
+        "vote", spec, [("pinned", None, False), ("chosen", None, True)],
+        [a_pinned, a_search],
+        BL.counts_from_assignments([a_pinned, a_search], 2))
+    new_cfg, dom = serve.apply_mapping_artifact(cfg, art)
+    assert dom["name"] == "bf16"
+    assert new_cfg.serve_weight_dtype == cfg.serve_weight_dtype  # unchanged
+    # with no searchable layers at all, every layer votes (fallback)
+    art_all_pinned = MappingArtifact.from_search(
+        "vote2", spec, [("pinned", None, False)], [a_pinned],
+        BL.counts_from_assignments([a_pinned], 2))
+    _, dom = serve.apply_mapping_artifact(cfg, art_all_pinned)
+    assert dom["name"] == "int8"
+
+
+# --------------------------------------------------------------------------
+# pipeline stage checkpointing
+# --------------------------------------------------------------------------
+
+def test_pipeline_checkpoint_resume_restarts_at_search(tmp_path):
+    handle = mlp_handle(in_dim=48, widths=(24,), n_classes=10)
+    data_fn = _data_fn()
+    full = SearchPipeline(handle, "tpu_v5e", config=TINY, data_fn=data_fn,
+                          checkpoint_dir=str(tmp_path / "ck")).run()
+    resumed = SearchPipeline(handle, "tpu_v5e", config=TINY, data_fn=data_fn,
+                             resume_from=str(tmp_path / "ck")).run()
+    # the resumed run skipped Pretrain...
+    assert "pretrain" not in resumed.history and "pretrain" in full.history
+    # ...and is bit-identical from DNASSearch onward
+    assert resumed.accuracy == full.accuracy
+    assert resumed.latency == full.latency
+    for a, b in zip(resumed.assignments, full.assignments):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(
+        np.asarray(resumed.history["search"]),
+        np.asarray(full.history["search"]))
+    with pytest.raises(FileNotFoundError, match="no committed"):
+        SearchPipeline(handle, "tpu_v5e", config=TINY, data_fn=data_fn,
+                       resume_from=str(tmp_path / "nope")).run()
+
+
+# --------------------------------------------------------------------------
+# gap9_like: third registered platform, 3 domains
+# --------------------------------------------------------------------------
+
+def test_gap9_platform_three_domains():
+    plat = Platform.get("gap9_like")
+    assert [d.name for d in plat.domains] == ["ne16", "analog",
+                                              "cluster_fp16"]
+    assert [d.weight_bits for d in plat.domains] == [8, 2, 16]
+    spec = plat.spec()
+    assert spec.n_domains == 3 and spec.act_bits == 7
+    cm = plat.cost_model()
+    from repro.core.cost_models import LayerGeometry
+    lat = cm.latency(LayerGeometry(c_in=16, c_out=30),
+                     jnp.asarray([10.0, 10.0, 10.0]))
+    assert lat.shape == (3,)
+    assert float(lat[1]) < float(lat[0]) < float(lat[2])  # analog fastest
+
+
+def test_gap9_search_and_lowering():
+    handle = mlp_handle(in_dim=48, widths=(24,), n_classes=10)
+    res = SearchPipeline(handle, "gap9_like", config=TINY,
+                         data_fn=_data_fn()).run()
+    assert all(len(c) == 3 for c in res.counts)
+    assert len(res.artifact.domains) == 3
+    # lowering handles 3-domain layers: single-domain ones get their kernel,
+    # >2-active ones record the fp fallback reason
+    plan = lower(res.artifact, params=res.params, handle=handle)
+    for lp in plan.layers:
+        assert lp.kernel in (KERNEL_QUANT, KERNEL_TERNARY, KERNEL_SPLIT,
+                             KERNEL_FP)
+        if len(lp.active_domains()) > 2:
+            assert lp.kernel == KERNEL_FP and lp.note

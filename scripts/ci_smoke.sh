@@ -4,9 +4,15 @@
 #   2. tier-1 test suite (ROADMAP.md verify command)
 #   3. quickstart example in fast mode (exercises the repro.api pipeline,
 #      mapping artifact, and the fused split-precision kernel end-to-end)
-#   4. the full artifact pipeline: train --emit-mapping (schema-v2 artifact)
-#      -> repro.runtime lowering (ExecutionPlan) -> serve --mapping
-#      (per-layer planned kernel execution)
+#   4. the full LM artifact pipeline: train --emit-mapping (schema-v2
+#      artifact, scan-stacked layers as name@r entries) -> repro.runtime
+#      lowering (ExecutionPlan) -> serve --mapping (per-layer planned kernel
+#      execution under jax.jit, full coverage REQUIRED — scan-stacked
+#      weights must bind, not silently fall back to fp)
+#   5. the CNN artifact pipeline: train --arch cnn:resnet20_tiny
+#      --emit-mapping -> lower -> serve --arch cnn:resnet20_tiny --mapping
+#      (conv layers execute through the im2col'd planned kernels, full
+#      coverage required)
 #
 # Usage:  bash scripts/ci_smoke.sh            # installs requirements-dev.txt
 #         SKIP_INSTALL=1 bash scripts/ci_smoke.sh
@@ -25,7 +31,7 @@ python -m pytest -x -q
 echo "== quickstart (fast) =="
 python examples/quickstart.py --fast
 
-echo "== mapping runtime loop (train --emit-mapping -> lower -> serve --mapping) =="
+echo "== LM mapping runtime loop (train --emit-mapping -> lower -> serve --mapping) =="
 MAPDIR=$(mktemp -d)
 trap 'rm -rf "$MAPDIR"' EXIT
 python -m repro.launch.train --arch zamba2-1.2b --reduce --steps 2 \
@@ -34,9 +40,24 @@ python -m repro.launch.train --arch zamba2-1.2b --reduce --steps 2 \
 python -m repro.runtime "$MAPDIR/mapping.json" --arch zamba2-1.2b --reduce \
     --out "$MAPDIR/plan.json"
 test -s "$MAPDIR/plan.json"
+# scan-stacked layers are in the artifact as name@r entries
+grep -q '@0' "$MAPDIR/mapping.json"
 python -m repro.launch.serve --arch zamba2-1.2b --reduce --requests 2 \
     --prompt-len 16 --gen-len 4 --mapping "$MAPDIR/mapping.json" \
-    | tee "$MAPDIR/serve.log"
+    --require-full-coverage | tee "$MAPDIR/serve.log"
 grep -q "per-layer planned execution" "$MAPDIR/serve.log"
+grep -q ", 0 unbound" "$MAPDIR/serve.log"
+
+echo "== CNN mapping runtime loop (train cnn: -> lower -> serve cnn:) =="
+python -m repro.launch.train --arch cnn:resnet20_tiny --steps 2 --batch 8 \
+    --platform tpu_v5e --emit-mapping "$MAPDIR/cnn_mapping.json"
+python -m repro.runtime "$MAPDIR/cnn_mapping.json" \
+    --out "$MAPDIR/cnn_plan.json"
+test -s "$MAPDIR/cnn_plan.json"
+python -m repro.launch.serve --arch cnn:resnet20_tiny --requests 4 \
+    --mapping "$MAPDIR/cnn_mapping.json" \
+    --require-full-coverage | tee "$MAPDIR/cnn_serve.log"
+grep -q "per-layer planned execution" "$MAPDIR/cnn_serve.log"
+grep -q ", 0 unbound" "$MAPDIR/cnn_serve.log"
 
 echo "ci_smoke OK"

@@ -67,15 +67,37 @@ Execution plans (re-exported from repro.runtime)
         # repro.models.managed.matmul_backend(backend) installed, every
         # covered dense executes through its planned Pallas kernel.
 
-    ``launch/serve.py --mapping`` runs exactly this path over the LM
-    projections and demotes the old global majority-dtype choice to a
-    fallback; ``launch/dryrun.py --mapping`` reports the per-layer kernel
-    selection against an arch's weight shapes.
+    The backend protocol is NAME-KEYED and jit-safe:
+    ``backend(name, p, x, conv=...) -> y | None``, where ``name`` is the
+    layer's pytree path (artifact layer names ARE these paths).  Because
+    plans resolve by a static string at trace time, the whole planned
+    forward pass runs under ``jax.jit`` — ``serve.py --mapping`` jits
+    prefill/decode with planned kernels inside the trace.  Three layer
+    layouts execute: 2-D dense weights; scan-stacked weights (artifact
+    names ``base@r``, one layer per repeat — bound repeats are indexed
+    inside the layer scan via ``repro.models._backend.scan_slot``); and
+    4-D HWIO conv weights (im2col'd onto the dense kernels — CNN
+    artifacts serve end to end).  Binding failures and plan/model
+    mismatches raise `repro.runtime.ExecutionError` — a name-matched
+    layer never silently falls back to fp.
+
+    ``launch/serve.py --mapping`` runs exactly this path (LM archs and
+    ``cnn:<config>`` façades), reports bound/unbound coverage, and exits
+    nonzero under ``--require-full-coverage`` when any planned layer did
+    not execute as mapped; ``launch/dryrun.py --mapping`` reports the
+    per-layer kernel selection against an arch's weight shapes.
 
     Migration (v1 -> v2): v1 artifacts (no per-layer ``scales``) still load
     and lower — executors then derive weight scales from max-abs statistics
     of the weights they bind to and quantize activations dynamically.
     Documents with ``schema_version`` > 2 are rejected.
+
+    Migration (PR 2 -> PR 3 backends): the old protocol was
+    ``backend(p, x)`` with weight leaves matched by ``id()`` — it could
+    not see weights that exist only as tracers (any jitted call, every
+    scan-stacked layer), so those silently fell back to the default path.
+    Custom backends must add the leading ``name`` parameter and key on it
+    (see `repro.models._backend` for the full contract).
 
 Migrating from the tuple façade
     Old::

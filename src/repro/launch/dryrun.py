@@ -108,6 +108,7 @@ def mapping_plan_report(cfg, mapping_path: str) -> dict:
     try:
         plan = lower(artifact, params=pshapes)
     except LoweringError as e:
+        # no traceback: the message IS the diagnostic (main exits 2 on it)
         print(f"[dryrun] mapping {mapping_path} does not lower onto "
               f"{cfg.name}: {e}")
         return {"error": str(e)}
@@ -281,8 +282,13 @@ def main():
                 for mp in (False, True):
                     run_cell(arch, shape, mp, out)
     else:
-        run_cell(args.arch, args.shape, args.multi_pod, out,
-                 variant=args.variant, mapping=args.mapping)
+        rec = run_cell(args.arch, args.shape, args.multi_pod, out,
+                       variant=args.variant, mapping=args.mapping)
+        err = (rec or {}).get("mapping_plan", {}).get("error")
+        if err:
+            import sys
+            print(f"[dryrun] ERROR: {err}", file=sys.stderr)
+            sys.exit(2)
 
 
 if __name__ == "__main__":

@@ -4,16 +4,27 @@ decode over a shared KV cache pool.
 With ``--mapping`` the driver lowers the mapping artifact onto the model's
 actual weights (`repro.runtime.lower`) and executes every projection matmul
 the plan binds to through its per-layer planned kernel — split-precision /
-quant-matmul / ternary, interpret mode on CPU — via the pluggable matmul
-backend (`repro.runtime.PlannedBackend`); the artifact's activation
-majority still decides the KV-cache dtype (an activation-precision choice
-the per-layer weight kernels don't cover).  Weights that only exist stacked
-inside the layer scan run the default bf16 path (see ROADMAP runtime
-follow-ups); artifacts that fail to lower (shape mismatch / wrong model)
-fall back to the legacy global majority-dtype path
-(`apply_mapping_artifact`).
+quant-matmul / ternary, interpret mode on CPU — via the NAME-KEYED pluggable
+matmul backend (`repro.runtime.PlannedBackend`).  Because plans resolve by
+the layer's pytree path (a static string), prefill and decode run under
+``jax.jit`` with the planned kernels executing INSIDE the trace, and
+scan-stacked LM weights (``base@r`` plan names) bind too — the measured
+latency/energy is the mapped latency/energy, not a silent fp fallback.  The
+artifact's activation majority still decides the KV-cache dtype (an
+activation-precision choice the per-layer weight kernels don't cover).
+Artifacts that fail to lower or bind (shape mismatch / wrong model /
+stacked repeat-count mismatch) fall back to the legacy global
+majority-dtype path (`apply_mapping_artifact`);
+``--require-full-coverage`` turns partial binding into a nonzero exit
+instead.
 
-Example (CPU, reduced model):
+CNN artifacts serve through the same flag with the ``cnn:<config>`` arch
+convention — the conv layers execute through the im2col'd planned kernels:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch cnn:resnet20_tiny \
+        --requests 8 --mapping art.json --require-full-coverage
+
+Example (CPU, reduced LM):
     PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduce \
         --requests 8 --prompt-len 32 --gen-len 16 [--mapping art.json]
 """
@@ -22,6 +33,7 @@ from __future__ import annotations
 import argparse
 import contextlib
 import dataclasses
+import sys
 import time
 
 import jax
@@ -64,13 +76,43 @@ def plan_mapping_execution(params, artifact, interpret=None):
     """Lower ``artifact`` against ``params`` and bind a planned backend.
 
     Returns (plan, backend).  Raises `repro.runtime.LoweringError` when the
-    artifact does not match the model (callers fall back to
-    `apply_mapping_artifact`).
+    artifact does not lower onto the model, and `repro.runtime
+    .ExecutionError` when the lowered plan cannot bind (e.g. a stacked
+    repeat-count mismatch); callers catch both and fall back to
+    `apply_mapping_artifact`.
     """
     from repro.runtime import PlannedBackend, lower
     plan = lower(artifact, params=params)
     backend = PlannedBackend(plan, params, interpret=interpret)
     return plan, backend
+
+
+def print_plan_coverage(tag, plan, backend):
+    """Per-layer kernel/coverage report + the greppable summary line."""
+    hist = " ".join(f"{k}:{v}" for k, v in
+                    sorted(plan.kernel_histogram().items()))
+    print(f"[{tag}] per-layer planned execution ({hist}; "
+          f"{backend.coverage()})")
+    for lp in plan.layers:
+        mark = "*" if lp.name in backend.bound else " "
+        note = f"  ({lp.note})" if lp.note else ""
+        print(f"[{tag}]  {mark} {lp.name}: {lp.kernel} "
+              f"counts={lp.counts}{note}")
+
+
+def check_coverage(tag, backend, require_full: bool):
+    """Enforce ``--require-full-coverage``: exit 2 when any planned layer is
+    unbound or declined at trace time."""
+    for name, reason in sorted((backend.runtime_declines or {}).items()):
+        print(f"[{tag}] declined at trace time: {name}: {reason}")
+    if not require_full:
+        return
+    problems = list(backend.unbound) + sorted(backend.runtime_declines)
+    if problems:
+        print(f"[{tag}] ERROR: --require-full-coverage but "
+              f"{len(problems)} planned layers did not execute as mapped: "
+              f"{problems}", file=sys.stderr)
+        sys.exit(2)
 
 
 def sample_greedy(logits):
@@ -81,23 +123,20 @@ def serve_batch(cfg, params, prompts, gen_len: int, frontend=None,
                 backend=None):
     """prompts: (B, P) int32. Returns generated (B, gen_len).
 
-    With a matmul ``backend`` the steps run eagerly (outside jit) so the
-    backend can match weight leaves by identity; covered projections then
-    execute through their planned Pallas kernels.
+    Prefill/decode run under ``jax.jit`` with or without a matmul
+    ``backend``: the name-keyed backend protocol resolves plans statically
+    during tracing, so covered projections execute through their planned
+    Pallas kernels inside the compiled step.
     """
     B, P = prompts.shape
     S_max = P + gen_len
     caches = T.init_cache(cfg, B, S_max)
 
-    if backend is None:
-        prefill = jax.jit(lambda p, t, c, f: T.prefill(p, cfg, t, c,
-                                                       cross_source=f))
-        decode = jax.jit(lambda p, t, c, i: T.decode_step(p, cfg, t, c, i))
-        ctx = contextlib.nullcontext()
-    else:
-        prefill = lambda p, t, c, f: T.prefill(p, cfg, t, c, cross_source=f)
-        decode = lambda p, t, c, i: T.decode_step(p, cfg, t, c, i)
-        ctx = matmul_backend(backend)
+    prefill = jax.jit(lambda p, t, c, f: T.prefill(p, cfg, t, c,
+                                                   cross_source=f))
+    decode = jax.jit(lambda p, t, c, i: T.decode_step(p, cfg, t, c, i))
+    ctx = matmul_backend(backend) if backend is not None \
+        else contextlib.nullcontext()
 
     with ctx:
         t0 = time.monotonic()
@@ -117,9 +156,58 @@ def serve_batch(cfg, params, prompts, gen_len: int, frontend=None,
                  "tok_per_s": B * (gen_len - 1) / max(t_decode, 1e-9)}
 
 
+# --------------------------------------------------------------------------
+# CNN serving (arch "cnn:<config>"): batch inference through the planned
+# conv/dense kernels
+# --------------------------------------------------------------------------
+
+def serve_cnn(args, cnn_name: str):
+    """Batch-inference "serving" of a CNN façade, with ``--mapping`` running
+    every bound conv/dense through its planned kernel (im2col'd conv
+    lowering) under ``jax.jit``."""
+    from repro.models import cnn as C
+    cfg = C.get_config(cnn_name)
+    init_fn, apply_fn, _ = C.get_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_fn(key, cfg, None)
+
+    backend = None
+    if args.mapping:
+        from repro.api import MappingArtifact
+        from repro.runtime import ExecutionError, LoweringError
+        art = MappingArtifact.load(args.mapping)
+        try:
+            plan, backend = plan_mapping_execution(params, art)
+        except (LoweringError, ExecutionError) as e:
+            print(f"[serve] mapping {args.mapping} failed to lower/bind "
+                  f"({e})", file=sys.stderr)
+            sys.exit(2)
+        print(f"[serve] mapping {args.mapping}: model={art.model} "
+              f"platform={art.platform}")
+        print_plan_coverage("serve", plan, backend)
+
+    x = jax.random.normal(key, (args.requests, *cfg.img_hw, cfg.in_ch),
+                          jnp.float32)
+    fwd = jax.jit(lambda p, xb: apply_fn(p, xb, cfg, None, "fp", 1.0))
+    ctx = matmul_backend(backend) if backend is not None \
+        else contextlib.nullcontext()
+    with ctx:
+        t0 = time.monotonic()
+        logits = jax.block_until_ready(fwd(params, x))
+        dt = time.monotonic() - t0
+    assert logits.shape == (args.requests, cfg.n_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+    if backend is not None:
+        check_coverage("serve", backend, args.require_full_coverage)
+    print(f"[serve] {cfg.name}: {args.requests} images in {dt*1e3:.0f}ms "
+          f"({args.requests / max(dt, 1e-9):.1f} img/s)")
+    return logits, {"forward_s": dt}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", required=True,
+                    help="LM arch name, or cnn:<config> for CNN façades")
     ap.add_argument("--reduce", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -132,7 +220,19 @@ def main(argv=None):
     ap.add_argument("--mapping-fallback", action="store_true",
                     help="skip plan lowering and use the legacy global "
                          "majority-dtype path directly")
+    ap.add_argument("--require-full-coverage", action="store_true",
+                    help="exit nonzero unless every planned layer is bound "
+                         "AND executes as mapped (no fp fallbacks, no "
+                         "trace-time declines)")
     args = ap.parse_args(argv)
+
+    if args.require_full_coverage and not args.mapping:
+        # without an artifact nothing executes as mapped — passing the gate
+        # green would be exactly the silent fallback it exists to catch
+        ap.error("--require-full-coverage needs --mapping")
+
+    if args.arch.startswith("cnn:"):
+        return serve_cnn(args, args.arch.split(":", 1)[1])
 
     cfgbase.load_all()
     cfg = cfgbase.get(args.arch)
@@ -149,13 +249,13 @@ def main(argv=None):
 
     backend = None
     if art is not None:
-        from repro.runtime import LoweringError
+        from repro.runtime import ExecutionError, LoweringError
         plan = None
         if not args.mapping_fallback:
             try:
                 plan, backend = plan_mapping_execution(params, art)
-            except LoweringError as e:
-                print(f"[serve] mapping {args.mapping} failed to lower "
+            except (LoweringError, ExecutionError) as e:
+                print(f"[serve] mapping {args.mapping} failed to lower/bind "
                       f"({e}); falling back to majority-dtype serving")
         if backend is not None:
             # KV-cache precision follows the artifact's activation majority
@@ -164,22 +264,20 @@ def main(argv=None):
             dom = art.domains[int(np.argmax(fractions))]
             if dom.get("act_bits", 16) <= 8:
                 cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
-            hist = " ".join(f"{k}:{v}" for k, v in
-                            sorted(plan.kernel_histogram().items()))
             print(f"[serve] mapping {args.mapping}: model={art.model} "
-                  f"platform={art.platform} -> per-layer planned execution "
-                  f"({hist}; {backend.coverage()}; kv={cfg.kv_cache_dtype})")
-            for lp in plan.layers:
-                mark = "*" if lp.name in backend.bound else " "
-                note = f"  ({lp.note})" if lp.note else ""
-                print(f"[serve]  {mark} {lp.name}: {lp.kernel} "
-                      f"counts={lp.counts}{note}")
+                  f"platform={art.platform} kv={cfg.kv_cache_dtype} "
+                  f"(jit: prefill+decode)")
+            print_plan_coverage("serve", plan, backend)
         else:
             cfg, dom = apply_mapping_artifact(cfg, art)
             print(f"[serve] mapping {args.mapping}: model={art.model} "
                   f"platform={art.platform} FALLBACK majority domain="
                   f"{dom['name']} -> weights={cfg.serve_weight_dtype} "
                   f"kv={cfg.kv_cache_dtype}")
+            if args.require_full_coverage:
+                print("[serve] ERROR: --require-full-coverage but no "
+                      "execution plan could be bound", file=sys.stderr)
+                sys.exit(2)
 
     prompts = jax.random.randint(key, (args.requests, args.prompt_len),
                                  0, cfg.vocab)
@@ -192,6 +290,8 @@ def main(argv=None):
                              backend=backend)
     assert gen.shape == (args.requests, args.gen_len)
     assert np.isfinite(np.asarray(gen)).all()
+    if backend is not None:
+        check_coverage("serve", backend, args.require_full_coverage)
     print(f"[serve] {cfg.name}: {args.requests} reqs, prefill "
           f"{stats['prefill_s']*1e3:.0f}ms, decode {stats['decode_s']*1e3:.0f}ms "
           f"({stats['tok_per_s']:.1f} tok/s)")

@@ -32,18 +32,38 @@ from repro.models import transformer as T
 from repro.optim import adamw, compression
 
 
-def emit_static_mapping(params, cfg, platform, out_path, max_cout=512):
-    """Write a schema-v2 `repro.api` mapping artifact for the trained LM's
-    2-D weight matrices: per-layer min-cost static channel split (paper
-    Sec. IV baselines) under the named platform's cost model, with max-abs
-    weight quant scales so the artifact lowers to an executable
+def emit_static_mapping(params, cfg, platform, out_path, max_cout=512,
+                        stacked_prefixes=("units", "enc_units"),
+                        plan_hints=None):
+    """Write a schema-v2 `repro.api` mapping artifact for the trained
+    model's projection weights: per-layer min-cost static channel split
+    (paper Sec. IV baselines) under the named platform's cost model, with
+    max-abs weight quant scales so the artifact lowers to an executable
     `ExecutionPlan` (``serve.py --mapping`` per-layer planned execution).
 
     Layer names are params-pytree paths in flatten order (not network
-    order).  Activation scales are left null (the executors quantize with
-    dynamic max-abs statistics).  Layers wider than ``max_cout`` output
-    channels are pinned to domain 0 — the exhaustive per-layer split search
-    is O(C_out) cost evaluations.
+    order).  Three weight layouts are covered:
+
+      * 2-D ``(C_in, C_out)`` dense matrices -> one layer per weight;
+      * 3-D ``(R, C_in, C_out)`` scan-stacked dense matrices (leaves under
+        a ``stacked_prefixes`` subtree) -> one layer PER REPEAT, named
+        ``path@r`` with that repeat's own max-abs scale, so every scanned
+        layer binds and executes as mapped (no silent fp fallbacks);
+      * 4-D ``(kh, kw, C_in, C_out)`` HWIO conv kernels -> one layer per
+        conv, lowered through the im2col execution path.
+
+    ``plan_hints`` — optional ``{name: (LayerGeometry, searchable)}`` from a
+    façade's ``plan()`` — supplies the true cost-model geometry (conv output
+    maps, groups) and searchability; grouped/depthwise convs are SKIPPED
+    (the executors have no im2col lowering for them, so emitting them would
+    guarantee a --require-full-coverage failure for the pipeline's own
+    artifact).  Without hints, conv geometry falls back to the weight shape
+    alone (ox/oy unknown -> 1).
+
+    Activation scales are left null (the executors quantize with dynamic
+    max-abs statistics).  Layers wider than ``max_cout`` output channels are
+    pinned to domain 0 — the exhaustive per-layer split search is O(C_out)
+    cost evaluations.
     """
     from repro.api import MappingArtifact, Platform
     from repro.core import baselines, quant
@@ -51,24 +71,56 @@ def emit_static_mapping(params, cfg, platform, out_path, max_cout=512):
 
     plat = Platform.get(platform)
     cm, spec = plat.cost_model(), plat.spec()
-    names, geoms, searchable, scales = [], [], [], []
+    names, geoms, searchable, scales, skipped = [], [], [], [], []
+    plan_hints = plan_hints or {}
+
+    def w_scale(w):
+        ls = float(quant.init_log_scale(np.asarray(w, dtype=np.float32)))
+        return {"w_log_scales": [ls] * spec.n_domains, "act_log_scale": None}
+
     for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
-        if getattr(leaf, "ndim", 0) != 2:
-            continue
         parts = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
-        # dense layers only ({"w": ...} dicts, the repo-wide convention) —
-        # stacked scan params make 1-D leaves (norm scales, ssm params)
-        # look 2-D, and those can never execute as channel-split matmuls
+        # dense/conv layers only ({"w": ...} dicts, the repo-wide
+        # convention) — other >=2-D leaves (norm scale stacks, ssm params,
+        # grouped expert einsums) can never execute as channel-split matmuls
         if not parts or parts[-1] != "w":
             continue
         parts = parts[:-1]               # drop the leaf key: name the layer
         name = "/".join(parts)
-        names.append(name)
-        geoms.append(LayerGeometry(c_in=leaf.shape[0], c_out=leaf.shape[1]))
-        searchable.append(leaf.shape[1] <= max_cout)
-        ls = float(quant.init_log_scale(np.asarray(leaf, dtype=np.float32)))
-        scales.append({"w_log_scales": [ls] * spec.n_domains,
-                       "act_log_scale": None})
+        ndim = getattr(leaf, "ndim", 0)
+        hint = plan_hints.get(name)
+        if hint is not None and hint[0].groups != 1:
+            skipped.append(name)     # no im2col lowering for grouped convs
+            continue
+        if ndim == 2:
+            names.append(name)
+            geoms.append(hint[0] if hint else
+                         LayerGeometry(c_in=leaf.shape[0],
+                                       c_out=leaf.shape[1]))
+            searchable.append((hint[1] if hint else True) and
+                              leaf.shape[1] <= max_cout)
+            scales.append(w_scale(leaf))
+        elif ndim == 3 and parts and parts[0] in stacked_prefixes:
+            # scan-stacked dense: one artifact layer per repeat
+            for r in range(leaf.shape[0]):
+                names.append(f"{name}@{r}")
+                geoms.append(LayerGeometry(c_in=leaf.shape[1],
+                                           c_out=leaf.shape[2]))
+                searchable.append(leaf.shape[2] <= max_cout)
+                scales.append(w_scale(leaf[r]))
+        elif ndim == 4:
+            kh, kw, ci, co = leaf.shape
+            names.append(name)
+            # façade plan geometry carries the output map (ox/oy) the cost
+            # model's latency is nonlinear in; the weight shape alone can't
+            geoms.append(hint[0] if hint else
+                         LayerGeometry(c_in=ci, c_out=co, fx=kw, fy=kh))
+            searchable.append((hint[1] if hint else True) and
+                              co <= max_cout)
+            scales.append(w_scale(leaf))
+    if skipped:
+        print(f"[train] skipped {len(skipped)} grouped-conv layers "
+              f"(no im2col lowering): {skipped}")
     assigns = baselines.min_cost(cm, geoms, "latency", searchable)
     counts = baselines.counts_from_assignments(assigns, spec.n_domains)
     plan = [(n, g, s) for n, g, s in zip(names, geoms, searchable)]
@@ -79,6 +131,55 @@ def emit_static_mapping(params, cfg, platform, out_path, max_cout=512):
     print(f"[train] wrote mapping artifact ({len(names)} layers, schema v"
           f"{art.schema_version}, platform={plat.name}) -> {out_path}")
     return art
+
+
+def train_cnn(args, cnn_name: str):
+    """Supervised training of a CNN façade (``--arch cnn:<config>``) on the
+    synthetic image task, with ``--emit-mapping`` writing the same static
+    min-cost artifact the LM path writes — conv weights included, so the
+    artifact lowers onto the im2col'd planned kernels
+    (``serve.py --arch cnn:... --mapping``)."""
+    from repro.data.pipeline import ImageTaskConfig, image_batch
+    from repro.models import cnn as C
+
+    cfg = C.get_config(cnn_name)
+    init_fn, apply_fn, plan_fn = C.get_model(cfg)
+    task = ImageTaskConfig(n_classes=cfg.n_classes, img_hw=cfg.img_hw,
+                           in_ch=cfg.in_ch)
+    params = init_fn(jax.random.PRNGKey(args.seed), cfg, None)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"[train] {cfg.name} params={n_params/1e6:.2f}M")
+
+    ocfg = adamw.AdamWConfig(lr=args.lr, weight_decay=0.01)
+    opt_state = adamw.init(params, ocfg)
+
+    @jax.jit
+    def step_fn(params, opt_state, x, y, lr):
+        def loss_fn(p):
+            logits = apply_fn(p, x, cfg, None, "fp", 1.0)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            return -jnp.mean(jnp.take_along_axis(logp, y[:, None], 1))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, gnorm = adamw.update(grads, opt_state, params,
+                                                ocfg, lr=lr)
+        return params, opt_state, loss
+
+    losses = []
+    for step in range(args.steps):
+        lr = float(adamw.warmup_cosine(step, peak_lr=args.lr,
+                                       warmup=min(args.warmup, args.steps),
+                                       total=args.steps))
+        x, y = image_batch(task, step, args.batch)
+        params, opt_state, loss = step_fn(params, opt_state, x, y, lr)
+        losses.append(float(loss))
+        if step % args.log_every == 0:
+            print(f"[train] step {step} loss={losses[-1]:.4f} lr={lr:.2e}")
+    if args.emit_mapping:
+        hints = {n: (g, s) for (n, g, s) in plan_fn(cfg)}
+        emit_static_mapping(params, cfg, args.platform, args.emit_mapping,
+                            plan_hints=hints)
+    print(f"[train] done. first loss={losses[0]:.4f} last={losses[-1]:.4f}")
+    return losses
 
 
 def make_step(cfg, ocfg, compress: bool):
@@ -96,7 +197,9 @@ def make_step(cfg, ocfg, compress: bool):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", required=True,
+                    help="LM arch name, or cnn:<config> for CNN façades "
+                         "(e.g. cnn:resnet20_tiny)")
     ap.add_argument("--reduce", action="store_true",
                     help="use the smoke-scale config (CPU-friendly)")
     ap.add_argument("--steps", type=int, default=200)
@@ -117,13 +220,16 @@ def main(argv=None):
                          "for the trained weights to this path")
     args = ap.parse_args(argv)
 
+    if args.emit_mapping:
+        from repro.api import Platform
+        Platform.get(args.platform)   # unknown name fails before training
+    if args.arch.startswith("cnn:"):
+        return train_cnn(args, args.arch.split(":", 1)[1])
+
     cfgbase.load_all()
     cfg = cfgbase.get(args.arch)
     if args.reduce:
         cfg = cfgbase.reduce_for_smoke(cfg)
-    if args.emit_mapping:
-        from repro.api import Platform
-        Platform.get(args.platform)   # unknown name fails before training
 
     ocfg = adamw.AdamWConfig(lr=args.lr, weight_decay=0.01)
     params = T.init_lm(jax.random.PRNGKey(args.seed), cfg)

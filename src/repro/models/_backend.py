@@ -1,13 +1,38 @@
 """Pluggable matmul backend shared by every dense primitive in the repo.
 
-A backend is any callable ``backend(p, x) -> y | None`` where ``p`` is a
-dense param dict (``{"w": ..., "b"?: ...}``) and ``x`` the input activations;
-returning ``None`` declines the call and the primitive runs its default
-path.  `repro.models.managed.dense`/`conv2d`, `repro.models.layers.dense`
-and the LM head projection all consult the active backend, so installing one
-swaps the execution of every covered matmul WITHOUT forking model code —
-this is how `repro.runtime.PlannedBackend` slots per-layer split-precision
-kernels into serving.
+A backend is any callable ``backend(name, p, x, **meta) -> y | None`` where
+
+  * ``name`` is the layer's pytree path (``"units/0/attn/wq"``, ``"head"``,
+    ``"blocks/3/c1"``) — a STATIC Python string, so a backend can resolve its
+    per-layer plan at trace time and the whole forward pass stays
+    ``jax.jit``-compatible.  Call sites that cannot name their layer pass
+    ``name=None``; backends must decline those (return ``None``).
+  * ``p`` is the dense param dict (``{"w": ..., "b"?: ...}``) and ``x`` the
+    input activations.  Under ``jax.jit`` both may be tracers — backends must
+    NOT key on them (see migration note below).
+  * ``meta``: conv call sites pass ``conv={"stride", "padding", "groups"}``
+    (see `repro.models.managed.conv2d`); dense call sites pass nothing.
+
+Returning ``None`` declines the call and the primitive runs its default
+path.  `repro.models.managed.dense`/`conv2d`/`conv2d_linear`,
+`repro.models.layers.dense` and the LM head projection all consult the
+active backend, so installing one swaps the execution of every covered
+matmul WITHOUT forking model code — this is how `repro.runtime
+.PlannedBackend` slots per-layer split-precision kernels into serving.
+
+Scan-stacked layers: weights that only exist stacked inside a
+``jax.lax.scan`` (leading repeat axis R) are addressed as ``name`` plus the
+current repeat index.  The scan body publishes its (traced) loop index with
+``scan_slot``; backends read it via ``current_scan_index()`` and index their
+per-repeat state dynamically — `repro.models.transformer.backbone` does this
+for the LM layer scan.
+
+Migration from the ``backend(p, x)`` signature (PR 2): the old protocol
+matched weight leaves by ``id()``, which silently failed for any weight that
+only exists as a tracer (every jitted call, every scan-stacked layer) — the
+layer fell back to the default path with no diagnostic.  The name-keyed
+protocol resolves plans statically instead; update custom backends by adding
+the leading ``name`` parameter and keying on it.
 
 Deliberately dependency-free (both `layers` and `managed` import it).
 """
@@ -16,9 +41,10 @@ from __future__ import annotations
 import contextlib
 from typing import Callable, Optional
 
-MatmulBackend = Callable[[dict, object], object]
+MatmulBackend = Callable[..., object]
 
 _ACTIVE: Optional[MatmulBackend] = None
+_SCAN_INDEX = None
 
 
 def current() -> Optional[MatmulBackend]:
@@ -36,3 +62,30 @@ def use(backend: Optional[MatmulBackend]):
         yield backend
     finally:
         _ACTIVE = prev
+
+
+@contextlib.contextmanager
+def scan_slot(index):
+    """Publish the current scan repeat index (an int or a traced scalar) for
+    the duration of the context — layers called inside a ``lax.scan`` body
+    carry a base ``name`` shared by all repeats, and backends combine it with
+    this index to select the repeat's prepared state."""
+    global _SCAN_INDEX
+    prev = _SCAN_INDEX
+    _SCAN_INDEX = index
+    try:
+        yield index
+    finally:
+        _SCAN_INDEX = prev
+
+
+def current_scan_index():
+    """The repeat index published by the innermost ``scan_slot`` (None when
+    not inside a scan body)."""
+    return _SCAN_INDEX
+
+
+def join(prefix: Optional[str], leaf: str) -> Optional[str]:
+    """``"a/b" + "c" -> "a/b/c"``; None prefix stays None (unnamed call
+    sites never consult a name-keyed backend)."""
+    return None if prefix is None else f"{prefix}/{leaf}"

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
+from repro.models._backend import join as _j
 
 # int8 KV-cache quantization step (post-norm k/v live in ~[-8, 8])
 KV_QSCALE = 16.0
@@ -139,20 +140,21 @@ def chunked_attention(q, k, v, *, causal=True, window=None,
 # ---------------------------------------------------------------- GQA layer
 
 def gqa(p, x, positions, cfg: AttnConfig, *, cache=None, cache_index=None,
-        chunked=False, kv_override=None):
+        chunked=False, kv_override=None, name=None):
     """Grouped-query attention.
 
     cache: optional dict {"k","v"} of (B, S_max, KVH, hd) + writes at
     ``cache_index``; decode passes S==1 inputs.  kv_override supplies
-    precomputed (k, v) for cross-attention.
+    precomputed (k, v) for cross-attention.  ``name``: this block's pytree
+    path, threaded into the projections' matmul-backend calls.
     """
     B, S, D = x.shape
     H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     G = H // KVH
-    q = L.dense(p["wq"], x).reshape(B, S, H, hd)
+    q = L.dense(p["wq"], x, _j(name, "wq")).reshape(B, S, H, hd)
     if kv_override is None:
-        k = L.dense(p["wk"], x).reshape(B, S, KVH, hd)
-        v = L.dense(p["wv"], x).reshape(B, S, KVH, hd)
+        k = L.dense(p["wk"], x, _j(name, "wk")).reshape(B, S, KVH, hd)
+        v = L.dense(p["wv"], x, _j(name, "wv")).reshape(B, S, KVH, hd)
         if cfg.rotary:
             q = L.rope(q, positions, cfg.rope_theta)
             k = L.rope(k, positions, cfg.rope_theta)
@@ -196,7 +198,7 @@ def gqa(p, x, positions, cfg: AttnConfig, *, cache=None, cache_index=None,
                              window=cfg.sliding_window,
                              q_pos0=q_pos0, kv_len=kv_len)
     out = out.reshape(B, S, H * hd)
-    return L.dense(p["wo"], out), new_cache
+    return L.dense(p["wo"], out, _j(name, "wo")), new_cache
 
 
 # ---------------------------------------------------------------- MLA layer
@@ -229,18 +231,18 @@ def init_mla(key, cfg: MLAConfig, dtype=jnp.bfloat16):
 
 
 def mla(p, x, positions, cfg: MLAConfig, *, cache=None, cache_index=None,
-        chunked=False):
+        chunked=False, name=None):
     """Multi-head Latent Attention (DeepSeek-V2). Cache holds the compressed
     latent + shared rope key: (B, S_max, kv_lora_rank + qk_rope_dim)."""
     B, S, D = x.shape
     H = cfg.n_heads
     nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
 
-    q = L.dense(p["wq"], x).reshape(B, S, H, nd + rd)
+    q = L.dense(p["wq"], x, _j(name, "wq")).reshape(B, S, H, nd + rd)
     q_nope, q_rope = q[..., :nd], q[..., nd:]
     q_rope = L.rope(q_rope, positions, cfg.rope_theta)
 
-    kv = L.dense(p["kv_a"], x)
+    kv = L.dense(p["kv_a"], x, _j(name, "kv_a"))
     latent, k_rope = kv[..., :cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
     latent = L.norm(p["kv_norm"], latent)
     k_rope = L.rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
@@ -296,9 +298,10 @@ def mla(p, x, positions, cfg: MLAConfig, *, cache=None, cache_index=None,
                            latent.astype(jnp.float32))
         out = jnp.einsum("bqhr,rhv->bqhv", o_lat.astype(x.dtype), w_uv)
         out = out.reshape(B, S, H * vd)
-        return L.dense(p["wo"], out), new_cache
+        return L.dense(p["wo"], out, _j(name, "wo")), new_cache
 
-    kvb = L.dense(p["kv_b"], latent).reshape(B, latent.shape[1], H, nd + vd)
+    kvb = L.dense(p["kv_b"], latent,
+                  _j(name, "kv_b")).reshape(B, latent.shape[1], H, nd + vd)
     k_nope, v = kvb[..., :nd], kvb[..., nd:]
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
@@ -313,4 +316,4 @@ def mla(p, x, positions, cfg: MLAConfig, *, cache=None, cache_index=None,
         q_pos0 = cache_index if cache is not None else 0
         out = full_attention(qg, k, v, causal=True, q_pos0=q_pos0, kv_len=kv_len)
     out = out.reshape(B, S, H * vd)
-    return L.dense(p["wo"], out), new_cache
+    return L.dense(p["wo"], out, _j(name, "wo")), new_cache

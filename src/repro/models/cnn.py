@@ -43,6 +43,19 @@ MBV1_CFG = CNNConfig("mobilenetv1_025", (96, 96), 3, 2, width_mult=0.25)
 # Reduced configs for CI-speed tests
 RESNET20_TINY = CNNConfig("resnet20_tiny", (16, 16), 3, 10)
 
+CONFIGS = {c.name: c for c in (RESNET20_CFG, RESNET18_CFG, RESNET18_SMALL,
+                               MBV1_CFG, RESNET20_TINY)}
+
+
+def get_config(name: str) -> CNNConfig:
+    """Named CNN config (the ``cnn:<name>`` arch convention of the launch
+    drivers)."""
+    try:
+        return CONFIGS[name]
+    except KeyError:
+        raise ValueError(f"unknown CNN config {name!r} "
+                         f"(known: {sorted(CONFIGS)})") from None
+
 
 # --------------------------------------------------------------------------
 # ResNet (pre-BN-folded basic blocks)
@@ -79,23 +92,26 @@ def resnet_init(key, cfg: CNNConfig, spec: ODiMOSpec | None):
 
 def resnet_apply(p, x, cfg: CNNConfig, spec=None, mode="fp", tau=1.0):
     stages, _ = _resnet_stages(cfg.name)
-    x = mg.conv2d(p["stem"], x, spec, mode, tau)
+    x = mg.conv2d(p["stem"], x, spec, mode, tau, name="stem")
     bi = 0
     c_prev_w = None
     for (w, n, s) in stages:
         for b in range(n):
             stride = s if b == 0 else 1
             blk = p["blocks"][bi]
-            h = mg.conv2d(blk["c1"], x, spec, mode, tau, stride=stride)
-            h = mg.conv2d_linear(blk["c2"], h, spec, mode, tau)
+            h = mg.conv2d(blk["c1"], x, spec, mode, tau, stride=stride,
+                          name=f"blocks/{bi}/c1")
+            h = mg.conv2d_linear(blk["c2"], h, spec, mode, tau,
+                                 name=f"blocks/{bi}/c2")
             sc = x
             if "proj" in blk:
-                sc = mg.conv2d_linear(blk["proj"], x, spec, mode, tau, stride=stride)
+                sc = mg.conv2d_linear(blk["proj"], x, spec, mode, tau,
+                                      stride=stride, name=f"blocks/{bi}/proj")
             x = jax.nn.relu(h + sc)
             x = mg._maybe_quant_act(x, blk["c2"], spec, mode)
             bi += 1
     x = jnp.mean(x, axis=(1, 2))
-    return mg.dense(p["head"], x, spec, mode, tau)
+    return mg.dense(p["head"], x, spec, mode, tau, name="head")
 
 
 def resnet_plan(cfg: CNNConfig) -> List[Tuple[str, LayerGeometry, bool]]:
@@ -153,14 +169,15 @@ def mbv1_init(key, cfg: CNNConfig, spec: ODiMOSpec | None):
 
 
 def mbv1_apply(p, x, cfg: CNNConfig, spec=None, mode="fp", tau=1.0):
-    x = mg.conv2d(p["stem"], x, spec, mode, tau, stride=2)
+    x = mg.conv2d(p["stem"], x, spec, mode, tau, stride=2, name="stem")
     c_prev = _mb_w(32, cfg.width_mult)
-    for blk, (s, c) in zip(p["blocks"], MBV1_LAYERS):
-        x = mg.conv2d(blk["dw"], x, spec, mode, tau, stride=s, groups=c_prev)
-        x = mg.conv2d(blk["pw"], x, spec, mode, tau)
+    for i, (blk, (s, c)) in enumerate(zip(p["blocks"], MBV1_LAYERS)):
+        x = mg.conv2d(blk["dw"], x, spec, mode, tau, stride=s, groups=c_prev,
+                      name=f"blocks/{i}/dw")
+        x = mg.conv2d(blk["pw"], x, spec, mode, tau, name=f"blocks/{i}/pw")
         c_prev = _mb_w(c, cfg.width_mult)
     x = jnp.mean(x, axis=(1, 2))
-    return mg.dense(p["head"], x, spec, mode, tau)
+    return mg.dense(p["head"], x, spec, mode, tau, name="head")
 
 
 def mbv1_plan(cfg: CNNConfig) -> List[Tuple[str, LayerGeometry, bool]]:

@@ -59,9 +59,10 @@ def mlp_apply(p, x, cfg: MLPConfig, spec=None, mode="fp", tau=1.0,
     with mg.matmul_backend(backend) if backend is not None else \
             _null_ctx():
         h = x.reshape(x.shape[0], -1)
-        for lp in p["layers"]:
-            h = jax.nn.relu(mg.dense(lp, h, spec, mode, tau))
-        return mg.dense(p["head"], h, spec, mode, tau)
+        for i, lp in enumerate(p["layers"]):
+            h = jax.nn.relu(mg.dense(lp, h, spec, mode, tau,
+                                     name=f"layers/{i}"))
+        return mg.dense(p["head"], h, spec, mode, tau, name="head")
 
 
 def mlp_plan(cfg: MLPConfig) -> List[Tuple[str, LayerGeometry, bool]]:
@@ -129,13 +130,19 @@ def encoder_apply(p, x, cfg: EncoderConfig, spec=None, mode="fp", tau=1.0,
                   backend=None):
     with mg.matmul_backend(backend) if backend is not None else \
             _null_ctx():
-        h = mg.dense(p["embed"], _tokens(x, cfg), spec, mode, tau)
-        for blk in p["blocks"]:
-            a = _attention(h, mg.dense(blk["qkv"], h, spec, mode, tau), cfg)
-            h = h + mg.dense(blk["proj"], a, spec, mode, tau)
-            f = jax.nn.relu(mg.dense(blk["ffn1"], h, spec, mode, tau))
-            h = h + mg.dense(blk["ffn2"], f, spec, mode, tau)
-        return mg.dense(p["head"], jnp.mean(h, axis=1), spec, mode, tau)
+        h = mg.dense(p["embed"], _tokens(x, cfg), spec, mode, tau,
+                     name="embed")
+        for i, blk in enumerate(p["blocks"]):
+            a = _attention(h, mg.dense(blk["qkv"], h, spec, mode, tau,
+                                       name=f"blocks/{i}/qkv"), cfg)
+            h = h + mg.dense(blk["proj"], a, spec, mode, tau,
+                             name=f"blocks/{i}/proj")
+            f = jax.nn.relu(mg.dense(blk["ffn1"], h, spec, mode, tau,
+                                     name=f"blocks/{i}/ffn1"))
+            h = h + mg.dense(blk["ffn2"], f, spec, mode, tau,
+                             name=f"blocks/{i}/ffn2")
+        return mg.dense(p["head"], jnp.mean(h, axis=1), spec, mode, tau,
+                        name="head")
 
 
 def encoder_plan(cfg: EncoderConfig) -> List[Tuple[str, LayerGeometry, bool]]:

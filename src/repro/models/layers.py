@@ -19,10 +19,12 @@ def init_dense(key, d_in, d_out, dtype=jnp.bfloat16, scale=None, bias=False):
     return p
 
 
-def dense(p, x):
+def dense(p, x, name=None):
+    """``name`` is the layer's pytree path, forwarded to the pluggable
+    matmul backend (`repro.models._backend`); None skips backend dispatch."""
     be = _backend.current()
     if be is not None:
-        y = be(p, x)
+        y = be(name, p, x)
         if y is not None:
             return y  # planned kernel output, bias applied by the backend
     if "w_q" in p:
@@ -95,10 +97,12 @@ def init_ffn(key, d_model, d_ff, gated: bool, dtype=jnp.bfloat16, bias=False):
     return p
 
 
-def ffn(p, x, act_name="silu"):
+def ffn(p, x, act_name="silu", name=None):
     a = act_fn(act_name)
+    j = _backend.join
     if "gate" in p:
-        h = a(dense(p["gate"], x)) * dense(p["up"], x)
+        h = a(dense(p["gate"], x, j(name, "gate"))) * \
+            dense(p["up"], x, j(name, "up"))
     else:
-        h = a(dense(p["up"], x))
-    return dense(p["down"], h)
+        h = a(dense(p["up"], x, j(name, "up")))
+    return dense(p["down"], h, j(name, "down"))

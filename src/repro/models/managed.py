@@ -72,13 +72,21 @@ def _maybe_quant_act(x, p, spec: ODiMOSpec | None, mode: Mode):
 
 def conv2d(p: dict, x: jax.Array, spec: ODiMOSpec | None = None,
            mode: Mode = "fp", tau: float = 1.0, stride: int = 1,
-           padding: str = "SAME", groups: int = 1) -> jax.Array:
-    """NHWC conv with HWIO weights; ODiMO-managed when spec is given."""
+           padding: str = "SAME", groups: int = 1,
+           name: str | None = None) -> jax.Array:
+    """NHWC conv with HWIO weights; ODiMO-managed when spec is given.
+
+    ``name`` (the layer's pytree path) routes the call through the pluggable
+    matmul backend; conv geometry travels as the ``conv`` meta kwarg so a
+    planned backend can im2col the input.  A backend returns the LINEAR conv
+    output (bias applied) — the ReLU + activation fake-quant run here either
+    way."""
     be = _backend.current()
     if be is not None and mode in ("fp", "deploy"):
-        y = be(p, x)
+        y = be(name, p, x, conv={"stride": stride, "padding": padding,
+                                 "groups": groups})
         if y is not None:
-            return y
+            return _maybe_quant_act(jax.nn.relu(y), p, spec, mode)
     w = _weight(p, spec, mode, tau).astype(x.dtype)
     y = jax.lax.conv_general_dilated(
         x, w, window_strides=(stride, stride), padding=padding,
@@ -90,8 +98,15 @@ def conv2d(p: dict, x: jax.Array, spec: ODiMOSpec | None = None,
 
 def conv2d_linear(p: dict, x: jax.Array, spec=None, mode: Mode = "fp",
                   tau: float = 1.0, stride: int = 1, padding="SAME",
-                  groups: int = 1) -> jax.Array:
-    """Conv without activation (residual branches)."""
+                  groups: int = 1, name: str | None = None) -> jax.Array:
+    """Conv without activation (residual branches); backend-routable like
+    `conv2d` so planned execution covers projection shortcuts too."""
+    be = _backend.current()
+    if be is not None and mode in ("fp", "deploy"):
+        y = be(name, p, x, conv={"stride": stride, "padding": padding,
+                                 "groups": groups})
+        if y is not None:
+            return y
     w = _weight(p, spec, mode, tau).astype(x.dtype)
     y = jax.lax.conv_general_dilated(
         x, w, window_strides=(stride, stride), padding=padding,
@@ -102,10 +117,11 @@ def conv2d_linear(p: dict, x: jax.Array, spec=None, mode: Mode = "fp",
 
 
 def dense(p: dict, x: jax.Array, spec: ODiMOSpec | None = None,
-          mode: Mode = "fp", tau: float = 1.0) -> jax.Array:
+          mode: Mode = "fp", tau: float = 1.0,
+          name: str | None = None) -> jax.Array:
     be = _backend.current()
     if be is not None and mode in ("fp", "deploy"):
-        y = be(p, x)
+        y = be(name, p, x)
         if y is not None:
             return y  # planned kernel output, bias applied by the backend
     w = _weight(p, spec, mode, tau).astype(x.dtype)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
+from repro.models._backend import join as _j
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,8 +55,11 @@ def _capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
     return max(c, cfg.top_k)
 
 
-def moe_ffn(p, x, cfg: MoEConfig, n_groups: int | None = None):
-    """x: (B, S, D) -> (B, S, D), plus aux losses dict."""
+def moe_ffn(p, x, cfg: MoEConfig, n_groups: int | None = None, name=None):
+    """x: (B, S, D) -> (B, S, D), plus aux losses dict.  ``name`` threads
+    the block's pytree path into the router/shared-expert dense calls (the
+    grouped expert einsums are not dense dicts and stay on their fused
+    path)."""
     B, S, D = x.shape
     T = B * S
     if n_groups is None:
@@ -72,7 +76,8 @@ def moe_ffn(p, x, cfg: MoEConfig, n_groups: int | None = None):
     C = _capacity(Tg, cfg)
 
     xt = x.reshape(G, Tg, D)
-    logits = L.dense(p["router"], xt.astype(jnp.float32))      # (G,Tg,E)
+    logits = L.dense(p["router"], xt.astype(jnp.float32),
+                     _j(name, "router"))                       # (G,Tg,E)
     probs = jax.nn.softmax(logits, axis=-1)
     topv, topi = jax.lax.top_k(probs, K)                       # (G,Tg,K)
     topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
@@ -115,5 +120,5 @@ def moe_ffn(p, x, cfg: MoEConfig, n_groups: int | None = None):
     y = jnp.einsum("gtec,gecd->gtd", comb, eout).reshape(B, S, D)
 
     if cfg.n_shared:
-        y = y + L.ffn(p["shared"], x, cfg.act)
+        y = y + L.ffn(p["shared"], x, cfg.act, _j(name, "shared"))
     return y, aux

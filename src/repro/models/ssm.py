@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
 from repro.models import layers as L
+from repro.models._backend import join as _j
 
 
 # ===================================================================== Mamba2
@@ -123,11 +124,11 @@ def _ssd_chunked(xs, Bt, Ct, dt, la, h0, chunk=None):
     return hT, y
 
 
-def mamba2(p, x, cfg: Mamba2Config, state=None):
+def mamba2(p, x, cfg: Mamba2Config, state=None, name=None):
     """x: (B,S,D). Returns (y, new_state). Recurrent selective-state scan."""
     B, S, D = x.shape
     di, N, H, hd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
-    zxbcdt = L.dense(p["in_proj"], x)
+    zxbcdt = L.dense(p["in_proj"], x, _j(name, "in_proj"))
     z = zxbcdt[..., :di]
     xbc = zxbcdt[..., di:di + cfg.conv_dim]
     dt_raw = zxbcdt[..., di + cfg.conv_dim:]                    # (B,S,H)
@@ -168,7 +169,7 @@ def mamba2(p, x, cfg: Mamba2Config, state=None):
     y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
     y = y.reshape(B, S, di).astype(x.dtype) * jax.nn.silu(z)
     y = L.norm(p["norm"], y)
-    out = L.dense(p["out_proj"], y)
+    out = L.dense(p["out_proj"], y, _j(name, "out_proj"))
     new_state = {"ssm": hT, "conv": new_conv}
     return out, new_state
 
@@ -297,11 +298,11 @@ def _mlstm_chunked(q, k, v, ig, fg, state, chunk=None):
     return (CT, nT, mT), h
 
 
-def mlstm(p, x, cfg: XLSTMConfig, state=None):
+def mlstm(p, x, cfg: XLSTMConfig, state=None, name=None):
     """Matrix-memory LSTM with exponential gating (xLSTM), recurrent form."""
     B, S, D = x.shape
     di, H, hd = cfg.d_inner, cfg.n_heads, cfg.head_dim
-    uz = L.dense(p["up"], x)
+    uz = L.dense(p["up"], x, _j(name, "up"))
     u, z = uz[..., :di], uz[..., di:]
     conv_state = state["conv"] if state is not None else None
     uc, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
@@ -310,7 +311,7 @@ def mlstm(p, x, cfg: XLSTMConfig, state=None):
     q = constrain(jnp.einsum("bshd,hdk->bshk", uh, p["wq_bd"]), "act")
     k = constrain(jnp.einsum("bshd,hdk->bshk", uh, p["wk_bd"]), "act") * hd ** -0.5
     v = constrain(jnp.einsum("bshd,hdk->bshk", uh, p["wv_bd"]), "act")
-    gates = L.dense(p["w_if"], uc).astype(jnp.float32)          # (B,S,2H)
+    gates = L.dense(p["w_if"], uc, _j(name, "w_if")).astype(jnp.float32)  # (B,S,2H)
     ig, fg = gates[..., :H], gates[..., H:]
 
     if state is None:
@@ -348,7 +349,7 @@ def mlstm(p, x, cfg: XLSTMConfig, state=None):
         (CT, nT, mT), hs = jax.lax.scan(step, (C0, n0, m0), inps)
         h = hs.transpose(1, 0, 2, 3).reshape(B, S, di).astype(x.dtype)
     h = L.norm(p["norm"], h) * jax.nn.silu(z)
-    out = L.dense(p["down"], h)
+    out = L.dense(p["down"], h, _j(name, "down"))
     return out, {"C": CT, "n": nT, "m": mT, "conv": new_conv}
 
 
@@ -373,11 +374,11 @@ def init_slstm(key, cfg: XLSTMConfig, dtype=jnp.bfloat16):
     }
 
 
-def slstm(p, x, cfg: XLSTMConfig, state=None):
+def slstm(p, x, cfg: XLSTMConfig, state=None, name=None):
     """Scalar-memory LSTM with exponential gating + recurrent head mixing."""
     B, S, D = x.shape
     di, H, hd = cfg.d_inner, cfg.n_heads, cfg.head_dim
-    pre = L.dense(p["w_in"], x).reshape(B, S, H, 4 * hd)
+    pre = L.dense(p["w_in"], x, _j(name, "w_in")).reshape(B, S, H, 4 * hd)
 
     if state is None:
         c0 = jnp.zeros((B, H, hd), jnp.float32)
@@ -407,7 +408,7 @@ def slstm(p, x, cfg: XLSTMConfig, state=None):
     (cT, nT, hT, mT), hs = jax.lax.scan(step, (c0, n0, h0, m0),
                                         pre.transpose(1, 0, 2, 3))
     h = hs.transpose(1, 0, 2, 3).reshape(B, S, di).astype(x.dtype)
-    out = L.dense(p["down"], L.norm(p["norm"], h))
+    out = L.dense(p["down"], L.norm(p["norm"], h), _j(name, "down"))
     return out, {"c": cT, "n": nT, "h": hT, "m": mT}
 
 

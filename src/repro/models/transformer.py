@@ -25,10 +25,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.models import _backend
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import ssm as S
+
+_j = _backend.join
 
 
 # --------------------------------------------------------------- kind specs
@@ -128,30 +131,41 @@ def init_shared_block(key, cfg: ArchConfig):
 # --------------------------------------------------------------- block apply
 
 def block_apply(p, x, kind, cfg: ArchConfig, positions, *, cache=None,
-                cache_index=None, cross_kv=None, chunked=False, shared=None):
-    """One block. Returns (x, new_cache, aux_loss)."""
+                cache_index=None, cross_kv=None, chunked=False, shared=None,
+                name=None):
+    """One block. Returns (x, new_cache, aux_loss).
+
+    ``name`` is the block's params-pytree path prefix (``"units/3"``,
+    ``"rem/0"``, ``"first_dense"``); it is threaded into every projection's
+    matmul-backend call so a name-keyed planned backend (see
+    `repro.models._backend`) resolves the layer statically — including under
+    `jax.jit` and inside the layer scan.  Shared-block weights always use the
+    fixed ``"shared/..."`` names (one copy, many call sites)."""
     aux = 0.0
     if kind in ("attn", "mla"):
         h = L.norm(p["norm1"], x, cfg.norm)
         if kind == "attn":
             ao, nc = A.gqa(p["attn"], h, positions, _attn_cfg(cfg),
-                           cache=cache, cache_index=cache_index, chunked=chunked)
+                           cache=cache, cache_index=cache_index,
+                           chunked=chunked, name=_j(name, "attn"))
         else:
             ao, nc = A.mla(p["attn"], h, positions, _mla_cfg(cfg),
-                           cache=cache, cache_index=cache_index, chunked=chunked)
+                           cache=cache, cache_index=cache_index,
+                           chunked=chunked, name=_j(name, "attn"))
         if cfg.parallel_block and "ffn" in p:
-            x = x + ao + L.ffn(p["ffn"], h, cfg.act)
+            x = x + ao + L.ffn(p["ffn"], h, cfg.act, _j(name, "ffn"))
         else:
             x = x + ao
             if "moe" in p:
                 h2 = L.norm(p.get("norm2", p["norm1"]), x, cfg.norm)
-                mo, ml = M.moe_ffn(p["moe"], h2, cfg.moe)
+                mo, ml = M.moe_ffn(p["moe"], h2, cfg.moe, name=_j(name, "moe"))
                 if "ffn" in p:  # arctic dense residual in parallel with MoE
-                    mo = mo + L.ffn(p["ffn"], h2, cfg.act)
+                    mo = mo + L.ffn(p["ffn"], h2, cfg.act, _j(name, "ffn"))
                 x = x + mo
                 aux = aux + ml["load_balance"]
             elif "ffn" in p:
-                x = x + L.ffn(p["ffn"], L.norm(p["norm2"], x, cfg.norm), cfg.act)
+                x = x + L.ffn(p["ffn"], L.norm(p["norm2"], x, cfg.norm),
+                              cfg.act, _j(name, "ffn"))
         return x, nc, aux
     if kind == "cross":
         h = L.norm(p["norm1"], x, cfg.norm)
@@ -163,9 +177,10 @@ def block_apply(p, x, kind, cfg: ArchConfig, positions, *, cache=None,
             cross_kv = (cache["ck"], cache["cv"])
             new_cache = cache
         ao, _ = A.gqa(p["attn"], h, positions, _attn_cfg(cfg, cross=True),
-                      kv_override=cross_kv)
+                      kv_override=cross_kv, name=_j(name, "attn"))
         x = x + jnp.tanh(p["gate"]) * ao
-        x = x + L.ffn(p["ffn"], L.norm(p["norm2"], x, cfg.norm), cfg.act)
+        x = x + L.ffn(p["ffn"], L.norm(p["norm2"], x, cfg.norm), cfg.act,
+                      _j(name, "ffn"))
         return x, new_cache, aux
     if kind == "dec":
         h = L.norm(p["norm1"], x, cfg.norm)
@@ -174,7 +189,7 @@ def block_apply(p, x, kind, cfg: ArchConfig, positions, *, cache=None,
             self_cache = {"k": cache["k"], "v": cache["v"]}
         ao, nc = A.gqa(p["attn"], h, positions, _attn_cfg(cfg),
                        cache=self_cache, cache_index=cache_index,
-                       chunked=chunked)
+                       chunked=chunked, name=_j(name, "attn"))
         x = x + ao
         hx = L.norm(p["normx"], x, cfg.norm)
         if cache is not None and cross_kv is not None:      # prefill: store
@@ -184,29 +199,35 @@ def block_apply(p, x, kind, cfg: ArchConfig, positions, *, cache=None,
             cross_kv = (cache["ck"], cache["cv"])
             nc = dict(nc or {}, ck=cache["ck"], cv=cache["cv"])
         xo, _ = A.gqa(p["xattn"], hx, positions, _attn_cfg(cfg, cross=True),
-                      kv_override=cross_kv)
+                      kv_override=cross_kv, name=_j(name, "xattn"))
         x = x + xo
-        x = x + L.ffn(p["ffn"], L.norm(p["norm2"], x, cfg.norm), cfg.act)
+        x = x + L.ffn(p["ffn"], L.norm(p["norm2"], x, cfg.norm), cfg.act,
+                      _j(name, "ffn"))
         return x, nc, aux
     if kind == "mamba":
         h = L.norm(p["norm1"], x, cfg.norm)
-        mo, ns = S.mamba2(p["mamba"], h, _mamba_cfg(cfg), state=cache)
+        mo, ns = S.mamba2(p["mamba"], h, _mamba_cfg(cfg), state=cache,
+                          name=_j(name, "mamba"))
         return x + mo, ns, aux
     if kind == "mlstm":
         h = L.norm(p["norm1"], x, cfg.norm)
-        mo, ns = S.mlstm(p["core"], h, _xlstm_cfg(cfg), state=cache)
+        mo, ns = S.mlstm(p["core"], h, _xlstm_cfg(cfg), state=cache,
+                         name=_j(name, "core"))
         return x + mo, ns, aux
     if kind == "slstm":
         h = L.norm(p["norm1"], x, cfg.norm)
-        mo, ns = S.slstm(p["core"], h, _xlstm_cfg(cfg), state=cache)
+        mo, ns = S.slstm(p["core"], h, _xlstm_cfg(cfg), state=cache,
+                         name=_j(name, "core"))
         return x + mo, ns, aux
     if kind == "shared_attn":
         h = L.norm(p["norm1"], x, cfg.norm)
         ao, nc = A.gqa(shared["attn"], h, positions, _attn_cfg(cfg),
-                       cache=cache, cache_index=cache_index, chunked=chunked)
+                       cache=cache, cache_index=cache_index, chunked=chunked,
+                       name="shared/attn")
         x = x + ao
         x = x + L.ffn(shared["ffn"],
-                      L.norm(shared["norm2"], x, cfg.norm), cfg.act)
+                      L.norm(shared["norm2"], x, cfg.norm), cfg.act,
+                      "shared/ffn")
         return x, nc, aux
     raise ValueError(kind)
 
@@ -266,12 +287,14 @@ def init_lm(key, cfg: ArchConfig):
 
 # ------------------------------------------------------------- cross kv prep
 
-def _frontend_kv(params_attn, cross_source, cfg: ArchConfig):
+def _frontend_kv(params_attn, cross_source, cfg: ArchConfig, name=None):
     """Project frontend embeddings to (k, v) for cross-attention."""
     B, T, _ = cross_source.shape
     KVH, hd = cfg.n_kv_heads, cfg.hd
-    k = L.dense(params_attn["wk"], cross_source).reshape(B, T, KVH, hd)
-    v = L.dense(params_attn["wv"], cross_source).reshape(B, T, KVH, hd)
+    k = L.dense(params_attn["wk"], cross_source,
+                _j(name, "wk")).reshape(B, T, KVH, hd)
+    v = L.dense(params_attn["wv"], cross_source,
+                _j(name, "wv")).reshape(B, T, KVH, hd)
     return k, v
 
 
@@ -280,16 +303,22 @@ def encode(params, cfg: ArchConfig, frames):
     enc_cfg = dataclasses.replace(cfg, moe=None, parallel_block=False)
     positions = jnp.arange(frames.shape[1])[None, :]
 
-    def body(x, unit):
+    def body(x, xs):
+        ridx, unit = xs
         (blk,) = unit
-        h = L.norm(blk["norm1"], x, cfg.norm)
-        acfg = dataclasses.replace(_attn_cfg(enc_cfg), causal=False)
-        ao, _ = A.gqa(blk["attn"], h, positions, acfg)
-        x = x + ao
-        x = x + L.ffn(blk["ffn"], L.norm(blk["norm2"], x, cfg.norm), cfg.act)
+        with _backend.scan_slot(ridx):
+            h = L.norm(blk["norm1"], x, cfg.norm)
+            acfg = dataclasses.replace(_attn_cfg(enc_cfg), causal=False)
+            ao, _ = A.gqa(blk["attn"], h, positions, acfg,
+                          name="enc_units/0/attn")
+            x = x + ao
+            x = x + L.ffn(blk["ffn"], L.norm(blk["norm2"], x, cfg.norm),
+                          cfg.act, "enc_units/0/ffn")
         return x, None
 
-    x, _ = jax.lax.scan(body, frames, params["enc_units"])
+    enc_repeats = jax.tree.leaves(params["enc_units"])[0].shape[0]
+    x, _ = jax.lax.scan(body, frames,
+                        (jnp.arange(enc_repeats), params["enc_units"]))
     return L.norm(params["enc_norm"], x, cfg.norm)
 
 
@@ -306,20 +335,27 @@ def backbone(params, cfg: ArchConfig, x, positions, *, caches=None,
 
     def unit_fn(carry, xs):
         x, aux = carry
-        unit_params, unit_cache = xs
+        ridx, unit_params, unit_cache = xs
         new_cache = []
-        for i, kind in enumerate(cfg.pattern):
-            blk = unit_params[i]
-            c = unit_cache[i] if unit_cache is not None else None
-            ckv = None
-            if kind in ("cross", "dec") and cross_source is not None:
-                att = blk["attn"] if kind == "cross" else blk["xattn"]
-                ckv = _frontend_kv(att, cross_source, cfg)
-            x, nc, a = block_apply(
-                blk, x, kind, cfg, positions, cache=c, cache_index=cache_index,
-                cross_kv=ckv, chunked=chunked, shared=shared)
-            aux = aux + a
-            new_cache.append(nc)
+        # publish the (traced) repeat index: scan-stacked layers are named by
+        # their base path (e.g. "units/0/mamba/in_proj") and a name-keyed
+        # backend selects the repeat's prepared kernels with this index
+        with _backend.scan_slot(ridx):
+            for i, kind in enumerate(cfg.pattern):
+                blk = unit_params[i]
+                c = unit_cache[i] if unit_cache is not None else None
+                ckv = None
+                if kind in ("cross", "dec") and cross_source is not None:
+                    att = blk["attn"] if kind == "cross" else blk["xattn"]
+                    sub = "attn" if kind == "cross" else "xattn"
+                    ckv = _frontend_kv(att, cross_source, cfg,
+                                       name=f"units/{i}/{sub}")
+                x, nc, a = block_apply(
+                    blk, x, kind, cfg, positions, cache=c,
+                    cache_index=cache_index, cross_kv=ckv, chunked=chunked,
+                    shared=shared, name=f"units/{i}")
+                aux = aux + a
+                new_cache.append(nc)
         x = constrain(x, "act")
         return (x, aux), tuple(new_cache)
 
@@ -329,13 +365,14 @@ def backbone(params, cfg: ArchConfig, x, positions, *, caches=None,
         x, nfc, a0 = block_apply(params["first_dense"], x, cfg.pattern[0], cfg,
                                  positions, cache=fd_cache,
                                  cache_index=cache_index, chunked=chunked,
-                                 shared=shared)
+                                 shared=shared, name="first_dense")
         units = params["units"]  # init_lm already excluded layer 0
     else:
         x, nfc, a0 = x, None, 0.0
         units = params["units"]
 
-    xs = (units, unit_caches)
+    repeats = jax.tree.leaves(units)[0].shape[0]
+    xs = (jnp.arange(repeats), units, unit_caches)
     body = jax.checkpoint(unit_fn, prevent_cse=False) if remat else unit_fn
     (x, aux), new_unit_caches = jax.lax.scan(body, (x, a0), xs)
 
@@ -347,7 +384,7 @@ def backbone(params, cfg: ArchConfig, x, positions, *, caches=None,
             c = rem_caches[i] if rem_caches is not None else None
             x, nc, a = block_apply(blk, x, kind, cfg, positions, cache=c,
                                    cache_index=cache_index, chunked=chunked,
-                                   shared=shared)
+                                   shared=shared, name=f"rem/{i}")
             aux = aux + a
             new_rem.append(nc)
 
@@ -376,10 +413,9 @@ def _project_logits(params, cfg: ArchConfig, h):
     """Vocab projection of the last hidden states, routed through the
     pluggable matmul backend when one is installed (per-layer planned
     execution of the head; see repro.models._backend)."""
-    from repro.models import _backend
     be = _backend.current()
     if be is not None and not cfg.tie_embeddings and "head" in params:
-        y = be(params["head"], h)
+        y = be("head", params["head"], h)
         if y is not None:
             return y.astype(jnp.float32)
     return (h @ _head_weight(params, cfg)).astype(jnp.float32)

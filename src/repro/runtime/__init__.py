@@ -8,16 +8,23 @@ the matching Pallas kernel (interpret mode on CPU).
 
     artifact = MappingArtifact.load("mapping.json")
     plan     = lower(artifact, params=params)        # compile
-    backend  = PlannedBackend(plan, params)          # bind to weights
-    with matmul_backend(backend):                    # execute
-        logits = model_apply(params, x)
+    backend  = PlannedBackend(plan, params)          # bind, keyed by name
+    with matmul_backend(backend):                    # execute (jit-safe)
+        logits = jax.jit(model_apply)(params, x)
 
 `lower` validates the artifact against real weight shapes, reuses
 `core.discretize.stable_perm`/`split_points` for the reorg and the
 `kernels.ops` block-alignment rule, and picks one kernel per layer:
 ``split_precision`` (fused int8+bf16), ``quant_matmul`` (w8a8),
 ``ternary_matmul`` (AIMC analogue) or ``fp`` (identity fallback, with the
-reason recorded in ``LayerPlan.note``).
+reason recorded in ``LayerPlan.note``).  Layer names are pytree paths; 4-D
+HWIO conv weights lower too (executed via im2col), and ``base@r`` names
+address repeat ``r`` of scan-stacked weights — `PlannedBackend` stacks those
+per repeat and indexes them inside the jitted layer scan.
+
+Errors split by phase: `LoweringError` (the artifact cannot be compiled
+onto the model/kernels) vs `ExecutionError` (a lowered plan cannot bind or
+execute — wrong weights, missing scan index, unsupported conv).
 
 This package never imports `repro.api` (artifacts are duck-typed via
 ``to_dict``), so `repro.api` can re-export `lower`/`ExecutionPlan` as the
@@ -27,13 +34,15 @@ from repro.runtime.plan import (KERNEL_FP, KERNEL_QUANT, KERNEL_SPLIT,
                                 KERNEL_TERNARY, KERNELS, ExecutionPlan,
                                 LayerPlan, LoweringError)
 from repro.runtime.lower import lower, resolve_layer_params
-from repro.runtime.execute import (PlannedBackend, PreparedLayer,
-                                   execute_layer, prepare_layer,
+from repro.runtime.execute import (ExecutionError, PlannedBackend,
+                                   PreparedLayer, execute_conv_layer,
+                                   execute_layer, im2col, prepare_layer,
                                    reference_layer)
 
 __all__ = [
-    "ExecutionPlan", "LayerPlan", "LoweringError", "PlannedBackend",
-    "PreparedLayer", "KERNELS", "KERNEL_FP", "KERNEL_QUANT", "KERNEL_SPLIT",
-    "KERNEL_TERNARY", "execute_layer", "lower", "prepare_layer",
-    "reference_layer", "resolve_layer_params",
+    "ExecutionError", "ExecutionPlan", "LayerPlan", "LoweringError",
+    "PlannedBackend", "PreparedLayer", "KERNELS", "KERNEL_FP", "KERNEL_QUANT",
+    "KERNEL_SPLIT", "KERNEL_TERNARY", "execute_conv_layer", "execute_layer",
+    "im2col", "lower", "prepare_layer", "reference_layer",
+    "resolve_layer_params",
 ]

@@ -1,26 +1,39 @@
 """Per-layer executors for `ExecutionPlan`s.
 
 `prepare_layer` binds one `LayerPlan` to a concrete weight: it applies the
-plan's channel permutation, quantizes the weight stream with the plan's
-scales (max-abs fallback when the plan was lowered without scales), and
-packages everything the kernels need.  `execute_layer` then runs an input
-through the matching Pallas kernel — interpret mode on CPU — or through the
-pure-jnp reference oracle (``reference=True``), always returning outputs in
-the ORIGINAL channel order (the inverse permutation is applied, mirroring
+plan's channel permutation, quantizes the weight stream PER DOMAIN with the
+plan's scales (each active quantized domain's columns carry that domain's
+own log-scale/step; max-abs fallback when the plan was lowered without
+scales), and packages everything the kernels need.  Both 2-D dense weights
+and 4-D HWIO conv weights bind — conv weights are flattened to
+``(kh*kw*c_in, c_out)`` and executed through `execute_conv_layer`, which
+im2cols the NHWC input so CNN artifacts run through the same split-precision
+/ quant Pallas kernels as dense layers.
+
+`execute_layer` runs an input through the matching Pallas kernel —
+interpret mode on CPU — or through the pure-jnp reference oracle
+(``reference=True``), always returning outputs in the ORIGINAL channel
+order (the inverse permutation is applied, mirroring
 `kernels.ops.odimo_deployed_dense`; the full Fig. 3 reorg removes it by
 rewriting the next layer's input channels).
 
 `PlannedBackend` binds a whole plan to a params pytree and implements the
-pluggable matmul-backend protocol of `repro.models` (``backend(p, x) -> y``
-or ``None`` to decline): install it with
-``repro.models.managed.matmul_backend(backend)`` and every managed/LM dense
-whose weight the plan covers executes through its planned kernel, bias
-included — no model code forks.
+NAME-KEYED matmul-backend protocol of `repro.models`
+(``backend(name, p, x, conv=...) -> y | None``): plans are resolved by the
+layer's pytree path — a static string — so planned execution traces cleanly
+under ``jax.jit`` (weights may be tracers; the prepared arrays are baked
+into the trace as constants).  Scan-stacked plans (``base@r`` layer names)
+are stacked per repeat and indexed inside the scan body with the index
+published by ``repro.models._backend.scan_slot``; repeats with heterogeneous
+kernels/boundaries dispatch through ``jax.lax.switch`` instead.  Install it
+with ``repro.models.managed.matmul_backend(backend)`` and every managed/LM
+dense or conv whose layer the plan covers executes through its planned
+kernel, bias included — no model code forks.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,10 +41,10 @@ import numpy as np
 
 from repro.core import quant
 from repro.kernels import ops, ref
+from repro.models import _backend
 from repro.runtime.lower import _layer_weight, _walk_path
 from repro.runtime.plan import (KERNEL_FP, KERNEL_QUANT, KERNEL_SPLIT,
-                                KERNEL_TERNARY, ExecutionPlan, LayerPlan,
-                                LoweringError)
+                                KERNEL_TERNARY, ExecutionPlan, LayerPlan)
 
 
 class ExecutionError(RuntimeError):
@@ -43,12 +56,15 @@ class PreparedLayer:
     """A `LayerPlan` bound to concrete arrays, ready to execute."""
     plan: LayerPlan
     inv: np.ndarray                  # inverse channel permutation
-    w_perm: jax.Array                # permuted weights, original dtype (K, N)
+    w_perm: jax.Array | None         # permuted weights, original dtype (K, N)
+                                     # (None for stacked quant/ternary slices
+                                     # — those kernels never read it)
     b: jax.Array | None              # bias, ORIGINAL channel order
     w_q: jax.Array | None            # int8 codes, permuted (quantized paths)
     sw: jax.Array | None             # (N,) per-column dequant step, f32
     act_log_scale: float | None      # None -> dynamic max-abs per call
     block_n: int = 128               # N-block the plan was aligned with
+    conv_shape: Tuple[int, ...] | None = None  # HWIO shape of a conv weight
 
     @property
     def kernel(self) -> str:
@@ -56,7 +72,8 @@ class PreparedLayer:
 
 
 def _quant_domain(lp: LayerPlan, domain_bits: List[int]) -> int:
-    """Index of the quantized domain whose scale drives the weight codes."""
+    """Index of the first active quantized domain (drives the codes of any
+    identity-domain columns that execute in int8 through block padding)."""
     active = lp.active_domains()
     quantized = [i for i in active if domain_bits[i] < 16]
     if not quantized:
@@ -65,43 +82,73 @@ def _quant_domain(lp: LayerPlan, domain_bits: List[int]) -> int:
     return quantized[0]
 
 
+def _per_column_quant(lp: LayerPlan, wf: jax.Array,
+                      domain_bits: List[int]) -> Tuple[jax.Array, jax.Array]:
+    """(w_q int8 codes, sw (N,) f32 steps) in PERMUTED column order, built
+    per domain: each active quantized domain's columns are quantized with
+    that domain's own ``w_log_scales`` entry and bit-width, so multi-
+    quantized-domain plans (e.g. 3-domain ``gap9_like``) dequantize every
+    column with the right step.  Identity (>=16-bit) columns inherit the
+    driving quantized domain's codes — conservative for the block-aligned
+    extra columns the split kernel executes in int8."""
+    drive = _quant_domain(lp, domain_bits)
+    if lp.w_log_scales is not None:
+        ls_of = lambda d: float(lp.w_log_scales[d])
+    else:  # lowered without scales: max-abs of the bound weight
+        ls = float(quant.init_log_scale(wf))
+        ls_of = lambda d: ls
+    bits_of = lambda d: (2 if lp.kernel == KERNEL_TERNARY
+                         else min(int(domain_bits[d]), 8))
+    col_ls = np.zeros(lp.c_out, np.float32)
+    col_levels = np.ones(lp.c_out, np.float32)
+    start = 0
+    for d, c in enumerate(lp.counts):
+        if c:
+            src = d if domain_bits[d] < 16 else drive
+            col_ls[start:start + c] = ls_of(src)
+            col_levels[start:start + c] = quant.qlevels(bits_of(src))
+        start += c
+    scale = jnp.asarray(np.exp(col_ls))
+    levels = jnp.asarray(col_levels)
+    w_q = jnp.round(jnp.clip(wf / scale[None, :], -1.0, 1.0) *
+                    levels[None, :]).astype(jnp.int8)
+    sw = (scale / levels).astype(jnp.float32)
+    return w_q, sw
+
+
 def prepare_layer(lp: LayerPlan, w, b=None,
                   domain_bits: List[int] | None = None,
                   block_n: int = 128) -> PreparedLayer:
-    """Bind ``lp`` to a concrete (C_in, C_out) weight (+ optional bias)."""
-    if getattr(w, "ndim", 0) != 2:
+    """Bind ``lp`` to a concrete weight (+ optional bias): a 2-D
+    (C_in, C_out) dense matrix or a 4-D (kh, kw, C_in, C_out) HWIO conv
+    kernel (flattened to ``(kh*kw*C_in, C_out)``; run conv layers through
+    `execute_conv_layer`)."""
+    ndim = getattr(w, "ndim", 0)
+    if ndim not in (2, 4):
         raise ExecutionError(f"{lp.name}: planned execution covers 2-D "
-                             f"(dense) weights, got shape "
-                             f"{tuple(getattr(w, 'shape', ()))}")
+                             f"(dense) and 4-D (HWIO conv) weights, got "
+                             f"shape {tuple(getattr(w, 'shape', ()))}")
     if int(w.shape[-1]) != lp.c_out:
         raise ExecutionError(f"{lp.name}: weight has {int(w.shape[-1])} "
                              f"output channels, plan expects {lp.c_out}")
+    conv_shape = tuple(int(s) for s in w.shape) if ndim == 4 else None
+    w2 = jnp.asarray(w).reshape(-1, int(w.shape[-1]))
     if domain_bits is None:
         domain_bits = [8] * len(lp.counts)
-    w_perm = jnp.take(jnp.asarray(w), lp.perm, axis=-1)
+    w_perm = jnp.take(w2, lp.perm, axis=-1)
     w_q = sw = None
     if lp.kernel in (KERNEL_QUANT, KERNEL_TERNARY, KERNEL_SPLIT):
-        dom = _quant_domain(lp, domain_bits)
-        bits = 2 if lp.kernel == KERNEL_TERNARY else min(domain_bits[dom], 8)
-        if lp.w_log_scales is not None:
-            ls = jnp.asarray(lp.w_log_scales[dom], jnp.float32)
-        else:  # lowered without scales: max-abs of the bound weight
-            ls = quant.init_log_scale(w_perm.astype(jnp.float32))
-        wf = w_perm.astype(jnp.float32)
-        # the whole (padded) matrix carries codes so block-aligned extra
-        # columns of the split kernel execute conservatively in int8
-        w_q = quant.quantize_int(wf, ls, bits)
-        step = jnp.exp(ls) / quant.qlevels(bits)
-        sw = jnp.full((lp.c_out,), step, jnp.float32)
+        w_q, sw = _per_column_quant(lp, w_perm.astype(jnp.float32),
+                                    domain_bits)
     return PreparedLayer(plan=lp, inv=lp.inv_perm(), w_perm=w_perm,
                          b=(jnp.asarray(b) if b is not None else None),
                          w_q=w_q, sw=sw, act_log_scale=lp.act_log_scale,
-                         block_n=block_n)
+                         block_n=block_n, conv_shape=conv_shape)
 
 
-def _act_quant(xf: jax.Array, act_log_scale: float | None):
-    """(x_q int8, sx step, xl log-scale); dynamic max-abs when no scale was
-    lowered (the v1-artifact migration path)."""
+def _act_quant(xf: jax.Array, act_log_scale):
+    """(x_q int8, sx step); dynamic max-abs when no scale was lowered (the
+    v1-artifact migration path)."""
     if act_log_scale is not None:
         xl = jnp.asarray(act_log_scale, jnp.float32)
     else:
@@ -117,12 +164,14 @@ def execute_layer(prep: PreparedLayer, x, *, interpret=None,
     ``(..., C_out)`` in the original channel order, bias applied, in
     ``x.dtype``.  ``reference=True`` routes through the pure-jnp oracles
     (`kernels.ref`) instead of the Pallas kernels — the bit-tolerance
-    reference path."""
+    reference path.  Jit-safe: ``x`` (and the prepared arrays, for stacked
+    repeats) may be tracers."""
     lp = prep.plan
-    if int(x.shape[-1]) != int(prep.w_perm.shape[0]):
+    wk = prep.w_perm if prep.w_perm is not None else prep.w_q
+    if int(x.shape[-1]) != int(wk.shape[-2]):
         raise ExecutionError(f"{lp.name}: input has {int(x.shape[-1])} "
                              f"features, weight expects "
-                             f"{int(prep.w_perm.shape[0])}")
+                             f"{int(wk.shape[-2])}")
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     xf = x2.astype(jnp.float32)
@@ -164,6 +213,60 @@ def execute_layer(prep: PreparedLayer, x, *, interpret=None,
     return y.reshape(*lead, lp.c_out).astype(x.dtype)
 
 
+# --------------------------------------------------------------------------
+# Conv execution: im2col onto the dense kernels
+# --------------------------------------------------------------------------
+
+def _same_pads(size: int, k: int, stride: int) -> Tuple[int, int, int]:
+    out = -(-size // stride)
+    pad = max((out - 1) * stride + k - size, 0)
+    return out, pad // 2, pad - pad // 2
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
+           padding: str = "SAME") -> jax.Array:
+    """NHWC input -> (B, OH, OW, kh*kw*C) patches whose last axis matches a
+    flattened HWIO conv weight ``w.reshape(kh*kw*C, C_out)`` (row-major
+    (kh, kw, C) order), with XLA's SAME/VALID padding semantics — so
+    ``im2col(x) @ w_flat == lax.conv_general_dilated(x, w)``."""
+    B, H, W, C = x.shape
+    if padding == "SAME":
+        oh, pt, pb = _same_pads(H, kh, stride)
+        ow, pl, pr = _same_pads(W, kw, stride)
+        x = jnp.pad(x, ((0, 0), (pt, pb), (pl, pr), (0, 0)))
+    elif padding == "VALID":
+        oh = (H - kh) // stride + 1
+        ow = (W - kw) // stride + 1
+    else:
+        raise ExecutionError(f"unsupported conv padding {padding!r}")
+    if oh < 1 or ow < 1:
+        raise ExecutionError(f"conv kernel ({kh}x{kw}) exceeds input "
+                             f"({H}x{W}) under {padding} padding")
+    cols = [x[:, i:i + (oh - 1) * stride + 1:stride,
+              j:j + (ow - 1) * stride + 1:stride, :]
+            for i in range(kh) for j in range(kw)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def execute_conv_layer(prep: PreparedLayer, x, stride: int = 1,
+                       padding: str = "SAME", *, interpret=None,
+                       reference: bool = False) -> jax.Array:
+    """Run an NHWC input through a prepared CONV layer: im2col the input to
+    ``(B, OH, OW, kh*kw*C_in)`` patches and execute them through the layer's
+    planned dense kernel (groups == 1 only)."""
+    if prep.conv_shape is None:
+        raise ExecutionError(f"{prep.plan.name}: not a conv layer (bound "
+                             f"weight was 2-D)")
+    kh, kw, ci, _ = prep.conv_shape
+    if int(x.shape[-1]) != ci:
+        raise ExecutionError(f"{prep.plan.name}: input has "
+                             f"{int(x.shape[-1])} channels, conv weight "
+                             f"expects {ci}")
+    patches = im2col(x, kh, kw, stride=stride, padding=padding)
+    return execute_layer(prep, patches, interpret=interpret,
+                         reference=reference)
+
+
 def reference_layer(prep: PreparedLayer, x) -> jax.Array:
     """Full-precision oracle: ``x @ w + b`` on the ORIGINAL weight order
     (the parity target planned execution is pinned against)."""
@@ -177,20 +280,113 @@ def reference_layer(prep: PreparedLayer, x) -> jax.Array:
 
 
 # --------------------------------------------------------------------------
+# Scan-stacked prepared layers
+# --------------------------------------------------------------------------
+
+def _stack_key(prep: PreparedLayer):
+    """Repeats can share one stacked execution only when everything STATIC
+    about their kernels agrees — arrays may differ, trace structure may
+    not."""
+    lp = prep.plan
+    return (lp.kernel, lp.c_in, lp.c_out, tuple(lp.counts),
+            tuple(lp.aligned_boundaries), prep.block_n, prep.conv_shape,
+            prep.b is None, prep.act_log_scale is None)
+
+
+class _StackedPrepared:
+    """Homogeneous per-repeat `PreparedLayer`s stacked on a leading R axis;
+    ``at(r)`` slices repeat ``r`` (r may be a traced scan index — this is
+    what executes scan-stacked LM layers inside the jitted layer scan)."""
+
+    def __init__(self, preps: List[PreparedLayer]):
+        p0 = preps[0]
+        self.plan, self.block_n = p0.plan, p0.block_n
+        self.conv_shape = p0.conv_shape
+        st = lambda get: (None if get(p0) is None
+                          else jnp.stack([jnp.asarray(get(p)) for p in preps]))
+        self._inv = jnp.stack([jnp.asarray(p.inv) for p in preps])
+        # quant/ternary kernels never read the fp weights — stacking them
+        # would hold R full-precision copies next to the int8 codes
+        self._w_perm = (st(lambda p: p.w_perm)
+                        if p0.plan.kernel in (KERNEL_SPLIT, KERNEL_FP)
+                        else None)
+        self._b = st(lambda p: p.b)
+        self._w_q = st(lambda p: p.w_q)
+        self._sw = st(lambda p: p.sw)
+        self._act = (None if p0.act_log_scale is None else
+                     jnp.asarray([p.act_log_scale for p in preps],
+                                 jnp.float32))
+
+    def at(self, r) -> PreparedLayer:
+        take = lambda a: None if a is None else jnp.take(a, r, axis=0)
+        return PreparedLayer(
+            plan=self.plan, inv=take(self._inv), w_perm=take(self._w_perm),
+            b=take(self._b), w_q=take(self._w_q), sw=take(self._sw),
+            act_log_scale=(None if self._act is None
+                           else jnp.take(self._act, r)),
+            block_n=self.block_n, conv_shape=self.conv_shape)
+
+    def execute(self, x, r, conv=None, *, interpret=None, reference=False):
+        prep = self.at(r)
+        if conv is not None:
+            return execute_conv_layer(prep, x, conv["stride"],
+                                      conv["padding"], interpret=interpret,
+                                      reference=reference)
+        return execute_layer(prep, x, interpret=interpret,
+                             reference=reference)
+
+
+class _SwitchPrepared:
+    """Heterogeneous per-repeat `PreparedLayer`s (different kernels or
+    boundaries across repeats): a traced scan index dispatches through
+    ``jax.lax.switch`` — every repeat's kernel is traced once, none fall
+    back to fp."""
+
+    def __init__(self, preps: List[PreparedLayer]):
+        # mirror _StackedPrepared: quant/ternary repeats never read the fp
+        # weights, so don't keep their (K, N) float copies alive
+        self.preps = [dataclasses.replace(p, w_perm=None)
+                      if p.plan.kernel in (KERNEL_QUANT, KERNEL_TERNARY)
+                      else p for p in preps]
+        self.conv_shape = preps[0].conv_shape
+
+    def execute(self, x, r, conv=None, *, interpret=None, reference=False):
+        def run(prep, xx):
+            if conv is not None:
+                return execute_conv_layer(prep, xx, conv["stride"],
+                                          conv["padding"],
+                                          interpret=interpret,
+                                          reference=reference)
+            return execute_layer(prep, xx, interpret=interpret,
+                                 reference=reference)
+        if not isinstance(r, jax.core.Tracer):
+            return run(self.preps[int(r)], x)
+        branches = [lambda xx, p=p: run(p, xx) for p in self.preps]
+        return jax.lax.switch(jnp.asarray(r, jnp.int32), branches, x)
+
+
+# --------------------------------------------------------------------------
 # Pluggable matmul backend over a whole plan
 # --------------------------------------------------------------------------
 
 class PlannedBackend:
-    """Binds an `ExecutionPlan` to a params pytree and serves the
-    `repro.models` matmul-backend protocol.
+    """Binds an `ExecutionPlan` to a params pytree and serves the NAME-KEYED
+    `repro.models` matmul-backend protocol: ``backend(name, p, x, conv=...)``
+    resolves the layer's plan by ``name`` — the layer's pytree path, a
+    static string — at TRACE time, so ``serve.py --mapping`` jits prefill/
+    decode with planned kernels executing inside the trace (the prepared
+    weights are baked in as constants; the traced ``p`` is ignored).
 
     Layers resolve exactly like `lower()` resolves them (handle plan order,
-    or artifact layer names as params paths); each resolved 2-D weight leaf
-    is prepared once and thereafter matched BY IDENTITY inside
-    ``dense(p, x)`` — stacked/scanned weights (leaves that only exist as
-    tracers inside a `jax.lax.scan` body) therefore never match and fall
-    through to the caller's default path.  ``bound``/``unbound`` record the
-    coverage split.
+    or artifact layer names as params paths).  ``base@r`` names (scan-
+    stacked weights) are grouped per base: homogeneous repeats stack into
+    one `_StackedPrepared` indexed by the scan index published via
+    ``repro.models._backend.scan_slot``; heterogeneous repeats dispatch
+    through ``lax.switch``.  ``bound``/``unbound`` record the bind-time
+    coverage split (per artifact layer name, ``@r`` included);
+    ``runtime_declines`` records trace-time declines (e.g. grouped convs).
+    Calls that name-match a plan but cannot execute it raise
+    `ExecutionError` — never a silent fp fallback.
     """
 
     def __init__(self, plan: ExecutionPlan, params, handle=None, *,
@@ -202,38 +398,114 @@ class PlannedBackend:
         if handle is not None:
             dicts = handle.layers(params)
             if len(dicts) != len(plan.layers):
-                raise LoweringError(
+                raise ExecutionError(
                     f"handle resolves {len(dicts)} managed layers but the "
                     f"plan has {len(plan.layers)}")
             resolved = list(zip(plan.layers, dicts))
         else:
             resolved = [(lp, _walk_path(params, lp.name))
                         for lp in plan.layers]
-        self._by_id: Dict[int, PreparedLayer] = {}
+        self._by_name: Dict[str, Any] = {}
         self.bound: List[str] = []
         self.unbound: List[str] = []
+        self.runtime_declines: Dict[str, str] = {}
+        stacked: Dict[str, List[Tuple[int, LayerPlan, Any]]] = {}
         for lp, node in resolved:
-            w = _layer_weight(node)
-            if not isinstance(node, dict) or getattr(w, "ndim", 0) != 2 \
-                    or isinstance(w, jax.ShapeDtypeStruct):
-                self.unbound.append(lp.name)
+            base, _, rep = lp.name.partition("@")
+            if rep:
+                stacked.setdefault(base, []).append((int(rep), lp, node))
                 continue
-            prep = prepare_layer(lp, w, b=node.get("b"),
-                                 domain_bits=domain_bits,
-                                 block_n=plan.block_n)
-            self._by_id[id(w)] = prep
-            self.bound.append(lp.name)
+            prep = self._try_prepare(lp, node, domain_bits)
+            if prep is None:
+                self.unbound.append(lp.name)
+            else:
+                self._by_name[lp.name] = prep
+                self.bound.append(lp.name)
+        for base, entries in sorted(stacked.items()):
+            entries.sort(key=lambda e: e[0])
+            reps = [r for r, _, _ in entries]
+            if reps != list(range(len(reps))):
+                raise ExecutionError(
+                    f"{base}: stacked plan repeats {reps} are not the "
+                    f"contiguous range 0..{len(reps) - 1}")
+            if handle is None:
+                # a plan covering FEWER repeats than the model's stack would
+                # index out of range inside the scan (NaN fill) — reject at
+                # bind time instead
+                stack_w = _layer_weight(_walk_path(params, base))
+                if getattr(stack_w, "ndim", 0) in (3, 5) and \
+                        int(stack_w.shape[0]) != len(reps):
+                    raise ExecutionError(
+                        f"{base}: plan covers {len(reps)} repeats but the "
+                        f"stacked weight carries {int(stack_w.shape[0])} — "
+                        f"the artifact does not match this model's layer "
+                        f"stack")
+            preps = [self._try_prepare(lp, node, domain_bits)
+                     for _, lp, node in entries]
+            if any(p is None for p in preps):
+                self.unbound.extend(lp.name for _, lp, _ in entries)
+                continue
+            if len({_stack_key(p) for p in preps}) == 1:
+                self._by_name[base] = _StackedPrepared(preps)
+            else:
+                self._by_name[base] = _SwitchPrepared(preps)
+            self.bound.extend(lp.name for _, lp, _ in entries)
 
-    def __call__(self, p, x):
-        """Matmul-backend hook: ``p`` is a dense param dict.  Returns the
-        planned output (bias applied) or None to decline."""
-        w = p.get("w") if isinstance(p, dict) else None
-        prep = self._by_id.get(id(w)) if w is not None else None
-        if prep is None:
+    def _try_prepare(self, lp: LayerPlan, node, domain_bits):
+        w = _layer_weight(node)
+        if not isinstance(node, dict) or getattr(w, "ndim", 0) not in (2, 4) \
+                or isinstance(w, jax.ShapeDtypeStruct):
             return None
-        return execute_layer(prep, x, interpret=self.interpret,
+        return prepare_layer(lp, w, b=node.get("b"), domain_bits=domain_bits,
+                             block_n=self.plan.block_n)
+
+    def __call__(self, name, p, x, *, conv=None):
+        """Matmul-backend hook: resolve ``name`` to a prepared plan; returns
+        the planned output (bias applied) or None to decline (unknown /
+        unnamed layer, or an unsupported conv).  ``conv`` carries the call
+        site's ``{"stride", "padding", "groups"}`` for conv layers."""
+        if name is None:
+            return None
+        entry = self._by_name.get(name)
+        if entry is None:
+            return None
+        conv_shape = entry.conv_shape
+        if conv is not None and conv_shape is None:
+            raise ExecutionError(
+                f"{name}: conv call site but the plan bound a 2-D dense "
+                f"weight — the artifact does not match this model")
+        if conv is None and conv_shape is not None:
+            raise ExecutionError(
+                f"{name}: dense call site but the plan bound a conv weight "
+                f"— the artifact does not match this model")
+        if conv is not None and conv.get("groups", 1) != 1:
+            # trace-time decline, surfaced via runtime_declines (grouped /
+            # depthwise convs have no im2col lowering yet)
+            self.runtime_declines[name] = (
+                f"grouped conv (groups={conv['groups']}) has no im2col "
+                f"lowering; executed on the default path")
+            return None
+        if isinstance(entry, (_StackedPrepared, _SwitchPrepared)):
+            r = _backend.current_scan_index()
+            if r is None:
+                raise ExecutionError(
+                    f"{name}: scan-stacked plan executed outside a "
+                    f"scan_slot context (no repeat index to select the "
+                    f"prepared kernels)")
+            return entry.execute(x, r, conv=conv, interpret=self.interpret,
+                                 reference=self.reference)
+        if conv is not None:
+            return execute_conv_layer(entry, x, conv["stride"],
+                                      conv["padding"],
+                                      interpret=self.interpret,
+                                      reference=self.reference)
+        return execute_layer(entry, x, interpret=self.interpret,
                              reference=self.reference)
+
+    @property
+    def fully_covered(self) -> bool:
+        return not self.unbound
 
     def coverage(self) -> str:
         return (f"{len(self.bound)}/{len(self.plan.layers)} planned layers "
-                f"bound to weights")
+                f"bound to weights, {len(self.unbound)} unbound")

@@ -52,11 +52,37 @@ def _artifact_dict(artifact) -> dict:
     return artifact
 
 
+def _index_stacked(node, r: int):
+    """Repeat ``r`` of a scan-stacked param node: every array leaf loses its
+    leading R axis (ShapeDtypeStructs are re-specced, concrete arrays
+    sliced).  Returns None when the repeat is out of range."""
+    def one(leaf):
+        if type(leaf).__name__ == "ShapeDtypeStruct":
+            if not leaf.shape or r >= leaf.shape[0]:
+                raise IndexError(r)
+            return type(leaf)(leaf.shape[1:], leaf.dtype)
+        if getattr(leaf, "ndim", 0) >= 1:
+            if r >= leaf.shape[0]:
+                raise IndexError(r)
+            return leaf[r]
+        return leaf
+    try:
+        if isinstance(node, dict):
+            return {k: one(v) for k, v in node.items()}
+        return one(node)
+    except (IndexError, TypeError):
+        return None
+
+
 def _walk_path(params, name: str):
     """Resolve a slash-separated layer name into the params pytree; returns
-    None when any segment is missing."""
+    None when any segment is missing.  A ``base@r`` name addresses repeat
+    ``r`` of the scan-stacked node at ``base`` (leaves carry a leading R
+    axis — the `jax.lax.scan` layer-stacking convention of
+    `repro.models.transformer`)."""
+    base, _, rep = name.partition("@")
     node = params
-    for part in name.split("/"):
+    for part in base.split("/"):
         try:
             if isinstance(node, (list, tuple)):
                 node = node[int(part)]
@@ -65,6 +91,11 @@ def _walk_path(params, name: str):
             else:
                 return None
         except (KeyError, IndexError, ValueError, TypeError):
+            return None
+    if rep:
+        try:
+            node = _index_stacked(node, int(rep))
+        except ValueError:
             return None
     return node
 
@@ -78,7 +109,9 @@ def resolve_layer_params(artifact, params=None, handle=None):
     `repro.api.ModelHandle`), layers come back in plan order — artifact
     order by construction.  Otherwise artifact layer names are resolved as
     slash-separated paths into ``params`` (the `launch/train.py
-    --emit-mapping` convention).
+    --emit-mapping` convention); ``base@r`` names address repeat ``r`` of a
+    scan-stacked node (leaves with a leading R axis), and 4-D HWIO conv
+    weights resolve like dense ones (the executors im2col their inputs).
     """
     art = _artifact_dict(artifact)
     names = [l["name"] for l in art["layers"]]
@@ -256,6 +289,7 @@ def _lm_param_shapes(arch: str, reduce: bool):
 def main(argv=None):
     import argparse
     import json
+    import sys
     from pathlib import Path
 
     ap = argparse.ArgumentParser(
@@ -273,8 +307,12 @@ def main(argv=None):
     artifact = json.loads(Path(args.artifact).read_text())
     params = (_lm_param_shapes(args.arch, args.reduce)
               if args.arch else None)
-    plan = lower(artifact, params=params, block_n=args.block_n,
-                 strict=args.strict)
+    try:
+        plan = lower(artifact, params=params, block_n=args.block_n,
+                     strict=args.strict)
+    except LoweringError as e:
+        print(f"[lower] ERROR: {e}", file=sys.stderr)
+        sys.exit(2)
     print(f"[lower] {plan.summary()}")
     for lp in plan.layers:
         extra = f"  ({lp.note})" if lp.note else ""

@@ -1,8 +1,9 @@
 """Mapping-execution runtime tests (`repro.runtime`): artifact -> plan ->
 artifact round trips, per-layer planned execution parity against the fp
-reference (interpret mode), lowering validation, kernel capability
-selection, the serve fallback vote, pipeline stage checkpointing, and the
-3-domain gap9_like platform."""
+reference (interpret mode), jit parity of the name-keyed backend, scan-
+stacked binding/execution, conv im2col lowering, per-domain quant scales,
+lowering validation, kernel capability selection, the serve fallback vote,
+pipeline stage checkpointing, and the 3-domain gap9_like platform."""
 import dataclasses
 import json
 
@@ -15,10 +16,12 @@ from repro.api import (MappingArtifact, Platform, SearchConfig,
                        SearchPipeline, lower, mlp_handle)
 from repro.core import baselines as BL
 from repro.data.pipeline import ImageTaskConfig, image_batch
-from repro.runtime import (ExecutionPlan, KERNEL_FP, KERNEL_QUANT,
-                           KERNEL_SPLIT, KERNEL_TERNARY, LayerPlan,
-                           LoweringError, PlannedBackend, execute_layer,
-                           prepare_layer, reference_layer)
+from repro.models import _backend
+from repro.runtime import (ExecutionError, ExecutionPlan, KERNEL_FP,
+                           KERNEL_QUANT, KERNEL_SPLIT, KERNEL_TERNARY,
+                           LayerPlan, LoweringError, PlannedBackend,
+                           execute_conv_layer, execute_layer, prepare_layer,
+                           reference_layer)
 from repro.runtime.lower import select_kernel
 
 TINY = SearchConfig(lam=1e-6, objective="latency", pretrain_steps=3,
@@ -106,7 +109,7 @@ def test_v1_artifact_lowers_without_scales():
         [float(np.log(np.max(np.abs(np.asarray(w)))))] * 2)
     backend = PlannedBackend(plan, params)
     x = jnp.ones((4, 32), jnp.float32)
-    assert backend(params["l0"], x).shape == (4, 64)
+    assert backend("l0", params["l0"], x).shape == (4, 64)
 
 
 # --------------------------------------------------------------------------
@@ -179,7 +182,7 @@ def test_block_n_agrees_between_plan_and_execution():
         lp = plan["l0"]
         assert lp.aligned_boundaries == [128, 128]
         backend = PlannedBackend(plan, params)
-        prep = next(iter(backend._by_id.values()))
+        prep = backend._by_name["l0"]
         assert prep.block_n == bn
         x = jnp.asarray(np.random.default_rng(3).normal(size=(4, 32)),
                         jnp.float32)
@@ -241,12 +244,364 @@ def test_backend_declines_uncovered_layers():
     plan = lower(art, params=params)
     backend = PlannedBackend(plan, params)
     other = {"w": jnp.ones((32, 64), jnp.float32)}
-    assert backend(other, jnp.ones((2, 32))) is None
+    # unknown and unnamed layers decline; covered names execute
+    assert backend("nope", other, jnp.ones((2, 32))) is None
+    assert backend(None, other, jnp.ones((2, 32))) is None
     from repro.models import layers as L
     from repro.models.managed import matmul_backend
     with matmul_backend(backend):
         y = L.dense(other, jnp.ones((2, 32), jnp.float32))  # default path
+        y2 = L.dense(other, jnp.ones((2, 32), jnp.float32), name="nope")
     np.testing.assert_allclose(np.asarray(y), 32.0)
+    np.testing.assert_allclose(np.asarray(y2), 32.0)
+
+
+def test_handle_plan_count_mismatch_is_execution_error():
+    """Binding-phase failures are ExecutionErrors, not LoweringErrors."""
+    art, params = _toy_artifact()
+    plan = lower(art, params=params)
+
+    class TwoLayerHandle:
+        def layers(self, p):
+            return [p["l0"]]  # one node for a two-layer plan
+
+    with pytest.raises(ExecutionError, match="resolves 1 managed layers"):
+        PlannedBackend(plan, params, handle=TwoLayerHandle())
+
+
+# --------------------------------------------------------------------------
+# jit parity: the name-keyed backend executes planned kernels INSIDE a trace
+# --------------------------------------------------------------------------
+
+def _single_layer_backend(kernel, rng, k=32, n=64):
+    """(backend, params, name) with one layer lowered to ``kernel``."""
+    domains = {
+        KERNEL_QUANT: ([0] * n, [8, 16]),
+        KERNEL_TERNARY: ([0] * n, [2, 16]),
+        KERNEL_SPLIT: ([0] * (n // 2) + [1] * (n // 2), [8, 16]),
+        KERNEL_FP: ([1] * n, [8, 16]),
+    }
+    assign, bits = domains[kernel]
+    doc = {
+        "schema_version": 2, "model": "jitparity",
+        "domains": [{"name": f"d{i}", "weight_bits": b, "act_bits": 8}
+                    for i, b in enumerate(bits)],
+        "layers": [{"name": "l", "searchable": True,
+                    "assignment": assign,
+                    "counts": [assign.count(0), assign.count(1)]}],
+    }
+    params = {"l": {"w": jnp.asarray(rng.normal(size=(k, n)) * 0.3,
+                                     jnp.float32),
+                    "b": jnp.asarray(rng.normal(size=(n,)) * 0.1,
+                                     jnp.float32)}}
+    plan = lower(doc, params=params)
+    assert plan["l"].kernel == kernel
+    return PlannedBackend(plan, params, interpret=True), params, "l"
+
+
+@pytest.mark.parametrize("kernel", [KERNEL_QUANT, KERNEL_TERNARY,
+                                    KERNEL_SPLIT, KERNEL_FP])
+def test_backend_jit_parity_per_kernel(kernel):
+    """The planned output under jax.jit equals the eager planned output —
+    the backend resolves by static name, so nothing falls back to the
+    default path inside the trace."""
+    rng = np.random.default_rng(7)
+    backend, params, name = _single_layer_backend(kernel, rng)
+    x = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    y_eager = backend(name, params[name], x)
+    y_jit = jax.jit(lambda p, xx: backend(name, p, xx))(params[name], x)
+    np.testing.assert_allclose(np.asarray(y_jit), np.asarray(y_eager),
+                               rtol=1e-5, atol=1e-5)
+    # and the jitted output is genuinely the PLANNED one, not the fp path
+    if kernel != KERNEL_FP:
+        y_fp = x @ params[name]["w"] + params[name]["b"]
+        assert not np.allclose(np.asarray(y_jit), np.asarray(y_fp),
+                               rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# scan-stacked plans: base@r names bind and execute inside the layer scan
+# --------------------------------------------------------------------------
+
+def _stacked_artifact(rng, assigns_per_repeat, scales=True):
+    """R-repeat stacked dense artifact + params {"units": ({"proj": ...},)}."""
+    R = len(assigns_per_repeat)
+    K = 16
+    spec = Platform.get("tpu_v5e").spec()
+    counts = BL.counts_from_assignments(assigns_per_repeat, 2)
+    plan_list = [(f"units/0/proj@{r}", None, True) for r in range(R)]
+    sc = None
+    if scales:
+        sc = [{"w_log_scales": [float(np.log(0.4 + 0.2 * r))] * 2,
+               "act_log_scale": None} for r in range(R)]
+    art = MappingArtifact.from_search("stacked", spec, plan_list,
+                                      assigns_per_repeat, counts,
+                                      platform="tpu_v5e", scales=sc)
+    N = len(assigns_per_repeat[0])
+    params = {"units": ({"proj": {
+        "w": jnp.asarray(rng.normal(size=(R, K, N)) * 0.25, jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(R, N)) * 0.1, jnp.float32)}},)}
+    return art, params, R, K
+
+
+def _scan_planned(backend, x, R):
+    """Execute ``units/0/proj`` for every repeat inside a jitted lax.scan
+    (the transformer.backbone pattern: scan_slot publishes the index)."""
+    def body(carry, ridx):
+        with _backend.scan_slot(ridx):
+            y = backend("units/0/proj", None, x)
+        return carry, y
+
+    @jax.jit
+    def run():
+        _, ys = jax.lax.scan(body, 0, jnp.arange(R))
+        return ys
+    return run()
+
+
+def test_scan_stacked_plans_bind_and_execute_homogeneous():
+    """All repeats bind (none silently fp) and the stacked execution inside
+    a jitted scan matches per-repeat eager execution."""
+    rng = np.random.default_rng(11)
+    a = np.array(([0] * 3 + [1]) * 16)           # same split every repeat
+    art, params, R, K = _stacked_artifact(rng, [a] * 3)
+    plan = lower(art, params=params)
+    backend = PlannedBackend(plan, params, interpret=True)
+    assert backend.unbound == []
+    assert backend.bound == [f"units/0/proj@{r}" for r in range(R)]
+    from repro.runtime.execute import _StackedPrepared
+    assert isinstance(backend._by_name["units/0/proj"], _StackedPrepared)
+
+    x = jnp.asarray(rng.normal(size=(2, K)), jnp.float32)
+    ys = _scan_planned(backend, x, R)
+    for r in range(R):
+        with _backend.scan_slot(r):
+            y_eager = backend("units/0/proj", None, x)
+        np.testing.assert_allclose(np.asarray(ys[r]), np.asarray(y_eager),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_scan_stacked_heterogeneous_kernels_switch():
+    """Repeats with different kernels (split / quant / fp) still all bind;
+    a traced scan index dispatches through lax.switch."""
+    rng = np.random.default_rng(12)
+    N = 64
+    assigns = [np.array([0] * 32 + [1] * 32),    # split_precision
+               np.zeros(N, np.int64),            # quant_matmul
+               np.ones(N, np.int64)]             # fp
+    art, params, R, K = _stacked_artifact(rng, assigns)
+    plan = lower(art, params=params)
+    assert [lp.kernel for lp in plan.layers] == \
+        [KERNEL_SPLIT, KERNEL_QUANT, KERNEL_FP]
+    backend = PlannedBackend(plan, params, interpret=True)
+    assert backend.unbound == []
+    from repro.runtime.execute import _SwitchPrepared
+    assert isinstance(backend._by_name["units/0/proj"], _SwitchPrepared)
+
+    x = jnp.asarray(rng.normal(size=(2, K)), jnp.float32)
+    ys = _scan_planned(backend, x, R)
+    for r in range(R):
+        with _backend.scan_slot(r):
+            y_eager = backend("units/0/proj", None, x)
+        np.testing.assert_allclose(np.asarray(ys[r]), np.asarray(y_eager),
+                                   rtol=1e-5, atol=1e-5)
+    # outside any scan_slot the stacked plan fails LOUDLY, never silently fp
+    with pytest.raises(ExecutionError, match="outside a scan_slot"):
+        backend("units/0/proj", None, x)
+
+
+def test_scan_stacked_quant_stack_skips_fp_weights():
+    """Homogeneous quant stacks don't hold R full-precision weight copies
+    (the quant kernel only reads the int8 codes) and still execute within
+    quant tolerance."""
+    rng = np.random.default_rng(14)
+    a = np.zeros(64, np.int64)                    # all int8 -> quant_matmul
+    art, params, R, K = _stacked_artifact(rng, [a] * 3, scales=False)
+    backend = PlannedBackend(lower(art, params=params), params,
+                             interpret=True)
+    entry = backend._by_name["units/0/proj"]
+    assert entry._w_perm is None
+    x = jnp.asarray(rng.normal(size=(2, K)), jnp.float32)
+    for r in range(R):
+        with _backend.scan_slot(r):
+            y = backend("units/0/proj", None, x)
+        ref = x @ params["units"][0]["proj"]["w"][r] + \
+            params["units"][0]["proj"]["b"][r]
+        rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+        assert rel < 0.05, rel
+
+
+def test_scan_stacked_repeat_count_mismatch_rejected():
+    """A plan covering fewer repeats than the model's stack must not bind:
+    out-of-range jnp.take inside the scan would produce NaN silently."""
+    rng = np.random.default_rng(13)
+    a = np.array(([0] * 3 + [1]) * 16)
+    art, params, R, K = _stacked_artifact(rng, [a] * 2)   # plan: 2 repeats
+    # model: 3 repeats
+    params = {"units": ({"proj": {
+        "w": jnp.asarray(rng.normal(size=(3, K, len(a))) * 0.25, jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(3, len(a))) * 0.1, jnp.float32)}},)}
+    plan = lower(art, params=params)
+    with pytest.raises(ExecutionError, match="2 repeats.*carries 3"):
+        PlannedBackend(plan, params)
+
+
+# --------------------------------------------------------------------------
+# conv lowering: im2col onto the planned dense kernels
+# --------------------------------------------------------------------------
+
+def _conv_prep(rng, kh, kw, ci, co, kernel=KERNEL_FP, bits=(8, 16)):
+    assign = {KERNEL_FP: [1] * co, KERNEL_SPLIT:
+              [0] * (co // 2) + [1] * (co - co // 2)}[kernel]
+    counts = [assign.count(0), assign.count(1)]
+    lp = LayerPlan(name="c", kernel=kernel, c_in=kh * kw * ci, c_out=co,
+                   perm=np.argsort(np.asarray(assign), kind="stable"),
+                   counts=counts, boundaries=list(np.cumsum(counts)),
+                   aligned_boundaries=[128, 128], w_log_scales=None,
+                   act_log_scale=None)
+    w = jnp.asarray(rng.normal(size=(kh, kw, ci, co)) * 0.2, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(co,)) * 0.1, jnp.float32)
+    return prepare_layer(lp, w, b, domain_bits=list(bits)), w, b
+
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
+                                            (1, "VALID")])
+def test_conv_im2col_matches_lax_conv(stride, padding):
+    """fp-kernel conv execution through im2col == lax.conv_general_dilated
+    (same SAME/VALID semantics, bias applied)."""
+    rng = np.random.default_rng(21)
+    prep, w, b = _conv_prep(rng, 3, 3, 5, 8)
+    x = jnp.asarray(rng.normal(size=(2, 12, 12, 5)), jnp.float32)
+    y = execute_conv_layer(prep, x, stride=stride, padding=padding)
+    ref_y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref_y),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_planned_conv_through_managed_backend_jit():
+    """A CNN-style artifact binds conv weights and `managed.conv2d` executes
+    them through the planned split kernel under jax.jit, within quant
+    tolerance of the fp conv."""
+    from repro.models import managed as mg
+    rng = np.random.default_rng(22)
+    ci, co = 4, 16
+    assign = [0] * 11 + [1] * 5
+    doc = {
+        "schema_version": 2, "model": "convtest",
+        "domains": [{"name": "int8", "weight_bits": 8, "act_bits": 8},
+                    {"name": "bf16", "weight_bits": 16, "act_bits": 16}],
+        "layers": [{"name": "c", "searchable": True, "assignment": assign,
+                    "counts": [11, 5]}],
+    }
+    params = {"c": {"w": jnp.asarray(rng.normal(size=(3, 3, ci, co)) * 0.3,
+                                     jnp.float32),
+                    "b": jnp.zeros((co,), jnp.float32)}}
+    plan = lower(doc, params=params)
+    assert plan["c"].kernel == KERNEL_SPLIT
+    backend = PlannedBackend(plan, params, interpret=True)
+    assert backend.bound == ["c"]
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, ci)), jnp.float32)
+    fwd = jax.jit(lambda p, xx: mg.conv2d(p["c"], xx, name="c"))
+    with mg.matmul_backend(backend):
+        y_planned = fwd(params, x)
+    y_fp = mg.conv2d(params["c"], x)
+    rel = float(jnp.linalg.norm(y_planned - y_fp) /
+                jnp.maximum(jnp.linalg.norm(y_fp), 1e-9))
+    assert rel < 0.1, rel
+    # dense-style call on a conv-bound name is a loud mismatch
+    with pytest.raises(ExecutionError, match="conv weight"):
+        backend("c", params["c"], x.reshape(2, -1))
+
+
+def test_grouped_conv_declines_with_reason():
+    """Depthwise/grouped convs have no im2col lowering: the backend declines
+    at trace time and records why (surfaced by serve's coverage check)."""
+    from repro.models import managed as mg
+    rng = np.random.default_rng(23)
+    c = 8
+    doc = {
+        "schema_version": 2, "model": "dw",
+        "domains": [{"name": "int8", "weight_bits": 8, "act_bits": 8}],
+        "layers": [{"name": "dw", "searchable": False,
+                    "assignment": [0] * c, "counts": [c]}],
+    }
+    params = {"dw": {"w": jnp.asarray(rng.normal(size=(3, 3, 1, c)),
+                                      jnp.float32),
+                     "b": jnp.zeros((c,), jnp.float32)}}
+    backend = PlannedBackend(lower(doc, params=params), params,
+                             interpret=True)
+    x = jnp.asarray(rng.normal(size=(1, 6, 6, c)), jnp.float32)
+    with mg.matmul_backend(backend):
+        y = mg.conv2d(params["dw"], x, groups=c, name="dw")  # default path
+    assert np.isfinite(np.asarray(y)).all()
+    assert "dw" in backend.runtime_declines
+    assert "grouped conv" in backend.runtime_declines["dw"]
+
+
+# --------------------------------------------------------------------------
+# per-domain per-column quant scales (multi-quantized-domain plans)
+# --------------------------------------------------------------------------
+
+def test_prepare_layer_per_domain_column_steps():
+    """Each active quantized domain's columns carry THAT domain's dequant
+    step — not a uniform step from quantized[0] (wrong for plans with
+    several quantized domains, e.g. 3-domain gap9_like)."""
+    from repro.core import quant
+    rng = np.random.default_rng(31)
+    n0, n1, n2 = 10, 6, 4            # int8 | ternary | fp16 (gap9-like)
+    N = n0 + n1 + n2
+    ls = [0.3, -0.9, 0.0]
+    lp = LayerPlan(name="g", kernel=KERNEL_QUANT, c_in=8, c_out=N,
+                   perm=np.arange(N), counts=[n0, n1, n2],
+                   boundaries=[n0, n0 + n1, N],
+                   aligned_boundaries=[128, 128, 128],
+                   w_log_scales=ls, act_log_scale=None)
+    w = jnp.asarray(rng.normal(size=(8, N)) * 0.5, jnp.float32)
+    prep = prepare_layer(lp, w, domain_bits=[8, 2, 16])
+    sw = np.asarray(prep.sw)
+    step0 = np.exp(ls[0]) / quant.qlevels(8)
+    step1 = np.exp(ls[1]) / quant.qlevels(2)
+    np.testing.assert_allclose(sw[:n0], step0, rtol=1e-6)
+    np.testing.assert_allclose(sw[n0:n0 + n1], step1, rtol=1e-6)
+    # identity-domain columns inherit the DRIVING quantized domain's step
+    # (they execute in int8 only as conservative block padding)
+    np.testing.assert_allclose(sw[n0 + n1:], step0, rtol=1e-6)
+    # codes * step reconstruct each domain's columns with ITS scale
+    deq = np.asarray(prep.w_q, np.float32) * sw[None, :]
+    wf = np.asarray(w)
+    for cols, bits, s in [(slice(0, n0), 8, ls[0]),
+                          (slice(n0, n0 + n1), 2, ls[1])]:
+        expect = np.asarray(quant.fake_quant(jnp.asarray(wf[:, cols]),
+                                             jnp.asarray(s), bits))
+        np.testing.assert_allclose(deq[:, cols], expect, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# serve coverage gate
+# --------------------------------------------------------------------------
+
+def test_serve_require_full_coverage_exits_nonzero():
+    from repro.launch import serve
+
+    class FakeBackend:
+        unbound = ["l1"]
+        runtime_declines = {}
+    with pytest.raises(SystemExit) as ei:
+        serve.check_coverage("serve", FakeBackend(), True)
+    assert ei.value.code == 2
+
+    class Declined:
+        unbound = []
+        runtime_declines = {"dw": "grouped conv"}
+    with pytest.raises(SystemExit):
+        serve.check_coverage("serve", Declined(), True)
+
+    class Full:
+        unbound = []
+        runtime_declines = {}
+    serve.check_coverage("serve", Full(), True)   # no exit
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,292 @@
+"""Planned-serving runtime benchmark: artifact -> lower -> bind -> jit'd
+prefill/decode, timed end to end, written to ``BENCH_runtime.json``.
+
+This is the repo's perf baseline for the mapping-execution hot path.  Legs:
+
+  * ``lm:zamba2``        the ci reduced zamba2 loop (diana platform — mixed
+                         ternary+int8 layers lower to the fused
+                         split_ternary kernel, zero fp fallbacks; its layer
+                         stacks carry ONE repeat each, so no dispatch
+                         comparison — tok/s + lowering/bind cost only)
+  * ``lm:yi9b_homog``    yi-9b reduced, layer stack deepened to R=6 repeats
+                         sharing ONE mapping: the grouped dispatch runs a
+                         single stacked gather
+  * ``lm:yi9b_grouped``  same model, repeats alternating TWO mappings: the
+                         grouped dispatch switches over G=2 groups where the
+                         PR 3 baseline switched over R=6 branches
+  * ``cnn:resnet20_tiny`` conv artifact through the im2col planned kernels
+
+The yi-9b legs run twice — ``stack_mode="grouped"`` (current) vs
+``stack_mode="switch"`` (the PR 3 one-branch-per-repeat baseline) — and
+record cold (trace+compile included) and warm decode throughput for both,
+plus plan-lowering/bind wall time and the per-kernel layer histogram.
+``decode_total_tok_s`` (tokens over cold-start + steady decode — serving
+startup latency is exactly what fewer traced branches buy) is the headline;
+``decode_warm_tok_s`` isolates the steady state.  Timed rounds interleave
+the two modes and keep the best so machine drift cancels.
+
+    PYTHONPATH=src python benchmarks/bench_runtime.py [--quick] \
+        [--out BENCH_runtime.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _ms(t0: float) -> float:
+    return round((time.monotonic() - t0) * 1e3, 1)
+
+
+def _lm_setup(arch: str, platform: str, n_layers: int | None = None):
+    """(cfg, params, artifact) for a reduced LM arch with a static min-cost
+    mapping emitted against its concrete weights."""
+    from repro.configs import base as cfgbase
+    from repro.launch.train import emit_static_mapping
+    from repro.models import transformer as T
+
+    cfgbase.load_all()
+    cfg = cfgbase.reduce_for_smoke(cfgbase.get(arch))
+    if n_layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    with tempfile.TemporaryDirectory() as td:
+        art = emit_static_mapping(params, cfg, platform,
+                                  Path(td) / "mapping.json")
+    return cfg, params, art
+
+
+def _alternate_stacked_mappings(art) -> dict:
+    """Rewrite ODD repeats of every scan-stacked layer to a half/half
+    digital+ternary split (the fused split_ternary shape): the stack then
+    carries TWO distinct mappings tiled across the depth — G=2 groups for
+    the grouped dispatch, R branches for the switch baseline."""
+    doc = art.to_dict()
+    for layer in doc["layers"]:
+        base, _, rep = layer["name"].partition("@")
+        if not rep or int(rep) % 2 == 0:
+            continue
+        c = len(layer["assignment"])
+        layer["assignment"] = [0] * (c // 2) + [1] * (c - c // 2)
+        layer["counts"] = [c // 2, c - c // 2]
+    return doc
+
+
+def _bench_lm(leg: str, cfg, params, artifact, *, requests: int,
+              prompt_len: int, gen_len: int,
+              compare=("grouped", "switch")) -> dict:
+    """Lower + bind + jit'd prefill/decode, per stack mode in ``compare``
+    (a single-mode leg skips the grouped-vs-switch ratios — e.g. reduced
+    zamba2, whose layer stacks carry one repeat each, has no dispatch to
+    compare)."""
+    from repro.models import transformer as T
+    from repro.models.managed import matmul_backend
+    from repro.runtime import PlannedBackend, lower
+
+    t0 = time.monotonic()
+    plan = lower(artifact, params=params)
+    plan_lower_ms = _ms(t0)
+
+    rec = {"leg": leg, "model": plan.model, "platform": plan.platform,
+           "layers": len(plan.layers),
+           "kernel_histogram": plan.kernel_histogram(),
+           "fallbacks": plan.fallback_reasons(),
+           "plan_lower_ms": plan_lower_ms, "modes": {}}
+
+    key = jax.random.PRNGKey(0)
+    prompts = jax.random.randint(key, (requests, prompt_len), 0, cfg.vocab)
+    steps, rounds = gen_len - 1, 3
+    budget = 1 + 2 + rounds * steps               # cold + warmup + timed
+    modes = {}
+
+    class _State:                                  # per-mode decode state
+        pass
+
+    def _make_state(mode):
+        st = _State()
+        t0 = time.monotonic()
+        st.backend = PlannedBackend(plan, params, stack_mode=mode)
+        st.bind_ms = _ms(t0)
+        st.caches = T.init_cache(cfg, requests, prompt_len + budget)
+        st.prefill = jax.jit(lambda p, t, c: T.prefill(p, cfg, t, c,
+                                                       cross_source=None))
+        st.decode = jax.jit(lambda p, t, c, i: T.decode_step(p, cfg, t, c,
+                                                             i))
+        st.pos = prompt_len
+        st.best_s = float("inf")
+        return st
+
+    def _step(st):
+        logits, st.caches = st.decode(params, st.tok, st.caches, st.pos)
+        st.tok = jnp.argmax(logits, axis=-1)
+        st.pos += 1
+
+    def _cold(st):
+        with matmul_backend(st.backend):
+            t0 = time.monotonic()
+            logits, st.caches = st.prefill(params, prompts, st.caches)
+            st.tok = jax.block_until_ready(jnp.argmax(logits, axis=-1))
+            st.prefill_cold_ms = _ms(t0)
+            t0 = time.monotonic()
+            _step(st)
+            jax.block_until_ready(st.tok)
+            st.decode_cold_ms = _ms(t0)            # traces + compiles
+            for _ in range(2):                     # settle allocator
+                _step(st)
+            jax.block_until_ready(st.tok)
+
+    # throwaway pass: whatever compiles first in the process also pays
+    # first-touch jit/XLA/Pallas-interpret initialization — absorb it here
+    # (every leg, single-mode included) so cold/bind numbers stay
+    # comparable across legs, leg order, and --legs subsets
+    _cold(_make_state(compare[-1]))
+
+    for mode in compare:
+        modes[mode] = _make_state(mode)
+    for mode, st in modes.items():                 # cold: trace + compile
+        _cold(st)
+    for _ in range(rounds):                        # timed rounds INTERLEAVE
+        for mode, st in modes.items():             # modes so machine drift
+            with matmul_backend(st.backend):       # cancels; keep the best
+                t0 = time.monotonic()
+                for _ in range(steps):
+                    _step(st)
+                jax.block_until_ready(st.tok)
+                st.best_s = min(st.best_s, time.monotonic() - t0)
+
+    for mode, st in modes.items():
+        total_s = st.best_s + st.decode_cold_ms / 1e3
+        rec["modes"][mode] = {
+            "bind_ms": st.bind_ms,
+            "prefill_cold_ms": st.prefill_cold_ms,
+            "decode_cold_ms": st.decode_cold_ms,
+            "decode_warm_tok_s": round(requests * steps
+                                       / max(st.best_s, 1e-9), 2),
+            "decode_total_tok_s": round(requests * (steps + 1)
+                                        / max(total_s, 1e-9), 2),
+        }
+    g = rec["modes"]["grouped"]
+    if "switch" in rec["modes"]:
+        s = rec["modes"]["switch"]
+        rec["grouped_vs_switch_total"] = round(
+            g["decode_total_tok_s"] / max(s["decode_total_tok_s"], 1e-9), 3)
+        rec["grouped_vs_switch_warm"] = round(
+            g["decode_warm_tok_s"] / max(s["decode_warm_tok_s"], 1e-9), 3)
+        print(f"[bench] {leg}: lower {plan_lower_ms}ms, "
+              f"hist={rec['kernel_histogram']}, grouped "
+              f"{g['decode_total_tok_s']} tok/s vs switch "
+              f"{s['decode_total_tok_s']} tok/s "
+              f"(x{rec['grouped_vs_switch_total']} total, "
+              f"x{rec['grouped_vs_switch_warm']} warm)")
+    else:
+        print(f"[bench] {leg}: lower {plan_lower_ms}ms, "
+              f"hist={rec['kernel_histogram']}, "
+              f"{g['decode_total_tok_s']} tok/s total "
+              f"({g['decode_warm_tok_s']} warm)")
+    return rec
+
+
+def _bench_cnn(leg: str, cnn_name: str, platform: str, *,
+               requests: int) -> dict:
+    from repro.launch.train import emit_static_mapping
+    from repro.models import cnn as C
+    from repro.models.managed import matmul_backend
+    from repro.runtime import PlannedBackend, lower
+
+    cfg = C.get_config(cnn_name)
+    init_fn, apply_fn, plan_fn = C.get_model(cfg)
+    params = init_fn(jax.random.PRNGKey(0), cfg, None)
+    hints = {n: (g, s) for (n, g, s) in plan_fn(cfg)}
+    with tempfile.TemporaryDirectory() as td:
+        art = emit_static_mapping(params, cfg, platform,
+                                  Path(td) / "mapping.json",
+                                  plan_hints=hints)
+    t0 = time.monotonic()
+    plan = lower(art, params=params)
+    plan_lower_ms = _ms(t0)
+    t0 = time.monotonic()
+    backend = PlannedBackend(plan, params)
+    bind_ms = _ms(t0)
+
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (requests, *cfg.img_hw, cfg.in_ch), jnp.float32)
+    fwd = jax.jit(lambda p, xb: apply_fn(p, xb, cfg, None, "fp", 1.0))
+    with matmul_backend(backend):
+        t0 = time.monotonic()
+        jax.block_until_ready(fwd(params, x))
+        cold_ms = _ms(t0)
+        t0 = time.monotonic()
+        jax.block_until_ready(fwd(params, x))
+        warm_s = time.monotonic() - t0
+    rec = {"leg": leg, "model": cfg.name, "platform": platform,
+           "layers": len(plan.layers),
+           "kernel_histogram": plan.kernel_histogram(),
+           "fallbacks": plan.fallback_reasons(),
+           "plan_lower_ms": plan_lower_ms, "bind_ms": bind_ms,
+           "forward_cold_ms": cold_ms,
+           "forward_warm_img_s": round(requests / max(warm_s, 1e-9), 2)}
+    print(f"[bench] {leg}: lower {plan_lower_ms}ms, "
+          f"hist={rec['kernel_histogram']}, "
+          f"{rec['forward_warm_img_s']} img/s warm")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller batch/seq/gen (the ci_smoke.sh leg)")
+    ap.add_argument("--out", default="BENCH_runtime.json")
+    ap.add_argument("--legs", default="all",
+                    help="comma list: zamba2,yi9b,cnn (default all)")
+    args = ap.parse_args(argv)
+
+    requests, prompt_len, gen_len = (2, 8, 4) if args.quick else (4, 16, 12)
+    legs = (["zamba2", "yi9b", "cnn"] if args.legs == "all"
+            else args.legs.split(","))
+    results = []
+
+    if "zamba2" in legs:
+        cfg, params, art = _lm_setup("zamba2-1.2b", "diana")
+        results.append(_bench_lm("lm:zamba2", cfg, params, art,
+                                 requests=requests, prompt_len=prompt_len,
+                                 gen_len=gen_len, compare=("grouped",)))
+    if "yi9b" in legs:
+        cfg, params, art = _lm_setup("yi-9b", "diana", n_layers=6)
+        results.append(_bench_lm("lm:yi9b_homog", cfg, params, art,
+                                 requests=requests, prompt_len=prompt_len,
+                                 gen_len=gen_len))
+        results.append(_bench_lm("lm:yi9b_grouped", cfg, params,
+                                 _alternate_stacked_mappings(art),
+                                 requests=requests, prompt_len=prompt_len,
+                                 gen_len=gen_len))
+    if "cnn" in legs:
+        results.append(_bench_cnn("cnn:resnet20_tiny", "resnet20_tiny",
+                                  "diana", requests=requests))
+
+    doc = {
+        "bench": "runtime_planned_serving",
+        "quick": bool(args.quick),
+        "settings": {"requests": requests, "prompt_len": prompt_len,
+                     "gen_len": gen_len},
+        "env": {"jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "interpret_pallas": jax.default_backend() == "cpu"},
+        "legs": results,
+    }
+    out = Path(args.out)
+    out.write_text(json.dumps(doc, indent=1))
+    print(f"[bench] wrote {out}")
+    return doc
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main() else 1)

@@ -13,6 +13,9 @@
 #      --emit-mapping -> lower -> serve --arch cnn:resnet20_tiny --mapping
 #      (conv layers execute through the im2col'd planned kernels, full
 #      coverage required)
+#   6. the runtime bench in quick mode (benchmarks/bench_runtime.py):
+#      asserts BENCH_runtime.json is emitted with the zamba2 + cnn legs and
+#      zero capability fallbacks on the diana zamba2 leg
 #
 # Usage:  bash scripts/ci_smoke.sh            # installs requirements-dev.txt
 #         SKIP_INSTALL=1 bash scripts/ci_smoke.sh
@@ -34,8 +37,11 @@ python examples/quickstart.py --fast
 echo "== LM mapping runtime loop (train --emit-mapping -> lower -> serve --mapping) =="
 MAPDIR=$(mktemp -d)
 trap 'rm -rf "$MAPDIR"' EXIT
+# diana platform: mixed ternary+int8 layers MUST lower to the fused
+# split_ternary kernel (they fell back to fp before PR 4) — full coverage
+# below proves none of them run unplanned
 python -m repro.launch.train --arch zamba2-1.2b --reduce --steps 2 \
-    --batch 2 --seq 32 --platform tpu_v5e \
+    --batch 2 --seq 32 --platform diana \
     --emit-mapping "$MAPDIR/mapping.json"
 python -m repro.runtime "$MAPDIR/mapping.json" --arch zamba2-1.2b --reduce \
     --out "$MAPDIR/plan.json"
@@ -47,6 +53,10 @@ python -m repro.launch.serve --arch zamba2-1.2b --reduce --requests 2 \
     --require-full-coverage | tee "$MAPDIR/serve.log"
 grep -q "per-layer planned execution" "$MAPDIR/serve.log"
 grep -q ", 0 unbound" "$MAPDIR/serve.log"
+# the per-kernel histogram is printed and shows the fused ternary+int8
+# kernel serving the mixed layers
+grep -q "kernel histogram:" "$MAPDIR/serve.log"
+grep -q "split_ternary" "$MAPDIR/serve.log"
 
 echo "== CNN mapping runtime loop (train cnn: -> lower -> serve cnn:) =="
 python -m repro.launch.train --arch cnn:resnet20_tiny --steps 2 --batch 8 \
@@ -59,5 +69,20 @@ python -m repro.launch.serve --arch cnn:resnet20_tiny --requests 4 \
     --require-full-coverage | tee "$MAPDIR/cnn_serve.log"
 grep -q "per-layer planned execution" "$MAPDIR/cnn_serve.log"
 grep -q ", 0 unbound" "$MAPDIR/cnn_serve.log"
+
+echo "== runtime bench (quick) =="
+python benchmarks/bench_runtime.py --quick --legs zamba2,cnn \
+    --out "$MAPDIR/BENCH_runtime.json"
+test -s "$MAPDIR/BENCH_runtime.json"
+python - "$MAPDIR/BENCH_runtime.json" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+legs = {l["leg"]: l for l in doc["legs"]}
+assert "lm:zamba2" in legs and "cnn:resnet20_tiny" in legs, legs.keys()
+assert legs["lm:zamba2"]["modes"]["grouped"]["decode_total_tok_s"] > 0
+assert not legs["lm:zamba2"]["fallbacks"], legs["lm:zamba2"]["fallbacks"]
+print("[ci] BENCH_runtime.json ok:",
+      {k: v["kernel_histogram"] for k, v in legs.items()})
+EOF
 
 echo "ci_smoke OK"

@@ -57,9 +57,13 @@ Mapping artifact (repro.api.artifact) — schema v2
 Execution plans (re-exported from repro.runtime)
     `lower(artifact, params=..., handle=...)` compiles an artifact into an
     `ExecutionPlan`: per layer, the Fig. 3 channel permutation, the
-    block-aligned domain boundaries, the quant scales and the chosen kernel
-    (split-precision pallas / quant-matmul / ternary / fp fallback), with
-    shape + capability validation (`LoweringError` on mismatch)::
+    block-aligned domain boundaries, the quant scales, optional kernel
+    block-size tuning (``lower(..., tuning={name: {"bm","bn","bk"}})``,
+    threaded through to the Pallas calls) and the chosen kernel
+    (split-precision / split-ternary / quant-matmul / ternary / fp
+    fallback — see the kernel capability matrix at the end of this
+    docstring), with shape + capability validation (`LoweringError` on
+    mismatch)::
 
         plan = lower(res.artifact, params=res.params, handle=handle)
         backend = runtime.PlannedBackend(plan, res.params, handle=handle)
@@ -115,6 +119,19 @@ Migrating from the tuple façade
     wrappers over the pipeline and return the legacy `SearchResult`.
 """
 from repro.api.artifact import MappingArtifact
+from repro.runtime.registry import capability_matrix as _capability_matrix
+
+# Kernel capability matrix — generated from the runtime's capability-keyed
+# registry (repro.runtime.registry), so these docs can never drift from
+# what lower() actually selects.  A new (bits, bits) pairing is one
+# ``runtime.register_kernel`` call; ``Platform.kernel_capabilities()``
+# projects this table onto a platform's own domains.
+if __doc__:  # absent under python -OO
+    __doc__ += (
+        "\nKernel capability matrix (generated from repro.runtime.registry;"
+        "\nactive domains' weight-bit classes, in plan order -> kernel)::\n\n"
+        + "".join(f"    {row}\n" for row in _capability_matrix()))
+
 from repro.api.handle import (ModelHandle, cnn_handle, mlp_handle,
                               transformer_handle)
 from repro.api.pipeline import (ApplyMapping, Discretize, DNASSearch,

@@ -47,6 +47,25 @@ class Platform:
     def cost_model(self, **kw) -> CostModel:
         return self.cost_model_factory(**kw)
 
+    def kernel_capabilities(self) -> Dict[Tuple[str, ...], Tuple[str, str]]:
+        """Project the runtime's capability-keyed kernel registry onto this
+        platform: for every domain subset a mapping could activate in one
+        layer (each single domain and each ordered pair), the ``(kernel,
+        note)`` the runtime would lower it to — fp fallbacks carry the
+        reason.  ``dryrun --mapping`` and docs use this to show at a glance
+        which pairings fuse (e.g. diana: digital+aimc -> split_ternary)."""
+        from repro.runtime.lower import select_kernel
+        n = len(self.domains)
+        bits = [d.weight_bits for d in self.domains]
+        out: Dict[Tuple[str, ...], Tuple[str, str]] = {}
+        singles = [(i,) for i in range(n)]
+        pairs = [(i, j) for i in range(n) for j in range(n) if i < j]
+        for idx in singles + pairs:
+            counts = [1 if i in idx else 0 for i in range(n)]
+            out[tuple(self.domains[i].name for i in idx)] = \
+                select_kernel(counts, bits)
+        return out
+
     # ---- registry --------------------------------------------------------
 
     @staticmethod

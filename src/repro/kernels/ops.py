@@ -15,6 +15,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.quant_matmul import quant_matmul
 from repro.kernels.split_precision import split_precision_matmul
+from repro.kernels.split_ternary import split_ternary_matmul
 from repro.kernels.ternary_matmul import ternary_matmul
 
 
@@ -87,6 +88,36 @@ def split_precision_op(x, x_q, sx, w_bf16, w_q, sw, boundary,
     swp = _pad_to(sw, bn_, 0)
     out = split_precision_matmul(xp, xqp, sx, wb, wq, swp, b_al,
                                  bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    return out[:m, :n]
+
+
+@partial(jax.jit, static_argnames=("boundary", "bm", "bn", "bk", "interpret"))
+def split_ternary_op(x_q, w_q, w_packed, sx, sw, boundary,
+                     bm=128, bn=128, bk=512, interpret=None):
+    """Fused ternary+int8 layer (DIANA pairing); ``boundary`` — the first
+    ternary-domain column — is rounded UP to the N-block size, so straddling
+    blocks execute on the int8 path (safe: ``w_q`` carries every column's
+    codes, ternary ones included, each with its own ``sw`` step).
+
+    ``w_packed`` is the 2-bit-packed ternary stream, ``ceil(K/4)`` rows
+    (rows past K pad with code 0); ``w_q`` has K rows.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    m, n = x_q.shape[0], w_q.shape[1]
+    k = x_q.shape[1]
+    k4 = 4 * w_packed.shape[0]
+    assert k <= k4 <= k + 3, (x_q.shape, w_packed.shape)
+    bm_, bn_, bk_ = (min(bm, max(8, m)), min(bn, max(128, n)), bk)
+    assert bk_ % 4 == 0
+    b_al = align_boundary(boundary, bn_)
+    xq = _pad_to(_pad_to(x_q, bm_, 0), bk_, 1) if k4 == k else \
+        _pad_to(_pad_to(jnp.pad(x_q, ((0, 0), (0, k4 - k))), bm_, 0), bk_, 1)
+    wq = _pad_to(jnp.pad(w_q, ((0, k4 - k), (0, 0))), bk_, 0)
+    wq = _pad_to(wq, bn_, 1)
+    wp = _pad_to(_pad_to(w_packed, bk_ // 4, 0), bn_, 1)
+    swp = _pad_to(sw, bn_, 0)
+    out = split_ternary_matmul(xq, wq, wp, sx, swp, b_al,
+                               bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
     return out[:m, :n]
 
 

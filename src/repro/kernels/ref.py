@@ -31,6 +31,21 @@ def split_precision_matmul_ref(x, x_q, sx, w_bf16, w_q, sw, boundary):
     return jnp.where(cols < boundary, lo, hi)
 
 
+def split_ternary_matmul_ref(x_q, w_q, w_t, sx, sw, boundary):
+    """Fused ternary+int8 layer (DIANA pairing): output cols [0, boundary)
+    from the int8 codes ``w_q``, [boundary, N) from the ternary codes
+    ``w_t`` (both contract the shared int8 activations; ``sw`` carries each
+    domain's per-column dequant step).
+
+    x_q (M,K) int8; w_q / w_t (K,N) int8 codes; sw (N,) f32. Returns f32
+    (M,N)."""
+    n = w_q.shape[1]
+    lo = quant_matmul_ref(x_q, w_q, sx, sw)
+    hi = quant_matmul_ref(x_q, w_t, sx, sw)
+    cols = jnp.arange(n)[None, :]
+    return jnp.where(cols < boundary, lo, hi)
+
+
 def flash_attention_ref(q, k, v, causal=True):
     """q (B,H,Sq,D); k,v (B,KVH,Sk,D) with H = KVH*G. f32 softmax."""
     B, H, Sq, D = q.shape

@@ -113,12 +113,24 @@ def mapping_plan_report(cfg, mapping_path: str) -> dict:
               f"{cfg.name}: {e}")
         return {"error": str(e)}
     rec = {"kernels": plan.kernel_histogram(),
+           "fallbacks": plan.fallback_reasons(),
            "layers": [{"name": lp.name, "kernel": lp.kernel,
                        "counts": lp.counts,
                        "aligned_boundaries": lp.aligned_boundaries,
                        **({"note": lp.note} if lp.note else {})}
                       for lp in plan.layers]}
     print(f"[dryrun] mapping {mapping_path}: {plan.summary()}")
+    for line in plan.histogram_lines():
+        print(f"[dryrun] {line}")
+    try:  # registry introspection: what CAN this platform's domains fuse?
+        from repro.api import Platform
+        caps = Platform.get(plan.platform).kernel_capabilities()
+        for names, (kernel, note) in caps.items():
+            extra = f"  ({note})" if note else ""
+            print(f"[dryrun]   capability {'+'.join(names)}: "
+                  f"{kernel}{extra}")
+    except KeyError:
+        pass  # unregistered platform name in the artifact
     for l in rec["layers"]:
         note = f"  ({l['note']})" if "note" in l else ""
         print(f"[dryrun]   {l['name']}: {l['kernel']} "

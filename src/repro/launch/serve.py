@@ -88,9 +88,15 @@ def plan_mapping_execution(params, artifact, interpret=None):
 
 
 def print_plan_coverage(tag, plan, backend):
-    """Per-layer kernel/coverage report + the greppable summary line."""
+    """Per-layer kernel/coverage report + the greppable summary line.
+
+    Leads with the per-kernel layer histogram and every fp-fallback reason
+    (layer names included) so capability fallbacks are visible at a glance
+    — not only via ``--require-full-coverage``."""
     hist = " ".join(f"{k}:{v}" for k, v in
                     sorted(plan.kernel_histogram().items()))
+    for line in plan.histogram_lines():
+        print(f"[{tag}] {line}")
     print(f"[{tag}] per-layer planned execution ({hist}; "
           f"{backend.coverage()})")
     for lp in plan.layers:

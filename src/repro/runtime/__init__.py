@@ -31,8 +31,12 @@ This package never imports `repro.api` (artifacts are duck-typed via
 public entry points without an import cycle.
 """
 from repro.runtime.plan import (KERNEL_FP, KERNEL_QUANT, KERNEL_SPLIT,
-                                KERNEL_TERNARY, KERNELS, ExecutionPlan,
-                                LayerPlan, LoweringError)
+                                KERNEL_SPLIT_TERNARY, KERNEL_TERNARY,
+                                KERNELS, ExecutionPlan, LayerPlan,
+                                LoweringError)
+from repro.runtime.registry import (KernelCapability, capability_matrix,
+                                    kernel_for, register_kernel,
+                                    unregister_kernel)
 from repro.runtime.lower import lower, resolve_layer_params
 from repro.runtime.execute import (ExecutionError, PlannedBackend,
                                    PreparedLayer, execute_conv_layer,
@@ -40,9 +44,11 @@ from repro.runtime.execute import (ExecutionError, PlannedBackend,
                                    reference_layer)
 
 __all__ = [
-    "ExecutionError", "ExecutionPlan", "LayerPlan", "LoweringError",
-    "PlannedBackend", "PreparedLayer", "KERNELS", "KERNEL_FP", "KERNEL_QUANT",
-    "KERNEL_SPLIT", "KERNEL_TERNARY", "execute_conv_layer", "execute_layer",
-    "im2col", "lower", "prepare_layer", "reference_layer",
-    "resolve_layer_params",
+    "ExecutionError", "ExecutionPlan", "KernelCapability", "LayerPlan",
+    "LoweringError", "PlannedBackend", "PreparedLayer", "KERNELS",
+    "KERNEL_FP", "KERNEL_QUANT", "KERNEL_SPLIT", "KERNEL_SPLIT_TERNARY",
+    "KERNEL_TERNARY", "capability_matrix", "execute_conv_layer",
+    "execute_layer", "im2col", "kernel_for", "lower", "prepare_layer",
+    "reference_layer", "register_kernel", "resolve_layer_params",
+    "unregister_kernel",
 ]

@@ -1,14 +1,20 @@
 """Per-layer executors for `ExecutionPlan`s.
 
-`prepare_layer` binds one `LayerPlan` to a concrete weight: it applies the
-plan's channel permutation, quantizes the weight stream PER DOMAIN with the
-plan's scales (each active quantized domain's columns carry that domain's
-own log-scale/step; max-abs fallback when the plan was lowered without
-scales), and packages everything the kernels need.  Both 2-D dense weights
-and 4-D HWIO conv weights bind — conv weights are flattened to
-``(kh*kw*c_in, c_out)`` and executed through `execute_conv_layer`, which
-im2cols the NHWC input so CNN artifacts run through the same split-precision
-/ quant Pallas kernels as dense layers.
+`prepare_layer` binds one `LayerPlan` to a concrete weight and hoists
+EVERYTHING per-call work can be hoisted out of: the plan's channel
+permutation and its inverse (as a device array), per-domain weight
+quantization with the plan's scales (each active quantized domain's columns
+carry that domain's own log-scale/step; max-abs fallback when the plan was
+lowered without scales), the bf16 weight cast of the split kernel, the
+2-bit-packed ternary stream of the split_ternary kernel, the static
+activation-quant scale/step, the block-aligned split boundary, and the
+resolved kernel block sizes (``LayerPlan.tuning`` overrides threaded down
+to the Pallas calls).  `execute_layer` itself only quantizes the
+activations and calls the kernel — nothing about the weights is rebuilt
+per call.  Both 2-D dense weights and 4-D HWIO conv weights bind — conv
+weights are flattened to ``(kh*kw*c_in, c_out)`` and executed through
+`execute_conv_layer`, which im2cols the NHWC input so CNN artifacts run
+through the same fused Pallas kernels as dense layers.
 
 `execute_layer` runs an input through the matching Pallas kernel —
 interpret mode on CPU — or through the pure-jnp reference oracle
@@ -23,12 +29,15 @@ NAME-KEYED matmul-backend protocol of `repro.models`
 layer's pytree path — a static string — so planned execution traces cleanly
 under ``jax.jit`` (weights may be tracers; the prepared arrays are baked
 into the trace as constants).  Scan-stacked plans (``base@r`` layer names)
-are stacked per repeat and indexed inside the scan body with the index
-published by ``repro.models._backend.scan_slot``; repeats with heterogeneous
-kernels/boundaries dispatch through ``jax.lax.switch`` instead.  Install it
-with ``repro.models.managed.matmul_backend(backend)`` and every managed/LM
-dense or conv whose layer the plan covers executes through its planned
-kernel, bias included — no model code forks.
+are GROUPED by their static stack key: repeats whose kernels/boundaries/
+blocks agree stack on a leading axis and execute as one gather indexed by
+the scan index published by ``repro.models._backend.scan_slot``; a
+heterogeneous stack dispatches ``jax.lax.switch`` over its GROUPS (G <= R
+branches) rather than over every repeat — ``stack_mode="switch"`` restores
+the one-branch-per-repeat dispatch as a benchmark baseline.  Install the
+backend with ``repro.models.managed.matmul_backend(backend)`` and every
+managed/LM dense or conv whose layer the plan covers executes through its
+planned kernel, bias included — no model code forks.
 """
 from __future__ import annotations
 
@@ -41,10 +50,14 @@ import numpy as np
 
 from repro.core import quant
 from repro.kernels import ops, ref
+from repro.kernels.ternary_packed import pack_ternary
 from repro.models import _backend
 from repro.runtime.lower import _layer_weight, _walk_path
 from repro.runtime.plan import (KERNEL_FP, KERNEL_QUANT, KERNEL_SPLIT,
-                                KERNEL_TERNARY, ExecutionPlan, LayerPlan)
+                                KERNEL_SPLIT_TERNARY, KERNEL_TERNARY,
+                                ExecutionPlan, LayerPlan)
+
+DEFAULT_BM, DEFAULT_BK = 128, 512
 
 
 class ExecutionError(RuntimeError):
@@ -53,9 +66,12 @@ class ExecutionError(RuntimeError):
 
 @dataclasses.dataclass
 class PreparedLayer:
-    """A `LayerPlan` bound to concrete arrays, ready to execute."""
+    """A `LayerPlan` bound to concrete arrays, ready to execute.
+
+    Everything static or weight-derived is materialized here ONCE — per-call
+    execution touches only the activations."""
     plan: LayerPlan
-    inv: np.ndarray                  # inverse channel permutation
+    inv: jax.Array                   # inverse channel permutation (device)
     w_perm: jax.Array | None         # permuted weights, original dtype (K, N)
                                      # (None for stacked quant/ternary slices
                                      # — those kernels never read it)
@@ -65,6 +81,13 @@ class PreparedLayer:
     act_log_scale: float | None      # None -> dynamic max-abs per call
     block_n: int = 128               # N-block the plan was aligned with
     conv_shape: Tuple[int, ...] | None = None  # HWIO shape of a conv weight
+    # ---- hoisted per-call state (derived; see prepare_layer) -------------
+    w_bf16: jax.Array | None = None  # split kernel: bf16 cast of w_perm
+    w_t_packed: jax.Array | None = None  # split_ternary: 2-bit-packed codes
+    act_scale: jax.Array | None = None   # exp(act_log_scale), f32 scalar
+    act_sx: jax.Array | None = None      # act dequant step, f32 scalar
+    boundary: int = 0                # raw split boundary (static)
+    blocks: Tuple[int, int, int] = (DEFAULT_BM, 128, DEFAULT_BK)  # bm,bn,bk
 
     @property
     def kernel(self) -> str:
@@ -116,6 +139,36 @@ def _per_column_quant(lp: LayerPlan, wf: jax.Array,
     return w_q, sw
 
 
+def _resolve_blocks(lp: LayerPlan, block_n: int) -> Tuple[int, int, int]:
+    """(bm, bn, bk) for the layer's kernel calls: plan-level ``block_n``
+    with `LayerPlan.tuning` overrides."""
+    tun = lp.tuning or {}
+    bm = int(tun.get("bm", DEFAULT_BM))
+    bn = int(tun.get("bn", block_n))
+    bk = int(tun.get("bk", DEFAULT_BK))
+    if min(bm, bn, bk) < 1:
+        raise ExecutionError(f"{lp.name}: invalid kernel tuning {tun}")
+    if lp.kernel == KERNEL_SPLIT_TERNARY and bk % 4 != 0:
+        raise ExecutionError(f"{lp.name}: split_ternary needs bk % 4 == 0 "
+                             f"(2-bit packing), got bk={bk}")
+    return bm, bn, bk
+
+
+def _pack_ternary_stream(lp: LayerPlan, w_q: jax.Array) -> jax.Array:
+    """The split_ternary kernel's compressed weight side: 2-bit-pack the
+    ternary-domain columns of the per-domain codes (int8 columns zeroed —
+    the kernel never reads them from the packed stream), K padded up to a
+    multiple of 4 with code 0."""
+    K, N = w_q.shape
+    boundary = lp.split_boundary()
+    cols = jnp.arange(N)[None, :]
+    w_t = jnp.where(cols >= boundary, w_q, 0).astype(jnp.int8)
+    k4 = -(-K // 4) * 4
+    if k4 != K:
+        w_t = jnp.pad(w_t, ((0, k4 - K), (0, 0)))
+    return pack_ternary(w_t)
+
+
 def prepare_layer(lp: LayerPlan, w, b=None,
                   domain_bits: List[int] | None = None,
                   block_n: int = 128) -> PreparedLayer:
@@ -135,26 +188,41 @@ def prepare_layer(lp: LayerPlan, w, b=None,
     w2 = jnp.asarray(w).reshape(-1, int(w.shape[-1]))
     if domain_bits is None:
         domain_bits = [8] * len(lp.counts)
-    w_perm = jnp.take(w2, lp.perm, axis=-1)
-    w_q = sw = None
-    if lp.kernel in (KERNEL_QUANT, KERNEL_TERNARY, KERNEL_SPLIT):
+    w_perm = jnp.take(w2, jnp.asarray(lp.perm), axis=-1)
+    w_q = sw = w_bf16 = w_t_packed = act_scale = act_sx = None
+    if lp.kernel in (KERNEL_QUANT, KERNEL_TERNARY, KERNEL_SPLIT,
+                     KERNEL_SPLIT_TERNARY):
         w_q, sw = _per_column_quant(lp, w_perm.astype(jnp.float32),
                                     domain_bits)
-    return PreparedLayer(plan=lp, inv=lp.inv_perm(), w_perm=w_perm,
+    if lp.kernel == KERNEL_SPLIT:
+        w_bf16 = w_perm.astype(jnp.bfloat16)
+    if lp.kernel == KERNEL_SPLIT_TERNARY:
+        w_t_packed = _pack_ternary_stream(lp, w_q)
+    if lp.act_log_scale is not None:
+        act_scale = jnp.asarray(np.exp(lp.act_log_scale), jnp.float32)
+        act_sx = (act_scale / quant.qlevels(8)).astype(jnp.float32)
+    return PreparedLayer(plan=lp, inv=jnp.asarray(lp.inv_perm()),
+                         w_perm=w_perm,
                          b=(jnp.asarray(b) if b is not None else None),
                          w_q=w_q, sw=sw, act_log_scale=lp.act_log_scale,
-                         block_n=block_n, conv_shape=conv_shape)
+                         block_n=block_n, conv_shape=conv_shape,
+                         w_bf16=w_bf16, w_t_packed=w_t_packed,
+                         act_scale=act_scale, act_sx=act_sx,
+                         boundary=lp.split_boundary(),
+                         blocks=_resolve_blocks(lp, block_n))
 
 
-def _act_quant(xf: jax.Array, act_log_scale):
-    """(x_q int8, sx step); dynamic max-abs when no scale was lowered (the
+def _act_quant(xf: jax.Array, prep: PreparedLayer):
+    """(x_q int8, sx step): the prepared static scale when one was lowered
+    (exp/step hoisted into `prepare_layer`), else dynamic max-abs (the
     v1-artifact migration path)."""
-    if act_log_scale is not None:
-        xl = jnp.asarray(act_log_scale, jnp.float32)
+    if prep.act_scale is not None:
+        scale, sx = prep.act_scale, prep.act_sx
     else:
-        xl = jnp.log(jnp.maximum(jnp.max(jnp.abs(xf)), 1e-8))
-    x_q = quant.quantize_int(xf, xl, 8)
-    sx = (jnp.exp(xl) / quant.qlevels(8)).astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-8)
+        sx = (scale / quant.qlevels(8)).astype(jnp.float32)
+    x_q = jnp.round(jnp.clip(xf / scale, -1.0, 1.0) *
+                    quant.qlevels(8)).astype(jnp.int8)
     return x_q, sx
 
 
@@ -175,11 +243,15 @@ def execute_layer(prep: PreparedLayer, x, *, interpret=None,
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     xf = x2.astype(jnp.float32)
+    bm, bn, bk = prep.blocks
+    # the ops clamp the N-block to min(bn, max(128, n)) and round the
+    # boundary up to it; the oracles must split at the same column
+    bn_eff = min(bn, max(128, lp.c_out))
 
     if lp.kernel == KERNEL_FP:
         y = xf @ prep.w_perm.astype(jnp.float32)
     elif lp.kernel in (KERNEL_QUANT, KERNEL_TERNARY):
-        x_q, sx = _act_quant(xf, prep.act_log_scale)
+        x_q, sx = _act_quant(xf, prep)
         if reference:
             fn = (ref.ternary_matmul_ref if lp.kernel == KERNEL_TERNARY
                   else ref.quant_matmul_ref)
@@ -187,27 +259,33 @@ def execute_layer(prep: PreparedLayer, x, *, interpret=None,
         else:
             fn = (ops.ternary_matmul_op if lp.kernel == KERNEL_TERNARY
                   else ops.quant_matmul_op)
-            y = fn(x_q, prep.w_q, sx, prep.sw, interpret=interpret)
+            y = fn(x_q, prep.w_q, sx, prep.sw, bm=bm, bn=bn, bk=bk,
+                   interpret=interpret)
+    elif lp.kernel == KERNEL_SPLIT_TERNARY:
+        x_q, sx = _act_quant(xf, prep)
+        if reference:
+            y = ref.split_ternary_matmul_ref(
+                x_q, prep.w_q, prep.w_q, sx, prep.sw,
+                ops.align_boundary(prep.boundary, bn_eff))
+        else:
+            y = ops.split_ternary_op(x_q, prep.w_q, prep.w_t_packed, sx,
+                                     prep.sw, prep.boundary, bm=bm, bn=bn,
+                                     bk=bk, interpret=interpret)
     elif lp.kernel == KERNEL_SPLIT:
-        x_q, sx = _act_quant(xf, prep.act_log_scale)
+        x_q, sx = _act_quant(xf, prep)
         xb = x2.astype(jnp.bfloat16)
-        wb = prep.w_perm.astype(jnp.bfloat16)
-        boundary = lp.split_boundary()
-        # the op clamps the N-block to min(bn, max(128, n)) and rounds the
-        # boundary up to it; the oracle must split at the same column
-        bn_eff = min(prep.block_n, max(128, lp.c_out))
         if reference:
             y = ref.split_precision_matmul_ref(
-                xb, x_q, sx, wb, prep.w_q, prep.sw,
-                ops.align_boundary(boundary, bn_eff))
+                xb, x_q, sx, prep.w_bf16, prep.w_q, prep.sw,
+                ops.align_boundary(prep.boundary, bn_eff))
         else:
-            y = ops.split_precision_op(xb, x_q, sx, wb, prep.w_q, prep.sw,
-                                       boundary, bn=prep.block_n,
-                                       interpret=interpret)
+            y = ops.split_precision_op(xb, x_q, sx, prep.w_bf16, prep.w_q,
+                                       prep.sw, prep.boundary, bm=bm, bn=bn,
+                                       bk=bk, interpret=interpret)
     else:  # pragma: no cover - __post_init__ rejects unknown kernels
         raise ExecutionError(f"{lp.name}: unknown kernel {lp.kernel}")
 
-    y = jnp.take(y, jnp.asarray(prep.inv), axis=-1)
+    y = jnp.take(y, prep.inv, axis=-1)
     if prep.b is not None:
         y = y + prep.b.astype(y.dtype)
     return y.reshape(*lead, lp.c_out).astype(x.dtype)
@@ -272,7 +350,7 @@ def reference_layer(prep: PreparedLayer, x) -> jax.Array:
     (the parity target planned execution is pinned against)."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    w = jnp.take(prep.w_perm, jnp.asarray(prep.inv), axis=-1)
+    w = jnp.take(prep.w_perm, prep.inv, axis=-1)
     y = x2 @ w.astype(jnp.float32)
     if prep.b is not None:
         y = y + prep.b.astype(y.dtype)
@@ -289,8 +367,17 @@ def _stack_key(prep: PreparedLayer):
     not."""
     lp = prep.plan
     return (lp.kernel, lp.c_in, lp.c_out, tuple(lp.counts),
-            tuple(lp.aligned_boundaries), prep.block_n, prep.conv_shape,
-            prep.b is None, prep.act_log_scale is None)
+            tuple(lp.aligned_boundaries), prep.boundary, prep.blocks,
+            prep.block_n, prep.conv_shape, prep.b is None,
+            prep.act_log_scale is None)
+
+
+#: kernels whose execute paths never read the fp32 weight copy (split reads
+#: the hoisted bf16 cast instead) — stacking w_perm would hold R
+#: full-precision matrices that only the eager `reference_layer` oracle
+#: could use, and stacked entries never route there
+_DROPS_FP_STACK = (KERNEL_QUANT, KERNEL_TERNARY, KERNEL_SPLIT_TERNARY,
+                   KERNEL_SPLIT)
 
 
 class _StackedPrepared:
@@ -302,29 +389,31 @@ class _StackedPrepared:
         p0 = preps[0]
         self.plan, self.block_n = p0.plan, p0.block_n
         self.conv_shape = p0.conv_shape
+        self.boundary, self.blocks = p0.boundary, p0.blocks
+        self.n_repeats = len(preps)
         st = lambda get: (None if get(p0) is None
                           else jnp.stack([jnp.asarray(get(p)) for p in preps]))
-        self._inv = jnp.stack([jnp.asarray(p.inv) for p in preps])
-        # quant/ternary kernels never read the fp weights — stacking them
-        # would hold R full-precision copies next to the int8 codes
+        self._inv = st(lambda p: p.inv)
         self._w_perm = (st(lambda p: p.w_perm)
-                        if p0.plan.kernel in (KERNEL_SPLIT, KERNEL_FP)
-                        else None)
+                        if p0.plan.kernel not in _DROPS_FP_STACK else None)
+        self._w_bf16 = st(lambda p: p.w_bf16)
+        self._w_t_packed = st(lambda p: p.w_t_packed)
         self._b = st(lambda p: p.b)
         self._w_q = st(lambda p: p.w_q)
         self._sw = st(lambda p: p.sw)
-        self._act = (None if p0.act_log_scale is None else
-                     jnp.asarray([p.act_log_scale for p in preps],
-                                 jnp.float32))
+        self._act_scale = st(lambda p: p.act_scale)
+        self._act_sx = st(lambda p: p.act_sx)
 
     def at(self, r) -> PreparedLayer:
         take = lambda a: None if a is None else jnp.take(a, r, axis=0)
         return PreparedLayer(
             plan=self.plan, inv=take(self._inv), w_perm=take(self._w_perm),
             b=take(self._b), w_q=take(self._w_q), sw=take(self._sw),
-            act_log_scale=(None if self._act is None
-                           else jnp.take(self._act, r)),
-            block_n=self.block_n, conv_shape=self.conv_shape)
+            act_log_scale=self.plan.act_log_scale,
+            block_n=self.block_n, conv_shape=self.conv_shape,
+            w_bf16=take(self._w_bf16), w_t_packed=take(self._w_t_packed),
+            act_scale=take(self._act_scale), act_sx=take(self._act_sx),
+            boundary=self.boundary, blocks=self.blocks)
 
     def execute(self, x, r, conv=None, *, interpret=None, reference=False):
         prep = self.at(r)
@@ -336,18 +425,92 @@ class _StackedPrepared:
                              reference=reference)
 
 
-class _SwitchPrepared:
-    """Heterogeneous per-repeat `PreparedLayer`s (different kernels or
-    boundaries across repeats): a traced scan index dispatches through
-    ``jax.lax.switch`` — every repeat's kernel is traced once, none fall
-    back to fp."""
+class _SingleRepeat:
+    """A one-repeat stack (R=1, e.g. every reduced-config layer stack): the
+    scan index is necessarily 0, so the prepared arrays execute DIRECTLY —
+    no leading stack axis, no per-iteration dynamic gather."""
+
+    def __init__(self, prep: PreparedLayer):
+        # same fp32-copy drop as the other stack containers: stacked
+        # entries never route to reference_layer, so w_perm is dead weight
+        if prep.plan.kernel in _DROPS_FP_STACK:
+            prep = dataclasses.replace(prep, w_perm=None)
+        self.prep = prep
+        self.conv_shape = prep.conv_shape
+
+    def execute(self, x, r, conv=None, *, interpret=None, reference=False):
+        if conv is not None:
+            return execute_conv_layer(self.prep, x, conv["stride"],
+                                      conv["padding"], interpret=interpret,
+                                      reference=reference)
+        return execute_layer(self.prep, x, interpret=interpret,
+                             reference=reference)
+
+
+def _stack_group(preps: List[PreparedLayer]):
+    """One homogeneous group: direct execution for a single repeat, a
+    stacked gather otherwise."""
+    return (_SingleRepeat(preps[0]) if len(preps) == 1
+            else _StackedPrepared(preps))
+
+
+class _GroupedPrepared:
+    """Per-repeat `PreparedLayer`s grouped by static stack key: every group
+    is a `_StackedPrepared` over the repeats that share its trace structure,
+    and a (possibly traced) scan index dispatches ``jax.lax.switch`` over
+    the G GROUPS — not over all R repeats — selecting the repeat inside the
+    group with a stacked gather.  Heterogeneous stacks with recurring layer
+    patterns (the common case: a few distinct mappings tiled across the
+    depth) trace G kernels instead of R."""
 
     def __init__(self, preps: List[PreparedLayer]):
-        # mirror _StackedPrepared: quant/ternary repeats never read the fp
-        # weights, so don't keep their (K, N) float copies alive
+        buckets: Dict[Any, List[int]] = {}
+        for r, p in enumerate(preps):
+            buckets.setdefault(_stack_key(p), []).append(r)
+        order = list(buckets.values())
+        self.groups = [_stack_group([preps[r] for r in idxs])
+                       for idxs in order]
+        self.group_of = np.zeros(len(preps), np.int32)
+        self.pos_of = np.zeros(len(preps), np.int32)
+        for g, idxs in enumerate(order):
+            for pos, r in enumerate(idxs):
+                self.group_of[r] = g
+                self.pos_of[r] = pos
+        self.conv_shape = preps[0].conv_shape
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+    def execute(self, x, r, conv=None, *, interpret=None, reference=False):
+        run = lambda grp, pos: grp.execute(x, pos, conv=conv,
+                                           interpret=interpret,
+                                           reference=reference)
+        if not isinstance(r, jax.core.Tracer):
+            ri = int(r)
+            return run(self.groups[self.group_of[ri]], int(self.pos_of[ri]))
+        # homogeneous stacks never construct _GroupedPrepared (they route
+        # through _stack_group), so there are always >= 2 groups here
+        pos = jnp.take(jnp.asarray(self.pos_of), r)
+        branches = [lambda xx, grp=grp: grp.execute(
+            xx, pos, conv=conv, interpret=interpret, reference=reference)
+            for grp in self.groups]
+        g = jnp.take(jnp.asarray(self.group_of), r)
+        return jax.lax.switch(g, branches, x)
+
+
+class _SwitchPrepared:
+    """One ``jax.lax.switch`` branch PER REPEAT — the pre-grouping dispatch,
+    kept as the benchmark baseline (``PlannedBackend(stack_mode="switch")``):
+    every repeat's kernel is traced once even when repeats share their
+    structure."""
+
+    def __init__(self, preps: List[PreparedLayer]):
+        # stacked repeats never read the fp32 weights (split reads its bf16
+        # cast), so don't keep their (K, N) float copies alive
         self.preps = [dataclasses.replace(p, w_perm=None)
-                      if p.plan.kernel in (KERNEL_QUANT, KERNEL_TERNARY)
-                      else p for p in preps]
+                      if p.plan.kernel in _DROPS_FP_STACK else p
+                      for p in preps]
         self.conv_shape = preps[0].conv_shape
 
     def execute(self, x, r, conv=None, *, interpret=None, reference=False):
@@ -365,6 +528,10 @@ class _SwitchPrepared:
         return jax.lax.switch(jnp.asarray(r, jnp.int32), branches, x)
 
 
+_STACKED_TYPES = (_SingleRepeat, _StackedPrepared, _GroupedPrepared,
+                  _SwitchPrepared)
+
+
 # --------------------------------------------------------------------------
 # Pluggable matmul backend over a whole plan
 # --------------------------------------------------------------------------
@@ -379,21 +546,28 @@ class PlannedBackend:
 
     Layers resolve exactly like `lower()` resolves them (handle plan order,
     or artifact layer names as params paths).  ``base@r`` names (scan-
-    stacked weights) are grouped per base: homogeneous repeats stack into
-    one `_StackedPrepared` indexed by the scan index published via
-    ``repro.models._backend.scan_slot``; heterogeneous repeats dispatch
-    through ``lax.switch``.  ``bound``/``unbound`` record the bind-time
-    coverage split (per artifact layer name, ``@r`` included);
-    ``runtime_declines`` records trace-time declines (e.g. grouped convs).
-    Calls that name-match a plan but cannot execute it raise
-    `ExecutionError` — never a silent fp fallback.
+    stacked weights) are grouped per base: repeats sharing their static
+    stack key stack into one `_StackedPrepared` indexed by the scan index
+    published via ``repro.models._backend.scan_slot``; heterogeneous
+    repeats dispatch through ``lax.switch`` over their GROUPS
+    (`_GroupedPrepared`).  ``stack_mode="switch"`` forces one branch per
+    repeat instead (the benchmark baseline).  ``bound``/``unbound`` record
+    the bind-time coverage split (per artifact layer name, ``@r``
+    included); ``runtime_declines`` records trace-time declines (e.g.
+    grouped convs).  Calls that name-match a plan but cannot execute it
+    raise `ExecutionError` — never a silent fp fallback.
     """
 
     def __init__(self, plan: ExecutionPlan, params, handle=None, *,
-                 interpret=None, reference: bool = False):
+                 interpret=None, reference: bool = False,
+                 stack_mode: str = "grouped"):
+        if stack_mode not in ("grouped", "switch"):
+            raise ValueError(f"stack_mode must be 'grouped' or 'switch', "
+                             f"got {stack_mode!r}")
         self.plan = plan
         self.interpret = interpret
         self.reference = reference
+        self.stack_mode = stack_mode
         domain_bits = [int(d["weight_bits"]) for d in plan.domains]
         if handle is not None:
             dicts = handle.layers(params)
@@ -445,11 +619,15 @@ class PlannedBackend:
             if any(p is None for p in preps):
                 self.unbound.extend(lp.name for _, lp, _ in entries)
                 continue
-            if len({_stack_key(p) for p in preps}) == 1:
-                self._by_name[base] = _StackedPrepared(preps)
-            else:
-                self._by_name[base] = _SwitchPrepared(preps)
+            self._by_name[base] = self._stack_entry(preps)
             self.bound.extend(lp.name for _, lp, _ in entries)
+
+    def _stack_entry(self, preps: List[PreparedLayer]):
+        if self.stack_mode == "switch":
+            return _SwitchPrepared(preps)
+        if len({_stack_key(p) for p in preps}) == 1:
+            return _stack_group(preps)
+        return _GroupedPrepared(preps)
 
     def _try_prepare(self, lp: LayerPlan, node, domain_bits):
         w = _layer_weight(node)
@@ -485,7 +663,7 @@ class PlannedBackend:
                 f"grouped conv (groups={conv['groups']}) has no im2col "
                 f"lowering; executed on the default path")
             return None
-        if isinstance(entry, (_StackedPrepared, _SwitchPrepared)):
+        if isinstance(entry, _STACKED_TYPES):
             r = _backend.current_scan_index()
             if r is None:
                 raise ExecutionError(

@@ -9,14 +9,19 @@ an `ExecutionPlan`:
     `kernels.ops.align_boundary` rule rounds them up to the Pallas N-block.
   * validation: artifact channel counts vs actual weight shapes, boundary
     monotonicity/alignment, domain->kernel capability checks.
-  * kernel selection per layer (see `select_kernel`):
+  * kernel selection per layer (see `select_kernel`, driven by the
+    capability-keyed registry in `repro.runtime.registry`):
       - one active >=16-bit domain            -> "fp"
       - one active <=8-bit domain             -> "quant_matmul" (2-bit:
                                                  "ternary_matmul")
       - int8-ish + identity domains, quant
         domain ordered first                  -> "split_precision"
-      - anything else                         -> "fp" fallback, reason in
-                                                 ``note`` (LoweringError if
+      - int8-ish + ternary domains, int8
+        domain ordered first                  -> "split_ternary" (DIANA)
+      - anything else                         -> "fp" fallback, reason
+                                                 (with layer name + bits
+                                                 pair) in ``note``
+                                                 (LoweringError if
                                                  ``strict=True``)
   * scales: artifact v2 per-layer scales win; otherwise the ODiMO state of
     the resolved layer dict; otherwise max-abs statistics of the concrete
@@ -37,9 +42,9 @@ import numpy as np
 from repro.core import quant
 from repro.core.discretize import split_points, stable_perm
 from repro.kernels.ops import align_boundary
-from repro.runtime.plan import (KERNEL_FP, KERNEL_QUANT, KERNEL_SPLIT,
-                                KERNEL_TERNARY, ExecutionPlan, LayerPlan,
-                                LoweringError, PLAN_SCHEMA_VERSION)
+from repro.runtime import registry
+from repro.runtime.plan import (ExecutionPlan, LayerPlan, LoweringError,
+                                PLAN_SCHEMA_VERSION)
 
 
 def _artifact_dict(artifact) -> dict:
@@ -146,30 +151,13 @@ def select_kernel(counts: Sequence[int],
                   domain_bits: Sequence[int]) -> Tuple[str, str]:
     """(kernel, note) for a layer from its per-domain channel counts and the
     domains' weight bit-widths.  ``note`` is non-empty iff the layer fell
-    back to fp for a capability reason."""
+    back to fp for a capability reason.
+
+    Delegates to the capability-keyed registry (`repro.runtime.registry`):
+    the active domains' bit-widths, in plan order, look up the kernel — a
+    new (bits, bits) pairing is one ``register_kernel`` call."""
     active = [i for i, c in enumerate(counts) if c > 0]
-    if not active:
-        return KERNEL_FP, "no channels assigned"
-    if len(active) == 1:
-        bits = domain_bits[active[0]]
-        if bits >= 16:
-            return KERNEL_FP, ""
-        if bits == 2:
-            return KERNEL_TERNARY, ""
-        if 2 < bits <= 8:
-            return KERNEL_QUANT, ""
-        return KERNEL_FP, f"no kernel for {bits}-bit weights"
-    if len(active) == 2:
-        lo, hi = active
-        lo_bits, hi_bits = domain_bits[lo], domain_bits[hi]
-        if 2 < lo_bits <= 8 and hi_bits >= 16:
-            return KERNEL_SPLIT, ""
-        if lo_bits >= 16 and 2 < hi_bits <= 8:
-            return KERNEL_FP, ("split kernel needs the quantized domain "
-                               "ordered before the identity domain")
-        return KERNEL_FP, (f"no fused kernel for {lo_bits}-bit + "
-                           f"{hi_bits}-bit domains")
-    return KERNEL_FP, f"{len(active)} active domains exceed fused kernels"
+    return registry.kernel_for([domain_bits[i] for i in active])
 
 
 def _layer_scales(art_layer: dict, node) -> Tuple[List[float] | None,
@@ -191,19 +179,24 @@ def _layer_scales(art_layer: dict, node) -> Tuple[List[float] | None,
 
 
 def lower(artifact, params=None, handle=None, *, block_n: int = 128,
-          strict: bool = False) -> ExecutionPlan:
+          strict: bool = False, tuning=None) -> ExecutionPlan:
     """Compile ``artifact`` into an `ExecutionPlan`.
 
     ``params``/``handle`` enable shape validation and scale recovery (see
     `resolve_layer_params`); without them the plan is lowered from the
     artifact alone.  ``strict=True`` turns capability fallbacks (layers that
     would silently run fp) into `LoweringError`s; shape mismatches always
-    raise.
+    raise.  ``tuning`` optionally maps a layer name (or ``"*"`` for every
+    layer) to kernel block sizes ``{"bm", "bn", "bk"}``, recorded on each
+    `LayerPlan` and threaded through to the Pallas kernels by the
+    executors; a tuned ``bn`` also becomes the layer's boundary-alignment
+    block.
     """
     art = _artifact_dict(artifact)
     domains = [dict(d) for d in art["domains"]]
     domain_bits = [int(d["weight_bits"]) for d in domains]
     n_domains = len(domains)
+    tuning = tuning or {}
     resolved = resolve_layer_params(art, params=params, handle=handle)
 
     layers: List[LayerPlan] = []
@@ -239,9 +232,11 @@ def lower(artifact, params=None, handle=None, *, block_n: int = 128,
 
         perm = stable_perm(assign)
         bounds = split_points(assign[perm], n_domains)
+        layer_tuning = tuning.get(name, tuning.get("*"))
         # the ops clamp the N-block to min(bn, max(128, n)); align with the
         # SAME effective block so the plan records what actually executes
-        bn_eff = min(block_n, max(128, c_out)) if c_out else block_n
+        bn = int((layer_tuning or {}).get("bn", block_n))
+        bn_eff = min(bn, max(128, c_out)) if c_out else bn
         aligned = [min(align_boundary(b, bn_eff),
                        align_boundary(c_out, bn_eff)) for b in bounds]
         if any(b2 < b1 for b1, b2 in zip(aligned, aligned[1:])):
@@ -249,8 +244,12 @@ def lower(artifact, params=None, handle=None, *, block_n: int = 128,
                                 f"{aligned} are not monotone")
 
         kernel, note = select_kernel(counts, domain_bits)
+        if note:
+            # fallback reasons reach users via plan JSON / coverage reports
+            # far from the artifact: carry the layer context in the string
+            note = f"{name}: {note}"
         if strict and note:
-            raise LoweringError(f"layer {name!r}: {note}")
+            raise LoweringError(f"layer {note}")
 
         w_ls, act_ls = _layer_scales(art_layer, node)
         if w_ls is None and _is_concrete(w):
@@ -262,7 +261,8 @@ def lower(artifact, params=None, handle=None, *, block_n: int = 128,
             counts=counts, boundaries=[int(b) for b in bounds],
             aligned_boundaries=[int(b) for b in aligned],
             w_log_scales=w_ls, act_log_scale=act_ls,
-            searchable=bool(art_layer.get("searchable", True)), note=note))
+            searchable=bool(art_layer.get("searchable", True)), note=note,
+            tuning=(dict(layer_tuning) if layer_tuning else None)))
 
     return ExecutionPlan(model=art.get("model", "unknown"), domains=domains,
                          layers=layers, platform=art.get("platform"),

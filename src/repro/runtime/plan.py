@@ -9,9 +9,15 @@ weight/activation quantization scales, and the kernel that executes the
 layer:
 
     "split_precision"   fused two-domain matmul (int8 cols | identity cols)
+    "split_ternary"     fused two-domain matmul (int8 cols | 2-bit-packed
+                        ternary cols — the DIANA digital+AIMC pairing)
     "quant_matmul"      single quantized domain, w8a8 int32-accumulate
     "ternary_matmul"    single 2-bit domain, codes in {-1, 0, +1}
     "fp"                identity fallback (reason recorded in ``note``)
+
+The kernel choice is driven by the capability registry in
+`repro.runtime.registry` — new (bits, bits) pairings are one
+``register_kernel`` call, not edits across lower/plan/execute.
 
 Plans serialize to JSON (schema v2, shared with the artifact's
 ``schema_version``) so a lowered mapping can ship alongside its artifact:
@@ -36,10 +42,12 @@ import numpy as np
 PLAN_SCHEMA_VERSION = 2
 
 KERNEL_SPLIT = "split_precision"
+KERNEL_SPLIT_TERNARY = "split_ternary"
 KERNEL_QUANT = "quant_matmul"
 KERNEL_TERNARY = "ternary_matmul"
 KERNEL_FP = "fp"
-KERNELS = (KERNEL_SPLIT, KERNEL_QUANT, KERNEL_TERNARY, KERNEL_FP)
+KERNELS = (KERNEL_SPLIT, KERNEL_SPLIT_TERNARY, KERNEL_QUANT, KERNEL_TERNARY,
+           KERNEL_FP)
 
 
 class LoweringError(ValueError):
@@ -61,6 +69,7 @@ class LayerPlan:
     act_log_scale: float | None       # activation log-scale (None = dynamic)
     searchable: bool = True
     note: str = ""                    # e.g. why the fp fallback was chosen
+    tuning: Dict[str, int] | None = None  # kernel block sizes: bm/bn/bk
 
     def __post_init__(self):
         self.perm = np.asarray(self.perm, dtype=np.int64)
@@ -120,6 +129,29 @@ class ExecutionPlan:
         for lp in self.layers:
             hist[lp.kernel] = hist.get(lp.kernel, 0) + 1
         return hist
+
+    def fallback_reasons(self) -> Dict[str, List[str]]:
+        """``{note: [layer names]}`` for every layer that recorded a note —
+        the capability fp fallbacks a coverage report should surface."""
+        out: Dict[str, List[str]] = {}
+        for lp in self.layers:
+            if lp.note:
+                # lower() prefixes notes with the layer name; strip it so
+                # layers sharing a reason group into one report line
+                reason = lp.note.removeprefix(f"{lp.name}: ")
+                out.setdefault(reason, []).append(lp.name)
+        return out
+
+    def histogram_lines(self) -> List[str]:
+        """Human-readable per-kernel layer histogram + decline reasons (the
+        ``serve --mapping`` / ``dryrun --mapping`` at-a-glance report)."""
+        hist = self.kernel_histogram()
+        lines = ["kernel histogram: " +
+                 " ".join(f"{k}:{v}" for k, v in sorted(hist.items()))]
+        for note, names in sorted(self.fallback_reasons().items()):
+            shown = ", ".join(names[:6]) + (" ..." if len(names) > 6 else "")
+            lines.append(f"  fallback x{len(names)} ({note}): {shown}")
+        return lines
 
     def summary(self) -> str:
         hist = " ".join(f"{k}:{v}"

@@ -157,6 +157,7 @@ def _legacy_run_odimo(model, cfg_model, spec, cost_model, scfg, data_fn):
     return assignments, float(np.mean(accs)), lat, en
 
 
+@pytest.mark.slow
 def test_pipeline_reproduces_legacy_run_odimo():
     """`SearchPipeline` must agree bit-for-bit (assignments, accuracy,
     latency, energy) with the pre-refactor engine loop on a fixed seed."""
@@ -185,6 +186,7 @@ def test_pipeline_reproduces_legacy_run_odimo():
     assert res_wrap.accuracy == acc and res_wrap.latency == lat
 
 
+@pytest.mark.slow
 def test_fixed_mapping_matches_legacy_wrapper():
     cfg = cnn.RESNET20_TINY
     data_fn = _data_fn(cfg)

@@ -10,6 +10,8 @@ import sys
 import textwrap
 from pathlib import Path
 
+import pytest
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -81,6 +83,7 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_elastic_rescale_roundtrip(tmp_path):
     out = subprocess.run([sys.executable, "-c", SCRIPT],
                          cwd=Path(__file__).resolve().parents[1],

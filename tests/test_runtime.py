@@ -18,10 +18,10 @@ from repro.core import baselines as BL
 from repro.data.pipeline import ImageTaskConfig, image_batch
 from repro.models import _backend
 from repro.runtime import (ExecutionError, ExecutionPlan, KERNEL_FP,
-                           KERNEL_QUANT, KERNEL_SPLIT, KERNEL_TERNARY,
-                           LayerPlan, LoweringError, PlannedBackend,
-                           execute_conv_layer, execute_layer, prepare_layer,
-                           reference_layer)
+                           KERNEL_QUANT, KERNEL_SPLIT, KERNEL_SPLIT_TERNARY,
+                           KERNEL_TERNARY, LayerPlan, LoweringError,
+                           PlannedBackend, execute_conv_layer, execute_layer,
+                           prepare_layer, reference_layer)
 from repro.runtime.lower import select_kernel
 
 TINY = SearchConfig(lam=1e-6, objective="latency", pretrain_steps=3,
@@ -122,27 +122,83 @@ def test_select_kernel_capability_matrix():
     assert select_kernel([0, 10], bits2) == (KERNEL_FP, "")
     assert select_kernel([5, 5], bits2) == (KERNEL_SPLIT, "")
     assert select_kernel([4, 0], [2, 16]) == (KERNEL_TERNARY, "")
-    # ternary + int8 (DIANA mixed layer): no fused kernel -> fp, with reason
-    k, note = select_kernel([5, 5], [8, 2])
-    assert k == KERNEL_FP and "no fused kernel" in note
+    # ternary + int8 (DIANA mixed layer): the fused split_ternary kernel
+    assert select_kernel([5, 5], [8, 2]) == (KERNEL_SPLIT_TERNARY, "")
     # quant domain ordered after the identity domain: split layout impossible
     k, note = select_kernel([5, 5], [16, 8])
     assert k == KERNEL_FP and "ordered before" in note
+    # same for the ternary pairing: the int8 domain owns the low columns
+    k, note = select_kernel([5, 5], [2, 8])
+    assert k == KERNEL_FP and "ordered before" in note
+    # ternary + identity has no fused kernel registered
+    k, note = select_kernel([5, 5], [2, 16])
+    assert k == KERNEL_FP and "no fused kernel" in note
     # three active domains exceed the fused kernels
     k, note = select_kernel([3, 3, 3], [8, 2, 16])
     assert k == KERNEL_FP and "3 active domains" in note
 
 
+def test_kernel_registry_round_trip():
+    """New pairings are ONE registration; bad registrations are rejected."""
+    from repro.runtime import registry
+    assert registry.kernel_for([8, 2]) == (KERNEL_SPLIT_TERNARY, "")
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register_kernel(("q", "t"), KERNEL_SPLIT)
+    with pytest.raises(ValueError, match="unknown kernel"):
+        registry.register_kernel(("t", "f"), "nope")
+    with pytest.raises(ValueError, match="unknown bit class"):
+        registry.register_kernel(("x",), KERNEL_FP)
+    try:  # a fresh pairing routes immediately, without touching lower.py
+        registry.register_kernel(("t", "f"), KERNEL_SPLIT, "test-only")
+        assert registry.kernel_for([2, 16]) == (KERNEL_SPLIT, "")
+    finally:
+        registry.unregister_kernel(("t", "f"))
+    k, note = registry.kernel_for([2, 16])
+    assert k == KERNEL_FP and "no fused kernel" in note
+
+
+def test_platform_kernel_capabilities_introspection():
+    caps = Platform.get("diana").kernel_capabilities()
+    assert caps[("digital", "aimc")] == (KERNEL_SPLIT_TERNARY, "")
+    assert caps[("digital",)] == (KERNEL_QUANT, "")
+    assert caps[("aimc",)] == (KERNEL_TERNARY, "")
+    g9 = Platform.get("gap9_like").kernel_capabilities()
+    assert g9[("ne16", "analog")] == (KERNEL_SPLIT_TERNARY, "")
+    assert g9[("ne16", "cluster_fp16")] == (KERNEL_SPLIT, "")
+    k, note = g9[("analog", "cluster_fp16")]
+    assert k == KERNEL_FP and note
+
+
 def test_strict_lowering_rejects_capability_fallbacks():
+    # ternary + identity has no fused kernel -> fp fallback, note carries
+    # the layer name and the bits pair
+    doc = {
+        "schema_version": 2, "model": "mixed",
+        "domains": [{"name": "aimc", "weight_bits": 2, "act_bits": 7},
+                    {"name": "fp16", "weight_bits": 16, "act_bits": 16}],
+        "layers": [{"name": "l", "searchable": True,
+                    "assignment": [0, 1] * 8, "counts": [8, 8]}],
+    }
+    plan = lower(doc)                     # non-strict: fp fallback + note
+    assert plan["l"].kernel == KERNEL_FP
+    assert "l: " in plan["l"].note and "2-bit + 16-bit" in plan["l"].note
+    assert plan.fallback_reasons() == {
+        "no fused kernel for 2-bit + 16-bit domains": ["l"]}
+    assert any("fallback x1" in line for line in plan.histogram_lines())
+    with pytest.raises(LoweringError, match="no fused kernel"):
+        lower(doc, strict=True)
+
+
+def test_diana_mixed_layer_lowers_to_split_ternary():
+    """The paper's headline platform: a digital+AIMC mixed layer lowers to
+    the fused split_ternary kernel — no fp fallback, strict mode passes."""
     spec = Platform.get("diana").spec()   # digital int8 + ternary AIMC
     a = np.array([0, 1] * 8)
     art = MappingArtifact.from_search(
         "mixed", spec, [("l", None, True)], [a],
         BL.counts_from_assignments([a], 2))
-    plan = lower(art)                     # non-strict: fp fallback + note
-    assert plan["l"].kernel == KERNEL_FP and plan["l"].note
-    with pytest.raises(LoweringError, match="no fused kernel"):
-        lower(art, strict=True)
+    plan = lower(art, strict=True)        # strict: would raise on fallback
+    assert plan["l"].kernel == KERNEL_SPLIT_TERNARY and not plan["l"].note
 
 
 # --------------------------------------------------------------------------
@@ -381,9 +437,9 @@ def test_scan_stacked_plans_bind_and_execute_homogeneous():
                                    rtol=1e-5, atol=1e-5)
 
 
-def test_scan_stacked_heterogeneous_kernels_switch():
+def test_scan_stacked_heterogeneous_kernels_grouped():
     """Repeats with different kernels (split / quant / fp) still all bind;
-    a traced scan index dispatches through lax.switch."""
+    a traced scan index dispatches through lax.switch over the GROUPS."""
     rng = np.random.default_rng(12)
     N = 64
     assigns = [np.array([0] * 32 + [1] * 32),    # split_precision
@@ -395,8 +451,9 @@ def test_scan_stacked_heterogeneous_kernels_switch():
         [KERNEL_SPLIT, KERNEL_QUANT, KERNEL_FP]
     backend = PlannedBackend(plan, params, interpret=True)
     assert backend.unbound == []
-    from repro.runtime.execute import _SwitchPrepared
-    assert isinstance(backend._by_name["units/0/proj"], _SwitchPrepared)
+    from repro.runtime.execute import _GroupedPrepared
+    entry = backend._by_name["units/0/proj"]
+    assert isinstance(entry, _GroupedPrepared) and entry.n_groups == 3
 
     x = jnp.asarray(rng.normal(size=(2, K)), jnp.float32)
     ys = _scan_planned(backend, x, R)
@@ -408,6 +465,39 @@ def test_scan_stacked_heterogeneous_kernels_switch():
     # outside any scan_slot the stacked plan fails LOUDLY, never silently fp
     with pytest.raises(ExecutionError, match="outside a scan_slot"):
         backend("units/0/proj", None, x)
+
+
+def test_scan_stacked_repeating_pattern_groups_not_switches():
+    """The common heterogeneous case — a few distinct mappings tiled across
+    the depth — groups into G stacked gathers (G=2 here for R=6), and the
+    grouped execution matches both eager per-repeat execution and the
+    one-branch-per-repeat ``stack_mode="switch"`` baseline."""
+    rng = np.random.default_rng(15)
+    N = 64
+    a_split = np.array([0] * 32 + [1] * 32)
+    a_quant = np.zeros(N, np.int64)
+    assigns = [a_split, a_quant] * 3                  # R=6, 2 distinct keys
+    art, params, R, K = _stacked_artifact(rng, assigns)
+    plan = lower(art, params=params)
+    grouped = PlannedBackend(plan, params, interpret=True)
+    switch = PlannedBackend(plan, params, interpret=True,
+                            stack_mode="switch")
+    from repro.runtime.execute import _GroupedPrepared, _SwitchPrepared
+    g_entry = grouped._by_name["units/0/proj"]
+    assert isinstance(g_entry, _GroupedPrepared) and g_entry.n_groups == 2
+    assert isinstance(switch._by_name["units/0/proj"], _SwitchPrepared)
+
+    x = jnp.asarray(rng.normal(size=(2, K)), jnp.float32)
+    ys_grouped = _scan_planned(grouped, x, R)
+    ys_switch = _scan_planned(switch, x, R)
+    np.testing.assert_allclose(np.asarray(ys_grouped),
+                               np.asarray(ys_switch), rtol=1e-5, atol=1e-5)
+    for r in range(R):
+        with _backend.scan_slot(r):
+            y_eager = grouped("units/0/proj", None, x)
+        np.testing.assert_allclose(np.asarray(ys_grouped[r]),
+                                   np.asarray(y_eager),
+                                   rtol=1e-5, atol=1e-5)
 
 
 def test_scan_stacked_quant_stack_skips_fp_weights():
@@ -715,6 +805,6 @@ def test_gap9_search_and_lowering():
     plan = lower(res.artifact, params=res.params, handle=handle)
     for lp in plan.layers:
         assert lp.kernel in (KERNEL_QUANT, KERNEL_TERNARY, KERNEL_SPLIT,
-                             KERNEL_FP)
+                             KERNEL_SPLIT_TERNARY, KERNEL_FP)
         if len(lp.active_domains()) > 2:
             assert lp.kernel == KERNEL_FP and lp.note

@@ -1,0 +1,274 @@
+"""Fused ternary+int8 kernel (`kernels.split_ternary`) tests: ops-level
+parity against the pure-jnp oracle across boundary edge cases, prepared-
+layer execution parity (Pallas interpret vs `ref.py` vs the fp path), jit
+parity through the name-keyed backend, kernel block-size tuning threading,
+and the end-to-end DIANA artifact that lowered to fp before the kernel
+existed."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import MappingArtifact, Platform, lower
+from repro.core import baselines as BL
+from repro.kernels import ops, ref
+from repro.kernels.ternary_packed import pack_ternary
+from repro.runtime import (ExecutionPlan, KERNEL_SPLIT_TERNARY, LayerPlan,
+                           PlannedBackend, execute_layer, prepare_layer,
+                           reference_layer)
+
+
+def _codes(rng, M, K, N, boundary):
+    """(x_q, w_q, w_packed, wt_full, sx, sw): int8 codes below ``boundary``,
+    ternary codes at/above, packed stream for the ternary side."""
+    x_q = jnp.asarray(rng.integers(-127, 128, (M, K)), jnp.int8)
+    w_q = np.asarray(rng.integers(-127, 128, (K, N)), np.int8)
+    t = rng.integers(-1, 2, (K, N)).astype(np.int8)
+    cols = np.arange(N)[None, :]
+    w_q = np.where(cols >= boundary, t, w_q).astype(np.int8)
+    wt_full = np.where(cols >= boundary, t, 0).astype(np.int8)
+    k4 = -(-K // 4) * 4
+    wt_pad = np.zeros((k4, N), np.int8)
+    wt_pad[:K] = wt_full
+    sx = jnp.float32(0.01)
+    sw = jnp.asarray(rng.uniform(0.001, 0.01, (N,)), jnp.float32)
+    return (x_q, jnp.asarray(w_q), pack_ternary(jnp.asarray(wt_pad)),
+            jnp.asarray(wt_full), sx, sw)
+
+
+@pytest.mark.parametrize("boundary", [0, 100, 128, 256, 300])
+def test_split_ternary_op_matches_ref(boundary):
+    """Pallas (interpret) vs the pure-jnp oracle at boundary=0 (all
+    ternary), boundary=N (all int8), block-aligned and NON-aligned
+    boundaries, K not a multiple of 4."""
+    rng = np.random.default_rng(0)
+    M, K, N = 16, 45, 300
+    x_q, w_q, w_p, wt, sx, sw = _codes(rng, M, K, N, boundary)
+    y = ops.split_ternary_op(x_q, w_q, w_p, sx, sw, boundary, interpret=True)
+    b_al = ops.align_boundary(boundary, 128)
+    y_ref = ref.split_ternary_matmul_ref(x_q, w_q, wt, sx, sw, b_al)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _diana_prepared(rng, m=16, k=64, n=256, n_int8=100, tuning=None):
+    """A DIANA-shaped prepared layer: first ``n_int8`` permuted columns on
+    the digital int8 domain, the rest on the ternary AIMC array (NON-block-
+    aligned by default — `ops.align_boundary` rounds inside the op)."""
+    lp = LayerPlan(
+        name="l", kernel=KERNEL_SPLIT_TERNARY, c_in=k, c_out=n,
+        perm=np.arange(n), counts=[n_int8, n - n_int8],
+        boundaries=[n_int8, n],
+        aligned_boundaries=[ops.align_boundary(n_int8, 128), n],
+        # int8 scale covers max|w| (no clipping); the ternary scale is the
+        # AIMC array's own coarse step
+        w_log_scales=[0.2, -2.0], act_log_scale=None, tuning=tuning)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.25, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n,)) * 0.1, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    return prepare_layer(lp, w, b, domain_bits=[8, 2]), x
+
+
+def test_prepared_split_ternary_parity_and_packing():
+    prep, x = _diana_prepared(np.random.default_rng(1))
+    assert prep.w_t_packed is not None and prep.w_t_packed.dtype == jnp.uint8
+    assert prep.w_t_packed.shape == (16, 256)      # K/4 packed rows
+    # ternary columns carry ternary codes with the AIMC domain's step
+    wq = np.asarray(prep.w_q)
+    assert set(np.unique(wq[:, 100:])) <= {-1, 0, 1}
+    assert np.asarray(prep.sw)[100:].max() == pytest.approx(np.exp(-2.0))
+    y_kernel = execute_layer(prep, x, interpret=True)
+    y_oracle = execute_layer(prep, x, reference=True)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_oracle),
+                               rtol=1e-4, atol=1e-4)
+    # vs the fp path: the int8 (digital) half is within int8 quant
+    # tolerance; the ternary (AIMC) half carries the inherent 2-bit
+    # ternarization error — lossy but correlated, never garbage
+    y = np.asarray(y_kernel, np.float64)
+    y_fp = np.asarray(reference_layer(prep, x), np.float64)
+    rel_lo = (np.linalg.norm(y[:, :100] - y_fp[:, :100])
+              / np.linalg.norm(y_fp[:, :100]))
+    assert rel_lo < 0.05, rel_lo
+    rel_hi = (np.linalg.norm(y[:, 100:] - y_fp[:, 100:])
+              / np.linalg.norm(y_fp[:, 100:]))
+    assert rel_hi < 0.9, rel_hi
+    corr = np.corrcoef(y[:, 100:].ravel(), y_fp[:, 100:].ravel())[0, 1]
+    assert corr > 0.8, corr
+
+
+@pytest.mark.parametrize("n_int8", [1, 128, 255])
+def test_prepared_split_ternary_boundary_edges(n_int8):
+    """Boundaries that round to 128 / N and straddle blocks all stay at
+    parity with the oracle (straddling columns execute on the int8 path
+    with their own ternary codes + step)."""
+    prep, x = _diana_prepared(np.random.default_rng(2), n_int8=n_int8)
+    y_kernel = execute_layer(prep, x, interpret=True)
+    y_oracle = execute_layer(prep, x, reference=True)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tuning_threads_block_sizes_and_serializes():
+    """`LayerPlan.tuning` reaches the kernel call (bm/bn/bk) and round-trips
+    through plan JSON; split_ternary rejects a bk the 2-bit packing cannot
+    tile."""
+    tuning = {"bm": 8, "bn": 128, "bk": 64}
+    prep, x = _diana_prepared(np.random.default_rng(3), tuning=tuning)
+    assert prep.blocks == (8, 128, 64)
+    y = execute_layer(prep, x, interpret=True)
+    prep0, _ = _diana_prepared(np.random.default_rng(3), tuning=None)
+    assert prep0.blocks == (128, 128, 512)
+    y0 = execute_layer(prep0, x, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=1e-4, atol=1e-4)
+    plan = ExecutionPlan(model="t", domains=[{"weight_bits": 8},
+                                             {"weight_bits": 2}],
+                         layers=[prep.plan])
+    loaded = ExecutionPlan.from_json(plan.to_json())
+    assert loaded.layers[0].tuning == tuning
+    from repro.runtime import ExecutionError
+    bad = LayerPlan(**{**prep.plan.to_dict(), "tuning": {"bk": 30}})
+    with pytest.raises(ExecutionError, match="bk % 4"):
+        prepare_layer(bad, jnp.zeros((64, 256)), domain_bits=[8, 2])
+
+
+def test_lower_threads_tuning_to_layers():
+    doc = {
+        "schema_version": 2, "model": "tuned",
+        "domains": [{"name": "digital", "weight_bits": 8, "act_bits": 8},
+                    {"name": "aimc", "weight_bits": 2, "act_bits": 7}],
+        "layers": [{"name": "a", "searchable": True,
+                    "assignment": [0] * 8 + [1] * 8, "counts": [8, 8]},
+                   {"name": "b", "searchable": True,
+                    "assignment": [0] * 16, "counts": [16, 0]}],
+    }
+    plan = lower(doc, tuning={"a": {"bm": 8, "bk": 128}})
+    assert plan["a"].tuning == {"bm": 8, "bk": 128}
+    assert plan["b"].tuning is None
+    plan = lower(doc, tuning={"*": {"bk": 256}})
+    assert plan["a"].tuning == plan["b"].tuning == {"bk": 256}
+
+
+def _diana_mixed_artifact(rng, n_layers=2, K=32, N=192):
+    """A diana-platform artifact whose every layer splits channels across
+    digital int8 + ternary AIMC — the exact shape that fell back to fp
+    before the fused kernel existed."""
+    spec = Platform.get("diana").spec()
+    assigns = [np.array(([0] * 2 + [1]) * (N // 3)) for _ in range(n_layers)]
+    counts = BL.counts_from_assignments(assigns, 2)
+    plan_list = [(f"l{i}", None, True) for i in range(n_layers)]
+    scales = [{"w_log_scales": [0.3, -1.5], "act_log_scale": None}
+              for _ in range(n_layers)]
+    art = MappingArtifact.from_search("diana_mixed", spec, plan_list,
+                                      assigns, counts, platform="diana",
+                                      scales=scales)
+    params = {}
+    dims = [K] + [N] * n_layers
+    for i in range(n_layers):
+        params[f"l{i}"] = {
+            "w": jnp.asarray(rng.normal(size=(dims[i], N)) * 0.3,
+                             jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(N,)) * 0.1, jnp.float32)}
+    return art, params
+
+
+def test_diana_artifact_lowers_and_executes_split_ternary_under_jit():
+    """End to end for the paper's platform: a mixed-layer diana artifact
+    lowers every layer to split_ternary (strict mode passes — zero fp
+    capability fallbacks), binds, and the jitted planned execution matches
+    eager planned execution and stays within quant tolerance of fp."""
+    rng = np.random.default_rng(4)
+    art, params = _diana_mixed_artifact(rng)
+    plan = lower(art, params=params, strict=True)
+    assert plan.kernel_histogram() == {KERNEL_SPLIT_TERNARY: 2}
+    backend = PlannedBackend(plan, params, interpret=True)
+    assert backend.bound == ["l0", "l1"] and backend.fully_covered
+
+    x = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+    y_eager = backend("l0", params["l0"], x)
+    y_jit = jax.jit(lambda p, xx: backend("l0", p, xx))(params["l0"], x)
+    np.testing.assert_allclose(np.asarray(y_jit), np.asarray(y_eager),
+                               rtol=1e-5, atol=1e-5)
+    # digital (int8) columns are within int8 quant tolerance of fp; ternary
+    # columns carry the inherent 2-bit loss (and prove this is genuinely
+    # the planned path, not fp)
+    y_fp = x @ params["l0"]["w"] + params["l0"]["b"]
+    lo = np.asarray(art.assignments()[0]) == 0
+    rel_lo = float(jnp.linalg.norm(y_jit[:, lo] - y_fp[:, lo])
+                   / jnp.linalg.norm(y_fp[:, lo]))
+    assert rel_lo < 0.05, rel_lo
+    assert not np.allclose(np.asarray(y_jit), np.asarray(y_fp),
+                           rtol=1e-6, atol=1e-6)
+
+
+def test_single_repeat_stack_executes_direct_without_fp_weights():
+    """R=1 stacks (every reduced-config layer stack) bind to the direct
+    `_SingleRepeat` fast path — no stack axis, no per-iteration gather —
+    and drop the dead fp32 weight copy like the other stack containers."""
+    from repro.models import _backend
+    from repro.runtime.execute import _SingleRepeat
+    rng = np.random.default_rng(6)
+    K, N = 16, 192
+    spec = Platform.get("diana").spec()
+    a = np.array(([0] * 2 + [1]) * (N // 3))
+    art = MappingArtifact.from_search(
+        "single", spec, [("units/0/proj@0", None, True)], [a],
+        BL.counts_from_assignments([a], 2))
+    params = {"units": ({"proj": {
+        "w": jnp.asarray(rng.normal(size=(1, K, N)) * 0.25, jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(1, N)) * 0.1, jnp.float32)}},)}
+    backend = PlannedBackend(lower(art, params=params), params,
+                             interpret=True)
+    entry = backend._by_name["units/0/proj"]
+    assert isinstance(entry, _SingleRepeat)
+    assert entry.prep.w_perm is None and entry.prep.w_t_packed is not None
+    x = jnp.asarray(rng.normal(size=(2, K)), jnp.float32)
+    with _backend.scan_slot(0):
+        y = backend("units/0/proj", None, x)
+    w, b = params["units"][0]["proj"]["w"][0], params["units"][0]["proj"]["b"][0]
+    lo = np.asarray(a) == 0
+    y_fp = x @ w + b
+    rel = float(jnp.linalg.norm(y[:, lo] - y_fp[:, lo])
+                / jnp.linalg.norm(y_fp[:, lo]))
+    assert rel < 0.06, rel
+
+
+def test_stacked_split_ternary_repeats_group_without_fp_weights():
+    """Scan-stacked diana mixed layers stack codes + packed streams only
+    (no R fp weight copies) and execute at parity inside a jitted scan."""
+    from repro.models import _backend
+    from repro.runtime.execute import _StackedPrepared
+    rng = np.random.default_rng(5)
+    R, K, N = 3, 16, 192
+    spec = Platform.get("diana").spec()
+    a = np.array(([0] * 2 + [1]) * (N // 3))
+    counts = BL.counts_from_assignments([a] * R, 2)
+    art = MappingArtifact.from_search(
+        "stacked_diana", spec, [(f"units/0/proj@{r}", None, True)
+                                for r in range(R)],
+        [a] * R, counts, platform="diana")
+    params = {"units": ({"proj": {
+        "w": jnp.asarray(rng.normal(size=(R, K, N)) * 0.25, jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(R, N)) * 0.1, jnp.float32)}},)}
+    plan = lower(art, params=params, strict=True)
+    backend = PlannedBackend(plan, params, interpret=True)
+    assert backend.unbound == []
+    entry = backend._by_name["units/0/proj"]
+    assert isinstance(entry, _StackedPrepared)
+    assert entry._w_perm is None and entry._w_t_packed is not None
+
+    x = jnp.asarray(rng.normal(size=(2, K)), jnp.float32)
+
+    def body(carry, ridx):
+        with _backend.scan_slot(ridx):
+            y = backend("units/0/proj", None, x)
+        return carry, y
+
+    ys = jax.jit(lambda: jax.lax.scan(body, 0, jnp.arange(R))[1])()
+    for r in range(R):
+        with _backend.scan_slot(r):
+            y_eager = backend("units/0/proj", None, x)
+        np.testing.assert_allclose(np.asarray(ys[r]), np.asarray(y_eager),
+                                   rtol=1e-5, atol=1e-5)

@@ -9,6 +9,7 @@ import pytest
 from repro.launch import serve, train
 
 
+@pytest.mark.slow
 def test_train_loss_decreases_and_resumes(tmp_path):
     ck = str(tmp_path / "ckpt")
     losses = train.main(["--arch", "yi-9b", "--reduce", "--steps", "30",
@@ -22,6 +23,7 @@ def test_train_loss_decreases_and_resumes(tmp_path):
     assert len(losses2) == 10  # steps 30..40 only
 
 
+@pytest.mark.slow
 def test_train_with_gradient_compression():
     losses = train.main(["--arch", "h2o-danube-3-4b", "--reduce", "--steps",
                          "25", "--batch", "4", "--seq", "32",
@@ -37,6 +39,7 @@ def test_serve_driver_generates():
     assert stats["tok_per_s"] > 0
 
 
+@pytest.mark.slow
 def test_odimo_lambda_monotone_cost():
     """Core paper behavior: larger lambda -> cheaper discovered mapping."""
     from repro.api import SearchConfig, SearchPipeline, cnn_handle

@@ -15,6 +15,12 @@ This is the repo's perf baseline for the mapping-execution hot path.  Legs:
                          grouped dispatch switches over G=2 groups where the
                          PR 3 baseline switched over R=6 branches
   * ``cnn:resnet20_tiny`` conv artifact through the im2col planned kernels
+  * ``engine:yi9b_trace`` the `repro.serving` continuous-batching engine
+                         replaying one mixed-length trace under the
+                         "continuous" vs "static" (gang batching) admission
+                         policies: total token throughput ratio + per-policy
+                         p50/p95 TTFT (warmed jit caches; same greedy
+                         tokens under both policies by construction)
 
 The yi-9b legs run twice — ``stack_mode="grouped"`` (current) vs
 ``stack_mode="switch"`` (the PR 3 one-branch-per-repeat baseline) — and
@@ -240,17 +246,77 @@ def _bench_cnn(leg: str, cnn_name: str, platform: str, *,
     return rec
 
 
+def _bench_engine(leg: str, *, requests: int, max_batch: int,
+                  max_prompt: int, max_new: int) -> dict:
+    """Continuous vs static batching over ONE mixed-length trace
+    (`repro.serving` engine, yi-9b reduced, no mapping bound — the planned
+    hot path is covered by the zamba2 leg; here interpret-mode Pallas would
+    swamp the scheduling signal this leg measures).  Each policy serves the
+    same trace twice on one engine — the first pass warms every
+    (group-size, prompt-bucket) prefill trace, the second is timed — so the
+    throughput ratio compares steady-state batching policy, not compile
+    luck.  Headline: ``continuous_vs_static_total`` (total token throughput
+    ratio) plus per-policy p50/p95 TTFT.
+
+    The trace is DECODE-dominated by construction: prompts fit one prefill
+    bucket and generation lengths are high-variance (min_new << max_new).
+    That is the regime continuous batching exists for — static gangs burn
+    ``max_gen - gen_i`` idle slot-steps per member, continuous refills the
+    slot immediately.  (At this toy scale, per-call prefill dispatch is
+    comparable to a decode step, so a prefill-dominated trace would measure
+    Python/XLA call overhead — continuous does ~R single-request prefills
+    where static does R/B gang prefills — not scheduling.)"""
+    from repro.configs import base as cfgbase
+    from repro.models import transformer as T
+    from repro.serving import Engine, Scheduler, summarize, synthetic_trace
+
+    cfgbase.load_all()
+    cfg = cfgbase.reduce_for_smoke(cfgbase.get("yi-9b"))
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    trace = synthetic_trace(requests, vocab=cfg.vocab, min_prompt=4,
+                            max_prompt=max_prompt, min_new=2,
+                            max_new=max_new, seed=7)
+    max_len = max(r.prompt_len + r.max_new_tokens for r in trace)
+    rec = {"leg": leg, "model": cfg.name, "requests": requests,
+           "max_batch": max_batch, "max_len": max_len, "policies": {}}
+    token_sets = {}
+    for policy in ("static", "continuous"):
+        eng = Engine(cfg, params, max_batch=max_batch, max_len=max_len,
+                     scheduler=Scheduler(policy))
+        eng.run(trace)                        # warm every prefill bucket
+        results = eng.run(trace)              # timed pass
+        summ = summarize(results, eng.stats["wall_s"])
+        summ["decode_steps"] = eng.stats["decode_steps"]
+        rec["policies"][policy] = summ
+        token_sets[policy] = [r.tokens for r in results]
+        print(f"[bench] {leg}[{policy}]: {summ['total_tok_s']} tok/s, "
+              f"ttft p50 {summ['ttft_p50_s'] * 1e3:.0f}ms / "
+              f"p95 {summ['ttft_p95_s'] * 1e3:.0f}ms, "
+              f"{summ['decode_steps']} decode steps")
+    assert token_sets["static"] == token_sets["continuous"], \
+        "batching policy changed greedy tokens"
+    c, s = rec["policies"]["continuous"], rec["policies"]["static"]
+    rec["continuous_vs_static_total"] = round(
+        c["total_tok_s"] / max(s["total_tok_s"], 1e-9), 3)
+    rec["continuous_vs_static_ttft_p95"] = round(
+        s["ttft_p95_s"] / max(c["ttft_p95_s"], 1e-9), 3)
+    print(f"[bench] {leg}: continuous x{rec['continuous_vs_static_total']} "
+          f"total throughput vs static "
+          f"(p95 TTFT x{rec['continuous_vs_static_ttft_p95']} lower)")
+    return rec
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
                     help="smaller batch/seq/gen (the ci_smoke.sh leg)")
     ap.add_argument("--out", default="BENCH_runtime.json")
     ap.add_argument("--legs", default="all",
-                    help="comma list: zamba2,yi9b,cnn (default all)")
+                    help="comma list: zamba2,yi9b,cnn,engine (default all)")
     args = ap.parse_args(argv)
 
     requests, prompt_len, gen_len = (2, 8, 4) if args.quick else (4, 16, 12)
-    legs = (["zamba2", "yi9b", "cnn"] if args.legs == "all"
+    legs = (["zamba2", "yi9b", "cnn", "engine"] if args.legs == "all"
             else args.legs.split(","))
     results = []
 
@@ -271,6 +337,13 @@ def main(argv=None):
     if "cnn" in legs:
         results.append(_bench_cnn("cnn:resnet20_tiny", "resnet20_tiny",
                                   "diana", requests=requests))
+    if "engine" in legs:
+        results.append(_bench_engine(
+            "engine:yi9b_trace",
+            requests=(6 if args.quick else 16),
+            max_batch=(2 if args.quick else 4),
+            max_prompt=8,
+            max_new=(12 if args.quick else 24)))
 
     doc = {
         "bench": "runtime_planned_serving",

@@ -145,16 +145,17 @@ def fig5(preset: str, results: list):
 
 def crossplat(preset: str, results: list):
     """Cross-platform Pareto row: the same model and lambda searched on each
-    registered target — DIANA (2 domains), the 3-domain gap9_like SoC and
-    the TPU v5e roofline — reporting the per-domain channel fractions the
-    search settles on under each platform's cost structure."""
+    registered target — DIANA (2 domains), the 3-domain gap9_like SoC, the
+    TPU v5e roofline and the gpu_tc_like tensor-core pair — reporting the
+    per-domain channel fractions the search settles on under each
+    platform's cost structure."""
     m = PRESETS[preset]["models"][0]
     cfg = MODEL_CFGS[m]
     handle = cnn_handle(cfg)
     data_fn = _data_fn(cfg)
     lambdas = PRESETS[preset]["lambdas"]
     lam = lambdas[len(lambdas) // 2]
-    for platform in ("diana", "gap9_like", "tpu_v5e"):
+    for platform in ("diana", "gap9_like", "tpu_v5e", "gpu_tc_like"):
         t0 = time.time()
         scfg = _scfg(preset, lam, "latency")
         res = SearchPipeline(handle, platform, config=scfg,

@@ -1,8 +1,11 @@
 """End-to-end serving driver (the paper is an INFERENCE-mapping paper, so the
 end-to-end example is a serving loop): batched requests against a reduced
-LM with prefill + iterative decode over a KV cache.
+LM, served by the `repro.serving` continuous-batching engine.
 
-Run:  PYTHONPATH=src python examples/serve_llm.py [--arch yi-9b]
+Run:  PYTHONPATH=src python examples/serve_llm.py [--arch yi-9b] [--engine]
+
+``--engine`` switches from the fixed-shape batch to a mixed-length request
+trace with continuous slot admission and per-request TTFT reporting.
 """
 import argparse
 
@@ -12,9 +15,15 @@ from repro.launch import serve
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--engine", action="store_true",
+                    help="mixed-length trace through the continuous-"
+                         "batching engine (per-request TTFT/tok-s)")
     args = ap.parse_args()
-    serve.main(["--arch", args.arch, "--reduce", "--requests", "8",
-                "--prompt-len", "32", "--gen-len", "16"])
+    argv = ["--arch", args.arch, "--reduce", "--requests", "8",
+            "--prompt-len", "32", "--gen-len", "16"]
+    if args.engine:
+        argv += ["--engine", "--max-batch", "4"]
+    serve.main(argv)
 
 
 if __name__ == "__main__":

@@ -58,6 +58,17 @@ grep -q ", 0 unbound" "$MAPDIR/serve.log"
 grep -q "kernel histogram:" "$MAPDIR/serve.log"
 grep -q "split_ternary" "$MAPDIR/serve.log"
 
+echo "== serving engine (continuous batching, mixed-length trace, diana) =="
+# the SAME artifact served through the continuous-batching engine: slot
+# admission/retirement over mixed-length prompts, per-slot masked decode,
+# full planned-kernel coverage still REQUIRED
+python -m repro.launch.serve --arch zamba2-1.2b --reduce --engine \
+    --requests 4 --prompt-len 12 --gen-len 4 --max-batch 2 \
+    --mapping "$MAPDIR/mapping.json" --require-full-coverage \
+    | tee "$MAPDIR/engine.log"
+grep -q "engine\[continuous\]" "$MAPDIR/engine.log"
+grep -q "ttft p50" "$MAPDIR/engine.log"
+
 echo "== CNN mapping runtime loop (train cnn: -> lower -> serve cnn:) =="
 python -m repro.launch.train --arch cnn:resnet20_tiny --steps 2 --batch 8 \
     --platform tpu_v5e --emit-mapping "$MAPDIR/cnn_mapping.json"
@@ -71,7 +82,7 @@ grep -q "per-layer planned execution" "$MAPDIR/cnn_serve.log"
 grep -q ", 0 unbound" "$MAPDIR/cnn_serve.log"
 
 echo "== runtime bench (quick) =="
-python benchmarks/bench_runtime.py --quick --legs zamba2,cnn \
+python benchmarks/bench_runtime.py --quick --legs zamba2,cnn,engine \
     --out "$MAPDIR/BENCH_runtime.json"
 test -s "$MAPDIR/BENCH_runtime.json"
 python - "$MAPDIR/BENCH_runtime.json" <<'EOF'
@@ -81,8 +92,12 @@ legs = {l["leg"]: l for l in doc["legs"]}
 assert "lm:zamba2" in legs and "cnn:resnet20_tiny" in legs, legs.keys()
 assert legs["lm:zamba2"]["modes"]["grouped"]["decode_total_tok_s"] > 0
 assert not legs["lm:zamba2"]["fallbacks"], legs["lm:zamba2"]["fallbacks"]
+eng = legs["engine:yi9b_trace"]
+assert eng["policies"]["continuous"]["total_tok_s"] > 0
+assert eng["continuous_vs_static_total"] >= 0.9, eng  # machine-drift slack
 print("[ci] BENCH_runtime.json ok:",
-      {k: v["kernel_histogram"] for k, v in legs.items()})
+      {k: v.get("kernel_histogram") for k, v in legs.items()},
+      "engine x%s vs static" % eng["continuous_vs_static_total"])
 EOF
 
 echo "ci_smoke OK"

@@ -16,7 +16,9 @@ drivers run a precision-aware mapping search.  Three pillars:
 `Platform` (repro.api.platforms)
     Registry bundling `PrecisionDomain`s + a `CostModel` under a string
     name.  Built-ins: ``"diana"``, ``"diana_abstract"``,
-    ``"diana_ideal_shutdown"``, ``"tpu_v5e"``.  A new accelerator is one
+    ``"diana_ideal_shutdown"``, ``"tpu_v5e"``, ``"gap9_like"``,
+    ``"gpu_tc_like"`` (GPU tensor-core int8+fp16 pair — mixed layers fuse
+    to the split_precision kernel).  A new accelerator is one
     registration::
 
         Platform.register(Platform("my_soc", domains, MyCostModel))
@@ -89,7 +91,25 @@ Execution plans (re-exported from repro.runtime)
     ``cnn:<config>`` façades), reports bound/unbound coverage, and exits
     nonzero under ``--require-full-coverage`` when any planned layer did
     not execute as mapped; ``launch/dryrun.py --mapping`` reports the
-    per-layer kernel selection against an arch's weight shapes.
+    per-layer kernel selection against an arch's weight shapes.  Grouped/
+    depthwise convs lower too: an artifact layer carrying ``"groups": G``
+    binds its per-group weight zero-embedded into block-diagonal dense
+    form, so e.g. mbv1's own artifact passes ``--require-full-coverage``.
+
+Serving engine (repro.serving)
+    Request-level serving is a separate subsystem layered on the planned
+    backend: `repro.serving.Engine` continuously batches mixed-length
+    requests over a fixed slot pool (ragged prefill, per-slot-masked jitted
+    decode, admission into freed slots between steps) and reports
+    per-request TTFT / tokens-per-second.  ``launch/serve.py`` is a thin
+    client (``serve_batch`` wraps the engine; ``serve --engine --trace``
+    replays JSONL request traces); ``benchmarks/bench_runtime.py`` has a
+    continuous-vs-static batching leg.  For reproducible per-request
+    outputs under a planned backend, emit artifacts with STATIC activation
+    scales (``emit_static_mapping(..., act_log_scale=...)``) — dynamic
+    max-abs activation quantization depends on batch composition.  See the
+    `repro.serving` package docstring for the engine architecture and the
+    request lifecycle.
 
     Migration (v1 -> v2): v1 artifacts (no per-layer ``scales``) still load
     and lower — executors then derive weight scales from max-abs statistics

@@ -74,11 +74,16 @@ class MappingArtifact:
         domains = [dict(name=d.name, weight_bits=d.weight_bits,
                         act_bits=d.act_bits) for d in spec.domains]
         layers = []
-        for i, ((name, _, searchable), a, c) in enumerate(
+        for i, ((name, geom, searchable), a, c) in enumerate(
                 zip(plan, assignments, counts)):
             layer = dict(name=name, searchable=bool(searchable),
                          assignment=[int(v) for v in np.asarray(a)],
                          counts=[int(v) for v in np.asarray(c)])
+            # grouped/depthwise convs carry their group count so the
+            # runtime can lower them block-diagonally (LayerPlan.groups)
+            groups = int(getattr(geom, "groups", 1) or 1)
+            if groups > 1:
+                layer["groups"] = groups
             if scales is not None and scales[i] is not None:
                 layer["scales"] = scales[i]
             layers.append(layer)

@@ -13,6 +13,9 @@ Built-ins:
     "tpu_v5e"               TPU roofline model (int8 vs bf16 MXU domains)
     "gap9_like"             GAP9-class 3-domain SoC: digital int8 NE16,
                             analog 2-bit in-memory array, fp16 DSP cluster
+    "gpu_tc_like"           GPU tensor-core pair: int8 MMA @2x fp16
+                            throughput (mixed layers fuse to the
+                            split_precision kernel)
 """
 from __future__ import annotations
 
@@ -140,3 +143,24 @@ Platform.register(Platform(
         p_act=(10.0, 1.0, 40.0), throughput=(4.0, 16.0, 1.0), **kw),
     description="GAP9-like: digital int8 NE16 + analog 2-bit array + "
                 "fp16 cluster, OP-proportional latency model"))
+
+# GPU tensor-core pair: int8 tensor cores at ~2x fp16 MMA throughput but
+# higher accuracy pressure, fp16 as the high-precision escape hatch.  The
+# int8 domain is ordered FIRST so mixed int8+fp16 layers match the fused
+# split_precision kernel's ("q", "f") registry key — int8 columns lead,
+# identity columns trail.  Energy: int8 MACs move half the operand bytes,
+# so P_act favors the int8 domain.
+GPU_TC_DOMAINS = (
+    PrecisionDomain("tc_int8", weight_bits=8, act_bits=8),
+    PrecisionDomain("tc_fp16", weight_bits=16, act_bits=16),
+)
+
+Platform.register(Platform(
+    name="gpu_tc_like",
+    domains=GPU_TC_DOMAINS,
+    cost_model_factory=lambda **kw: AbstractCostModel(
+        ideal_shutdown=True, domains=GPU_TC_DOMAINS,
+        p_act=(20.0, 45.0), throughput=(2.0, 1.0), **kw),
+    description="GPU tensor-core pair: int8 MMA @2x fp16 throughput, "
+                "idle SMs clock-gated (ideal shutdown), OP-proportional "
+                "latency"))

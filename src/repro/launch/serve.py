@@ -1,5 +1,16 @@
-"""Batched serving driver: continuous-batching-style loop with prefill +
-decode over a shared KV cache pool.
+"""Serving driver: a thin client of the `repro.serving` continuous-batching
+engine.
+
+``serve_batch`` (same-length batch, fixed generation budget) and ``serve
+--mapping`` submit their requests to an `repro.serving.Engine` — B slots,
+one shared KV-cache pool, jitted ragged prefill + per-slot-masked decode.
+``--engine`` exposes the engine directly: it replays a mixed-length request
+trace (``--trace requests.jsonl``, or a seeded synthetic trace) with
+continuous slot admission/retirement and reports PER-REQUEST latency — TTFT
+p50/p95 and decode tok/s — alongside the per-kernel coverage histogram:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b --reduce \
+        --engine --requests 8 --mapping art.json --require-full-coverage
 
 With ``--mapping`` the driver lowers the mapping artifact onto the model's
 actual weights (`repro.runtime.lower`) and executes every projection matmul
@@ -121,45 +132,79 @@ def check_coverage(tag, backend, require_full: bool):
         sys.exit(2)
 
 
-def sample_greedy(logits):
-    return jnp.argmax(logits, axis=-1)
-
-
 def serve_batch(cfg, params, prompts, gen_len: int, frontend=None,
                 backend=None):
     """prompts: (B, P) int32. Returns generated (B, gen_len).
 
-    Prefill/decode run under ``jax.jit`` with or without a matmul
-    ``backend``: the name-keyed backend protocol resolves plans statically
-    during tracing, so covered projections execute through their planned
-    Pallas kernels inside the compiled step.
+    MIGRATED: this is now a thin wrapper over the `repro.serving.Engine` —
+    the B same-length prompts are submitted as B requests with a shared
+    generation budget, admitted into B slots at once, and decoded to
+    completion (token-identical to the old fixed-shape loop; the engine's
+    per-slot machinery degenerates to it for a uniform batch).  Prefill and
+    decode run under ``jax.jit`` with or without a matmul ``backend``; use
+    the engine directly for mixed lengths / queueing / EOS / TTFT.
     """
+    from repro.serving import Engine, Request
     B, P = prompts.shape
-    S_max = P + gen_len
-    caches = T.init_cache(cfg, B, S_max)
+    prompts_np = np.asarray(prompts)
+    frontend_np = None if frontend is None else np.asarray(frontend)
+    reqs = [Request(rid=b, prompt=prompts_np[b], max_new_tokens=gen_len,
+                    frontend=(frontend_np[b] if frontend_np is not None
+                              else None))
+            for b in range(B)]
+    engine = Engine(cfg, params, max_batch=B, max_len=P + gen_len,
+                    backend=backend, prefill_bucket=P)
+    results = engine.run(reqs)
+    gen = jnp.asarray(np.stack([r.tokens for r in results]))
+    st = engine.stats
+    return gen, {"prefill_s": st["prefill_s"], "decode_s": st["decode_s"],
+                 "tok_per_s": B * (gen_len - 1) / max(st["decode_s"], 1e-9)}
 
-    prefill = jax.jit(lambda p, t, c, f: T.prefill(p, cfg, t, c,
-                                                   cross_source=f))
-    decode = jax.jit(lambda p, t, c, i: T.decode_step(p, cfg, t, c, i))
-    ctx = matmul_backend(backend) if backend is not None \
-        else contextlib.nullcontext()
 
-    with ctx:
-        t0 = time.monotonic()
-        logits, caches = prefill(params, prompts, caches, frontend)
-        tok = sample_greedy(logits)
-        t_prefill = time.monotonic() - t0
-
-        out = [tok]
-        t0 = time.monotonic()
-        for i in range(gen_len - 1):
-            logits, caches = decode(params, tok, caches, P + i)
-            tok = sample_greedy(logits)
-            out.append(tok)
-        t_decode = time.monotonic() - t0
-    gen = jnp.stack(out, axis=1)
-    return gen, {"prefill_s": t_prefill, "decode_s": t_decode,
-                 "tok_per_s": B * (gen_len - 1) / max(t_decode, 1e-9)}
+def serve_engine(args, cfg, params, backend=None):
+    """``--engine``: replay a mixed-length request trace through the
+    continuous-batching engine and report per-request latency (TTFT,
+    decode tok/s) + the run summary.  The trace comes from ``--trace``
+    (JSONL, see `repro.serving.trace`) or a seeded synthetic trace sized by
+    ``--requests/--prompt-len/--gen-len``."""
+    from repro.serving import (Engine, Scheduler, load_trace, summarize,
+                               synthetic_trace)
+    if args.trace:
+        trace = load_trace(args.trace, vocab=cfg.vocab)
+        print(f"[serve] trace {args.trace}: {len(trace)} requests")
+    else:
+        trace = synthetic_trace(
+            args.requests, vocab=cfg.vocab,
+            min_prompt=max(2, args.prompt_len // 4),
+            max_prompt=args.prompt_len,
+            min_new=max(2, args.gen_len // 4), max_new=args.gen_len,
+            seed=args.seed)
+        print(f"[serve] synthetic trace: {len(trace)} mixed-length requests "
+              f"(prompts <= {args.prompt_len}, gen <= {args.gen_len})")
+    if cfg.frontend:
+        key = jax.random.PRNGKey(args.seed)
+        for i, r in enumerate(trace):
+            r.frontend = np.asarray(jax.random.normal(
+                jax.random.fold_in(key, i),
+                (cfg.frontend_tokens, cfg.d_model), jnp.bfloat16))
+    max_len = args.max_len or max(r.prompt_len + r.max_new_tokens
+                                  for r in trace)
+    engine = Engine(cfg, params, max_batch=args.max_batch, max_len=max_len,
+                    backend=backend, scheduler=Scheduler(args.policy))
+    results = engine.run(trace)
+    for r in results:
+        print(f"[serve]  {r.rid}: prompt={r.prompt_len} "
+              f"gen={r.n_tokens} ({r.finish_reason}) "
+              f"ttft={r.ttft_s * 1e3:.0f}ms "
+              f"decode={r.decode_tok_s:.1f} tok/s")
+    summ = summarize(results, engine.stats["wall_s"])
+    print(f"[serve] engine[{args.policy}] B={args.max_batch} "
+          f"max_len={max_len}: {summ['total_tokens']} tokens in "
+          f"{summ['wall_s'] * 1e3:.0f}ms ({summ['total_tok_s']} tok/s, "
+          f"ttft p50 {summ['ttft_p50_s'] * 1e3:.0f}ms / "
+          f"p95 {summ['ttft_p95_s'] * 1e3:.0f}ms, "
+          f"{engine.stats['decode_steps']} decode steps)")
+    return results, summ
 
 
 # --------------------------------------------------------------------------
@@ -219,6 +264,23 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", action="store_true",
+                    help="serve through the continuous-batching engine "
+                         "(repro.serving): mixed-length trace replay with "
+                         "slot admission/retirement + per-request TTFT")
+    ap.add_argument("--trace", default=None,
+                    help="JSONL request trace for --engine "
+                         "(repro.serving.trace format); default: a seeded "
+                         "synthetic mixed-length trace")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="engine slot-pool size (concurrent requests)")
+    ap.add_argument("--max-len", type=int, default=None,
+                    help="engine per-slot sequence capacity (default: "
+                         "longest prompt+gen in the trace)")
+    ap.add_argument("--policy", default="continuous",
+                    choices=["continuous", "static"],
+                    help="engine admission policy (static = gang batching "
+                         "baseline)")
     ap.add_argument("--mapping", default=None,
                     help="mapping artifact JSON (repro.api schema); lowered "
                          "to per-layer ExecutionPlans, with the global "
@@ -238,6 +300,9 @@ def main(argv=None):
         ap.error("--require-full-coverage needs --mapping")
 
     if args.arch.startswith("cnn:"):
+        if args.engine:
+            ap.error("--engine is a decode-loop mode; CNN façades have no "
+                     "KV cache to batch continuously")
         return serve_cnn(args, args.arch.split(":", 1)[1])
 
     cfgbase.load_all()
@@ -284,6 +349,12 @@ def main(argv=None):
                 print("[serve] ERROR: --require-full-coverage but no "
                       "execution plan could be bound", file=sys.stderr)
                 sys.exit(2)
+
+    if args.engine:
+        results, summ = serve_engine(args, cfg, params, backend=backend)
+        if backend is not None:
+            check_coverage("serve", backend, args.require_full_coverage)
+        return results, summ
 
     prompts = jax.random.randint(key, (args.requests, args.prompt_len),
                                  0, cfg.vocab)

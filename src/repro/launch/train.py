@@ -34,7 +34,7 @@ from repro.optim import adamw, compression
 
 def emit_static_mapping(params, cfg, platform, out_path, max_cout=512,
                         stacked_prefixes=("units", "enc_units"),
-                        plan_hints=None):
+                        plan_hints=None, act_log_scale=None):
     """Write a schema-v2 `repro.api` mapping artifact for the trained
     model's projection weights: per-layer min-cost static channel split
     (paper Sec. IV baselines) under the named platform's cost model, with
@@ -54,16 +54,21 @@ def emit_static_mapping(params, cfg, platform, out_path, max_cout=512,
 
     ``plan_hints`` — optional ``{name: (LayerGeometry, searchable)}`` from a
     façade's ``plan()`` — supplies the true cost-model geometry (conv output
-    maps, groups) and searchability; grouped/depthwise convs are SKIPPED
-    (the executors have no im2col lowering for them, so emitting them would
-    guarantee a --require-full-coverage failure for the pipeline's own
-    artifact).  Without hints, conv geometry falls back to the weight shape
-    alone (ox/oy unknown -> 1).
+    maps, groups) and searchability; grouped/depthwise convs are EMITTED
+    with their group count (``"groups"`` on the artifact layer) and lower
+    block-diagonally onto the im2col'd kernels — mbv1's own artifact passes
+    ``--require-full-coverage``.  Without hints, conv geometry falls back to
+    the weight shape alone (ox/oy unknown -> 1, groups unknown -> 1).
 
-    Activation scales are left null (the executors quantize with dynamic
-    max-abs statistics).  Layers wider than ``max_cout`` output channels are
-    pinned to domain 0 — the exhaustive per-layer split search is O(C_out)
-    cost evaluations.
+    ``act_log_scale``: None (default) leaves activation scales null — the
+    executors then quantize activations DYNAMICALLY per call with the
+    batch's max-abs, which makes planned outputs depend on batch
+    composition.  Pass a float to pin a STATIC activation scale on every
+    layer instead — required for the serving engine's per-request
+    reproducibility guarantee (`repro.serving`: a request's tokens must not
+    change with its batch neighbours).  Layers wider than ``max_cout``
+    output channels are pinned to domain 0 — the exhaustive per-layer split
+    search is O(C_out) cost evaluations.
     """
     from repro.api import MappingArtifact, Platform
     from repro.core import baselines, quant
@@ -71,12 +76,14 @@ def emit_static_mapping(params, cfg, platform, out_path, max_cout=512,
 
     plat = Platform.get(platform)
     cm, spec = plat.cost_model(), plat.spec()
-    names, geoms, searchable, scales, skipped = [], [], [], [], []
+    names, geoms, searchable, scales = [], [], [], []
     plan_hints = plan_hints or {}
 
     def w_scale(w):
         ls = float(quant.init_log_scale(np.asarray(w, dtype=np.float32)))
-        return {"w_log_scales": [ls] * spec.n_domains, "act_log_scale": None}
+        return {"w_log_scales": [ls] * spec.n_domains,
+                "act_log_scale": (float(act_log_scale)
+                                  if act_log_scale is not None else None)}
 
     for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
         parts = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
@@ -89,9 +96,6 @@ def emit_static_mapping(params, cfg, platform, out_path, max_cout=512,
         name = "/".join(parts)
         ndim = getattr(leaf, "ndim", 0)
         hint = plan_hints.get(name)
-        if hint is not None and hint[0].groups != 1:
-            skipped.append(name)     # no im2col lowering for grouped convs
-            continue
         if ndim == 2:
             names.append(name)
             geoms.append(hint[0] if hint else
@@ -118,9 +122,6 @@ def emit_static_mapping(params, cfg, platform, out_path, max_cout=512,
             searchable.append((hint[1] if hint else True) and
                               co <= max_cout)
             scales.append(w_scale(leaf))
-    if skipped:
-        print(f"[train] skipped {len(skipped)} grouped-conv layers "
-              f"(no im2col lowering): {skipped}")
     assigns = baselines.min_cost(cm, geoms, "latency", searchable)
     counts = baselines.counts_from_assignments(assigns, spec.n_domains)
     plan = [(n, g, s) for n, g, s in zip(names, geoms, searchable)]

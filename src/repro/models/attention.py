@@ -49,29 +49,47 @@ def init_attn(key, cfg: AttnConfig, dtype=jnp.bfloat16):
 # ---------------------------------------------------------------- core math
 
 def _grouped_scores_softmax_out(q, k, v, mask, scale):
-    """q (B,Sq,KVH,G,hd); k,v (B,Sk,KVH,hd); mask (Sq,Sk) bool or None."""
+    """q (B,Sq,KVH,G,hd); k,v (B,Sk,KVH,hd); mask (Sq,Sk) or (B,Sq,Sk) bool
+    or None (the batched form carries per-slot cache lengths)."""
     s = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
     if mask is not None:
+        if mask.ndim == 3:                  # per-slot: (B,Sq,Sk) over
+            mask = mask[:, None, None]      # s (B,KVH,G,Sq,Sk)
         s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
 
 
 def full_attention(q, k, v, *, causal, window=None, q_pos0=0, kv_len=None):
-    """Unchunked reference path (small S / decode)."""
+    """Unchunked reference path (small S / decode).
+
+    ``q_pos0`` and ``kv_len`` may be scalars (one position for the whole
+    batch — the classic path) or ``(B,)`` arrays of PER-SLOT positions /
+    cache lengths (the continuous-batching decode path: every slot sits at
+    its own sequence length, so the causal/window/length masks must be
+    built per slot)."""
     B, Sq, KVH, G, hd = q.shape
     Sk = k.shape[1]
     scale = hd ** -0.5
     mask = None
-    qi = q_pos0 + jnp.arange(Sq)[:, None]
-    ki = jnp.arange(Sk)[None, :]
+    per_slot = jnp.ndim(q_pos0) == 1 or jnp.ndim(kv_len) == 1
+    if per_slot:                            # (B,Sq,Sk)-shaped index grids
+        q0 = jnp.reshape(jnp.asarray(q_pos0), (-1, 1, 1)) \
+            if jnp.ndim(q_pos0) == 1 else q_pos0
+        qi = q0 + jnp.arange(Sq)[None, :, None]
+        ki = jnp.arange(Sk)[None, None, :]
+    else:                                   # (Sq,Sk) grids, broadcast over B
+        qi = q_pos0 + jnp.arange(Sq)[:, None]
+        ki = jnp.arange(Sk)[None, :]
     if causal:
         mask = ki <= qi
     if window is not None:
         wm = ki > qi - window
         mask = wm if mask is None else (mask & wm)
     if kv_len is not None:
-        lm = ki < kv_len
+        kl = (jnp.reshape(jnp.asarray(kv_len), (-1, 1, 1))
+              if jnp.ndim(kv_len) == 1 else kv_len)
+        lm = ki < kl
         mask = lm if mask is None else (mask & lm)
     return _grouped_scores_softmax_out(q, k, v, mask, scale)
 
@@ -137,6 +155,20 @@ def chunked_attention(q, k, v, *, causal=True, window=None,
     return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KVH, G, vd)
 
 
+def cache_update(buf, val, index):
+    """Write ``val (B, S, ...)`` into ``buf (B, S_max, ...)`` starting at
+    sequence position ``index`` — a scalar (whole batch at one position) or
+    a ``(B,)`` array of per-slot positions (continuous batching: each slot's
+    KV lands at that slot's own cache length)."""
+    if jnp.ndim(index) == 1:
+        def one(b, v, i):
+            start = (i,) + (0,) * (b.ndim - 1)
+            return jax.lax.dynamic_update_slice(b, v, start)
+        return jax.vmap(one)(buf, val.astype(buf.dtype), index)
+    start = (0, index) + (0,) * (buf.ndim - 2)
+    return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), start)
+
+
 # ---------------------------------------------------------------- GQA layer
 
 def gqa(p, x, positions, cfg: AttnConfig, *, cache=None, cache_index=None,
@@ -144,9 +176,11 @@ def gqa(p, x, positions, cfg: AttnConfig, *, cache=None, cache_index=None,
     """Grouped-query attention.
 
     cache: optional dict {"k","v"} of (B, S_max, KVH, hd) + writes at
-    ``cache_index``; decode passes S==1 inputs.  kv_override supplies
-    precomputed (k, v) for cross-attention.  ``name``: this block's pytree
-    path, threaded into the projections' matmul-backend calls.
+    ``cache_index`` — a scalar, or a ``(B,)`` array of per-slot positions
+    (the continuous-batching decode path; masks then build per slot);
+    decode passes S==1 inputs.  kv_override supplies precomputed (k, v) for
+    cross-attention.  ``name``: this block's pytree path, threaded into the
+    projections' matmul-backend calls.
     """
     B, S, D = x.shape
     H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -169,18 +203,14 @@ def gqa(p, x, positions, cfg: AttnConfig, *, cache=None, cache_index=None,
             enc = lambda t: jnp.clip(jnp.round(t.astype(jnp.float32) *
                                                KV_QSCALE), -127, 127
                                      ).astype(jnp.int8)
-            kc = jax.lax.dynamic_update_slice(cache["k"], enc(k),
-                                              (0, cache_index, 0, 0))
-            vc = jax.lax.dynamic_update_slice(cache["v"], enc(v),
-                                              (0, cache_index, 0, 0))
+            kc = cache_update(cache["k"], enc(k), cache_index)
+            vc = cache_update(cache["v"], enc(v), cache_index)
             new_cache = {"k": kc, "v": vc}
             k = kc.astype(x.dtype) * (1.0 / KV_QSCALE)
             v = vc.astype(x.dtype) * (1.0 / KV_QSCALE)
         else:
-            k = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
-            v = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+            k = cache_update(cache["k"], k, cache_index)
+            v = cache_update(cache["v"], v, cache_index)
             new_cache = {"k": k, "v": v}
         kv_len = cache_index + S
     else:
@@ -253,16 +283,13 @@ def mla(p, x, positions, cfg: MLAConfig, *, cache=None, cache_index=None,
         if cache["latent"].dtype == jnp.int8:
             codes = jnp.clip(jnp.round(packed.astype(jnp.float32) *
                                        KV_QSCALE), -127, 127).astype(jnp.int8)
-            buf = jax.lax.dynamic_update_slice(cache["latent"], codes,
-                                               (0, cache_index, 0))
+            buf = cache_update(cache["latent"], codes, cache_index)
             new_cache = {"latent": buf}
             deq = buf.astype(x.dtype) * (1.0 / KV_QSCALE)
             latent = deq[..., :cfg.kv_lora_rank]
             k_rope = deq[..., cfg.kv_lora_rank:]
         else:
-            buf = jax.lax.dynamic_update_slice(
-                cache["latent"], packed.astype(cache["latent"].dtype),
-                (0, cache_index, 0))
+            buf = cache_update(cache["latent"], packed, cache_index)
             new_cache = {"latent": buf}
             latent = buf[..., :cfg.kv_lora_rank]
             k_rope = buf[..., cfg.kv_lora_rank:]
@@ -291,7 +318,9 @@ def mla(p, x, positions, cfg: MLAConfig, *, cache=None, cache_index=None,
                              latent.astype(jnp.float32)) +
                   jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
                              k_rope.astype(jnp.float32))) * scale
-        mask = jnp.arange(latent.shape[1])[None, None, None, :] < kv_len
+        kl = (jnp.reshape(jnp.asarray(kv_len), (-1, 1, 1, 1))
+              if jnp.ndim(kv_len) == 1 else kv_len)
+        mask = jnp.arange(latent.shape[1])[None, None, None, :] < kl
         scores = jnp.where(mask, scores, -1e30)
         pw = jax.nn.softmax(scores, axis=-1)
         o_lat = jnp.einsum("bhqs,bsr->bqhr", pw,

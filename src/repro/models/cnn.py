@@ -42,9 +42,10 @@ MBV1_CFG = CNNConfig("mobilenetv1_025", (96, 96), 3, 2, width_mult=0.25)
 
 # Reduced configs for CI-speed tests
 RESNET20_TINY = CNNConfig("resnet20_tiny", (16, 16), 3, 10)
+MBV1_TINY = CNNConfig("mobilenetv1_tiny", (32, 32), 3, 2, width_mult=0.25)
 
 CONFIGS = {c.name: c for c in (RESNET20_CFG, RESNET18_CFG, RESNET18_SMALL,
-                               MBV1_CFG, RESNET20_TINY)}
+                               MBV1_CFG, RESNET20_TINY, MBV1_TINY)}
 
 
 def get_config(name: str) -> CNNConfig:

@@ -55,11 +55,18 @@ def _capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
     return max(c, cfg.top_k)
 
 
-def moe_ffn(p, x, cfg: MoEConfig, n_groups: int | None = None, name=None):
+def moe_ffn(p, x, cfg: MoEConfig, n_groups: int | None = None, name=None,
+            length_mask=None):
     """x: (B, S, D) -> (B, S, D), plus aux losses dict.  ``name`` threads
     the block's pytree path into the router/shared-expert dense calls (the
     grouped expert einsums are not dense dicts and stay on their fused
-    path)."""
+    path).
+
+    ``length_mask`` (B, S) marks the VALID tokens of a ragged/partially
+    active batch (continuous-batching serving): masked tokens are dropped
+    from dispatch BEFORE the capacity cumsum, so padding tokens and
+    retired slots never compete with real tokens for expert capacity —
+    with every token valid the result is unchanged."""
     B, S, D = x.shape
     T = B * S
     if n_groups is None:
@@ -89,6 +96,9 @@ def moe_ffn(p, x, cfg: MoEConfig, n_groups: int | None = None, name=None):
 
     # position of each (token, k) inside its expert's capacity buffer
     onehot = jax.nn.one_hot(topi, E, dtype=jnp.int32)          # (G,Tg,K,E)
+    if length_mask is not None:
+        mt = length_mask.reshape(G, Tg).astype(onehot.dtype)
+        onehot = onehot * mt[..., None, None]
     flat = onehot.reshape(G, Tg * K, E)
     pos = jnp.cumsum(flat, axis=1) - 1                          # (G,Tg*K,E)
     pos = pos.reshape(G, Tg, K, E)

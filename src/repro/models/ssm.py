@@ -60,8 +60,14 @@ def init_mamba2(key, cfg: Mamba2Config, dtype=jnp.bfloat16):
     }
 
 
-def _causal_conv(x, w, b, state=None):
-    """Depthwise causal conv. x: (B,S,C), w: (K,C). state: (B,K-1,C)|None."""
+def _causal_conv(x, w, b, state=None, lengths=None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). state: (B,K-1,C)|None.
+
+    ``lengths`` (B,) makes the NEW state ragged-aware: with right-padded
+    inputs the carried window must hold the last K-1 VALID positions of
+    each slot, i.e. ``xp[b, lengths[b] : lengths[b]+K-1]`` (``xp`` prepends
+    the K-1 carry rows, so index ``lengths`` is exactly that window; a slot
+    with lengths == 0 keeps its state bit-identical)."""
     K = w.shape[0]
     if state is None:
         pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
@@ -69,7 +75,12 @@ def _causal_conv(x, w, b, state=None):
         pad = state
     xp = jnp.concatenate([pad, x], axis=1)
     out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
-    new_state = xp[:, -(K - 1):, :]
+    if lengths is None:
+        new_state = xp[:, -(K - 1):, :]
+    else:
+        new_state = jax.vmap(
+            lambda xb, l: jax.lax.dynamic_slice(
+                xb, (l, 0), (K - 1, xb.shape[1])))(xp, lengths)
     return out + b, new_state
 
 
@@ -124,8 +135,14 @@ def _ssd_chunked(xs, Bt, Ct, dt, la, h0, chunk=None):
     return hT, y
 
 
-def mamba2(p, x, cfg: Mamba2Config, state=None, name=None):
-    """x: (B,S,D). Returns (y, new_state). Recurrent selective-state scan."""
+def mamba2(p, x, cfg: Mamba2Config, state=None, name=None, length_mask=None):
+    """x: (B,S,D). Returns (y, new_state). Recurrent selective-state scan.
+
+    ``length_mask`` (B,S) bool marks the VALID positions of right-padded
+    ragged inputs (continuous-batching prefill / per-slot decode): padded
+    steps run with dt = 0, which is an exact identity on the SSM state
+    (see `_ssd_chunked`), and the conv carry keeps each slot's last valid
+    window.  Outputs at masked positions are garbage by contract."""
     B, S, D = x.shape
     di, N, H, hd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
     zxbcdt = L.dense(p["in_proj"], x, _j(name, "in_proj"))
@@ -133,15 +150,20 @@ def mamba2(p, x, cfg: Mamba2Config, state=None, name=None):
     xbc = zxbcdt[..., di:di + cfg.conv_dim]
     dt_raw = zxbcdt[..., di + cfg.conv_dim:]                    # (B,S,H)
 
+    lengths = (jnp.sum(length_mask.astype(jnp.int32), axis=-1)
+               if length_mask is not None else None)
     conv_state = state["conv"] if state is not None else None
     xbc = constrain(xbc, "act")
-    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state,
+                                 lengths=lengths)
     xbc = jax.nn.silu(xbc)
     xs = constrain(xbc[..., :di].reshape(B, S, H, hd), "act")
     Bt = xbc[..., di:di + N]                                    # (B,S,N)
     Ct = xbc[..., di + N:]                                      # (B,S,N)
 
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    if length_mask is not None:
+        dt = dt * length_mask[..., None].astype(dt.dtype)
     A = -jnp.exp(p["A_log"])                                    # (H,)
 
     h0 = (state["ssm"] if state is not None
@@ -298,14 +320,22 @@ def _mlstm_chunked(q, k, v, ig, fg, state, chunk=None):
     return (CT, nT, mT), h
 
 
-def mlstm(p, x, cfg: XLSTMConfig, state=None, name=None):
-    """Matrix-memory LSTM with exponential gating (xLSTM), recurrent form."""
+def mlstm(p, x, cfg: XLSTMConfig, state=None, name=None, length_mask=None):
+    """Matrix-memory LSTM with exponential gating (xLSTM), recurrent form.
+
+    ``length_mask`` (B,S) marks valid positions of ragged inputs: masked
+    steps reuse the chunked path's padding convention (i = -inf: no input,
+    f ~ +inf: no decay) so they are an identity on (C, n, m), and the conv
+    carry keeps each slot's last valid window."""
     B, S, D = x.shape
     di, H, hd = cfg.d_inner, cfg.n_heads, cfg.head_dim
     uz = L.dense(p["up"], x, _j(name, "up"))
     u, z = uz[..., :di], uz[..., di:]
+    lengths = (jnp.sum(length_mask.astype(jnp.int32), axis=-1)
+               if length_mask is not None else None)
     conv_state = state["conv"] if state is not None else None
-    uc, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    uc, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state,
+                                lengths=lengths)
     uc = constrain(jax.nn.silu(uc), "act")
     uh = uc.reshape(B, S, H, hd)
     q = constrain(jnp.einsum("bshd,hdk->bshk", uh, p["wq_bd"]), "act")
@@ -313,6 +343,9 @@ def mlstm(p, x, cfg: XLSTMConfig, state=None, name=None):
     v = constrain(jnp.einsum("bshd,hdk->bshk", uh, p["wv_bd"]), "act")
     gates = L.dense(p["w_if"], uc, _j(name, "w_if")).astype(jnp.float32)  # (B,S,2H)
     ig, fg = gates[..., :H], gates[..., H:]
+    if length_mask is not None:
+        ig = jnp.where(length_mask[..., None], ig, -1e30)
+        fg = jnp.where(length_mask[..., None], fg, 80.0)
 
     if state is None:
         C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
@@ -374,8 +407,13 @@ def init_slstm(key, cfg: XLSTMConfig, dtype=jnp.bfloat16):
     }
 
 
-def slstm(p, x, cfg: XLSTMConfig, state=None, name=None):
-    """Scalar-memory LSTM with exponential gating + recurrent head mixing."""
+def slstm(p, x, cfg: XLSTMConfig, state=None, name=None, length_mask=None):
+    """Scalar-memory LSTM with exponential gating + recurrent head mixing.
+
+    ``length_mask`` (B,S) marks valid positions of ragged inputs; masked
+    steps carry (c, n, h, m) through unchanged (the recurrent h-mixing
+    makes a gate-level identity impossible, so the step SELECTS the old
+    carry instead)."""
     B, S, D = x.shape
     di, H, hd = cfg.d_inner, cfg.n_heads, cfg.head_dim
     pre = L.dense(p["w_in"], x, _j(name, "w_in")).reshape(B, S, H, 4 * hd)
@@ -389,8 +427,11 @@ def slstm(p, x, cfg: XLSTMConfig, state=None, name=None):
         c0, n0, h0, m0 = state["c"], state["n"], state["h"], state["m"]
 
     r = p["r"].astype(jnp.float32)
+    mask = (jnp.ones((B, S), bool) if length_mask is None
+            else length_mask.astype(bool))
 
-    def step(carry, pre_t):
+    def step(carry, inp):
+        pre_t, m_t_ = inp
         c, n, h, m = carry
         rec = jnp.einsum("bhk,hkj->bhj", h, r)                  # (B,H,4hd)
         g = pre_t.astype(jnp.float32) + rec
@@ -400,13 +441,17 @@ def slstm(p, x, cfg: XLSTMConfig, state=None, name=None):
         m_new = jnp.maximum(logf + m, i_t)
         fs = jnp.exp(logf + m - m_new)[..., None]
         is_ = jnp.exp(i_t - m_new)[..., None]
-        c = c * fs + is_ * jnp.tanh(z_t)
-        n = n * fs + is_
-        h_new = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1e-6)
-        return (c, n, h_new, m_new), h_new
+        c_new = c * fs + is_ * jnp.tanh(z_t)
+        n_new = n * fs + is_
+        h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+        sel2, sel3 = m_t_[:, None], m_t_[:, None, None]
+        carry = (jnp.where(sel3, c_new, c), jnp.where(sel3, n_new, n),
+                 jnp.where(sel3, h_new, h), jnp.where(sel2, m_new, m))
+        return carry, h_new
 
     (cT, nT, hT, mT), hs = jax.lax.scan(step, (c0, n0, h0, m0),
-                                        pre.transpose(1, 0, 2, 3))
+                                        (pre.transpose(1, 0, 2, 3),
+                                         mask.transpose(1, 0)))
     h = hs.transpose(1, 0, 2, 3).reshape(B, S, di).astype(x.dtype)
     out = L.dense(p["down"], L.norm(p["norm"], h), _j(name, "down"))
     return out, {"c": cT, "n": nT, "h": hT, "m": mT}

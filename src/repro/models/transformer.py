@@ -14,6 +14,13 @@ Public API (cfg: ArchConfig is static/hashable):
   decode_step(params, cfg, token, cache, i)  -> (logits, cache)
   init_cache(cfg, B, S_max)                  -> cache pytree  (concrete)
   cache_specs(cfg, B, S_max)                 -> cache pytree  (ShapeDtypeStruct)
+  scatter_cache(caches, sub, slots)          -> caches with sub written at slots
+
+Continuous-batching serving (`repro.serving`) drives the same entry points
+with per-slot state: ``prefill(..., lengths=)`` ragged-prefills right-padded
+prompts, ``decode_step(..., index=(B,), active=)`` writes and masks the KV
+cache at each slot's own length, and `scatter_cache` admits freshly
+prefilled requests into freed slots of the cache pool.
 """
 from __future__ import annotations
 
@@ -132,7 +139,7 @@ def init_shared_block(key, cfg: ArchConfig):
 
 def block_apply(p, x, kind, cfg: ArchConfig, positions, *, cache=None,
                 cache_index=None, cross_kv=None, chunked=False, shared=None,
-                name=None):
+                name=None, length_mask=None):
     """One block. Returns (x, new_cache, aux_loss).
 
     ``name`` is the block's params-pytree path prefix (``"units/3"``,
@@ -140,7 +147,13 @@ def block_apply(p, x, kind, cfg: ArchConfig, positions, *, cache=None,
     matmul-backend call so a name-keyed planned backend (see
     `repro.models._backend`) resolves the layer statically — including under
     `jax.jit` and inside the layer scan.  Shared-block weights always use the
-    fixed ``"shared/..."`` names (one copy, many call sites)."""
+    fixed ``"shared/..."`` names (one copy, many call sites).
+
+    ``cache_index`` may be a scalar (whole batch at one position) or a
+    ``(B,)`` array of per-slot cache positions, and ``length_mask`` (B, S)
+    marks the valid tokens of a ragged batch — together these are the
+    continuous-batching serving path: recurrent/MoE layers suppress masked
+    tokens exactly, attention writes and masks the KV cache per slot."""
     aux = 0.0
     if kind in ("attn", "mla"):
         h = L.norm(p["norm1"], x, cfg.norm)
@@ -158,7 +171,8 @@ def block_apply(p, x, kind, cfg: ArchConfig, positions, *, cache=None,
             x = x + ao
             if "moe" in p:
                 h2 = L.norm(p.get("norm2", p["norm1"]), x, cfg.norm)
-                mo, ml = M.moe_ffn(p["moe"], h2, cfg.moe, name=_j(name, "moe"))
+                mo, ml = M.moe_ffn(p["moe"], h2, cfg.moe, name=_j(name, "moe"),
+                                   length_mask=length_mask)
                 if "ffn" in p:  # arctic dense residual in parallel with MoE
                     mo = mo + L.ffn(p["ffn"], h2, cfg.act, _j(name, "ffn"))
                 x = x + mo
@@ -207,17 +221,17 @@ def block_apply(p, x, kind, cfg: ArchConfig, positions, *, cache=None,
     if kind == "mamba":
         h = L.norm(p["norm1"], x, cfg.norm)
         mo, ns = S.mamba2(p["mamba"], h, _mamba_cfg(cfg), state=cache,
-                          name=_j(name, "mamba"))
+                          name=_j(name, "mamba"), length_mask=length_mask)
         return x + mo, ns, aux
     if kind == "mlstm":
         h = L.norm(p["norm1"], x, cfg.norm)
         mo, ns = S.mlstm(p["core"], h, _xlstm_cfg(cfg), state=cache,
-                         name=_j(name, "core"))
+                         name=_j(name, "core"), length_mask=length_mask)
         return x + mo, ns, aux
     if kind == "slstm":
         h = L.norm(p["norm1"], x, cfg.norm)
         mo, ns = S.slstm(p["core"], h, _xlstm_cfg(cfg), state=cache,
-                         name=_j(name, "core"))
+                         name=_j(name, "core"), length_mask=length_mask)
         return x + mo, ns, aux
     if kind == "shared_attn":
         h = L.norm(p["norm1"], x, cfg.norm)
@@ -326,9 +340,12 @@ def encode(params, cfg: ArchConfig, frames):
 
 def backbone(params, cfg: ArchConfig, x, positions, *, caches=None,
              cache_index=None, cross_source=None, chunked=False,
-             remat=False):
+             remat=False, length_mask=None):
     """Run all layers. caches: None or pytree matching cache_specs.
-    Returns (hidden, new_caches, aux)."""
+    Returns (hidden, new_caches, aux).
+
+    ``cache_index`` scalar or (B,) per-slot positions, ``length_mask``
+    (B, S) valid-token mask — see `block_apply`."""
     from repro.distributed.sharding import constrain
     period = len(cfg.pattern)
     shared = params.get("shared")
@@ -353,7 +370,8 @@ def backbone(params, cfg: ArchConfig, x, positions, *, caches=None,
                 x, nc, a = block_apply(
                     blk, x, kind, cfg, positions, cache=c,
                     cache_index=cache_index, cross_kv=ckv, chunked=chunked,
-                    shared=shared, name=f"units/{i}")
+                    shared=shared, name=f"units/{i}",
+                    length_mask=length_mask)
                 aux = aux + a
                 new_cache.append(nc)
         x = constrain(x, "act")
@@ -365,7 +383,8 @@ def backbone(params, cfg: ArchConfig, x, positions, *, caches=None,
         x, nfc, a0 = block_apply(params["first_dense"], x, cfg.pattern[0], cfg,
                                  positions, cache=fd_cache,
                                  cache_index=cache_index, chunked=chunked,
-                                 shared=shared, name="first_dense")
+                                 shared=shared, name="first_dense",
+                                 length_mask=length_mask)
         units = params["units"]  # init_lm already excluded layer 0
     else:
         x, nfc, a0 = x, None, 0.0
@@ -384,7 +403,8 @@ def backbone(params, cfg: ArchConfig, x, positions, *, caches=None,
             c = rem_caches[i] if rem_caches is not None else None
             x, nc, a = block_apply(blk, x, kind, cfg, positions, cache=c,
                                    cache_index=cache_index, chunked=chunked,
-                                   shared=shared, name=f"rem/{i}")
+                                   shared=shared, name=f"rem/{i}",
+                                   length_mask=length_mask)
             aux = aux + a
             new_rem.append(nc)
 
@@ -542,29 +562,82 @@ def init_cache(cfg: ArchConfig, B: int, S_max: int):
     return cache_specs(cfg, B, S_max, concrete=True)
 
 
-def prefill(params, cfg: ArchConfig, tokens, caches, cross_source=None):
-    """Process the prompt, fill caches, return (last_logits, caches)."""
+def cache_batch_axes(caches):
+    """Pytree (matching ``caches``) of each leaf's BATCH axis: ``"units"``
+    leaves are scan-stacked with a leading repeats axis (batch is axis 1),
+    everything else carries batch first.  This is the layout knowledge
+    `scatter_cache` needs to address slots."""
+    axes = {"units": jax.tree.map(lambda _: 1, caches["units"])}
+    for k in ("rem", "first"):
+        if k in caches:
+            axes[k] = jax.tree.map(lambda _: 0, caches[k])
+    return axes
+
+
+def scatter_cache(caches, sub, slots):
+    """Write a k-request cache pytree ``sub`` into the B-slot pool
+    ``caches`` at slot indices ``slots`` (k,) — the continuous-batching
+    admission step: freshly prefilled per-request caches land in the slots
+    the scheduler assigned, replacing whatever a retired request left
+    there.  Jit-safe (``slots`` may be traced)."""
+    slots = jnp.asarray(slots)
+
+    def put(buf, s, axis):
+        if axis == 0:
+            return buf.at[slots].set(s.astype(buf.dtype))
+        return buf.at[:, slots].set(s.astype(buf.dtype))
+
+    return jax.tree.map(put, caches, sub, cache_batch_axes(caches))
+
+
+def prefill(params, cfg: ArchConfig, tokens, caches, cross_source=None,
+            lengths=None):
+    """Process the prompt, fill caches, return (last_logits, caches).
+
+    ``lengths`` (B,) enables RAGGED prefill of right-padded prompts: valid
+    tokens occupy positions ``[0, lengths[b])`` of each row.  Recurrent
+    (SSM/xLSTM) states and MoE dispatch suppress the padded tail exactly;
+    attention KV written at padded positions is garbage by contract — every
+    subsequent read masks the cache by per-slot length (`decode_step` with
+    a (B,) index).  The returned logits are taken at each slot's LAST VALID
+    position (``lengths - 1``), not at the padded row end."""
     B, Sq = tokens.shape
     x = params["emb"][tokens]
     positions = jnp.arange(Sq)[None, :]
+    length_mask = None
+    if lengths is not None:
+        length_mask = jnp.arange(Sq)[None, :] < jnp.asarray(lengths)[:, None]
     if cfg.frontend == "audio" and cross_source is not None:
         cross_source = encode(params, cfg, cross_source)
     h, caches, _ = backbone(params, cfg, x, positions, caches=caches,
                             cache_index=0, cross_source=cross_source,
-                            chunked=Sq > 2048)
-    logits = _project_logits(params, cfg, h[:, -1])
+                            chunked=Sq > 2048, length_mask=length_mask)
+    h_last = (h[:, -1] if lengths is None
+              else jnp.take_along_axis(
+                  h, (jnp.asarray(lengths) - 1)[:, None, None], axis=1)[:, 0])
+    logits = _project_logits(params, cfg, h_last)
     return logits, caches
 
 
 def decode_step(params, cfg: ArchConfig, token, caches, index,
-                cross_source=None):
-    """One decode step. token (B,), index: scalar position of the new token.
-    Cross-attention KV (frontend/encoder memory) is read from the cache
-    written at prefill — cross_source is ignored here."""
+                cross_source=None, active=None):
+    """One decode step. token (B,), index: position of the new token — a
+    scalar (classic same-length batch) or a ``(B,)`` array of PER-SLOT cache
+    lengths (continuous batching: each slot's token lands at that slot's own
+    position and attention masks the cache per slot).  ``active`` (B,) bool
+    marks live slots: retired/empty slots are suppressed in cross-slot
+    coupling (MoE capacity) and their recurrent states carry through
+    unchanged — their logits are garbage by contract.  Cross-attention KV
+    (frontend/encoder memory) is read from the cache written at prefill —
+    cross_source is ignored here."""
     x = params["emb"][token][:, None, :]
-    positions = jnp.full((x.shape[0], 1), index)
+    B = x.shape[0]
+    positions = (jnp.asarray(index)[:, None] if jnp.ndim(index) == 1
+                 else jnp.full((B, 1), index))
+    length_mask = None if active is None else jnp.asarray(active)[:, None]
     h, caches, _ = backbone(params, cfg, x, positions, caches=caches,
-                            cache_index=index, cross_source=None)
+                            cache_index=index, cross_source=None,
+                            length_mask=length_mask)
     logits = _project_logits(params, cfg, h[:, -1])
     return logits, caches
 

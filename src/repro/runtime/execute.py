@@ -93,6 +93,10 @@ class PreparedLayer:
     def kernel(self) -> str:
         return self.plan.kernel
 
+    @property
+    def conv_groups(self) -> int:
+        return self.plan.groups
+
 
 def _quant_domain(lp: LayerPlan, domain_bits: List[int]) -> int:
     """Index of the first active quantized domain (drives the codes of any
@@ -169,13 +173,36 @@ def _pack_ternary_stream(lp: LayerPlan, w_q: jax.Array) -> jax.Array:
     return pack_ternary(w_t)
 
 
+def _expand_grouped(w, groups: int) -> jax.Array:
+    """Zero-embed a grouped conv weight ``(kh, kw, C_in/G, C_out)`` into the
+    block-diagonal full matrix ``(kh, kw, C_in, C_out)``: input-channel
+    block g only reaches output-channel block g (XLA's
+    ``feature_group_count`` semantics), every other entry is exactly zero.
+    Zeros quantize to code 0 in every domain, so the expanded weight runs
+    through the SAME im2col'd dense kernels as an ungrouped conv — trading
+    G-fold redundant MACs for kernel coverage (the cost model still prices
+    the true grouped geometry via ``LayerGeometry.groups``)."""
+    kh, kw, cpg, c_out = (int(s) for s in w.shape)
+    if c_out % groups:
+        raise ExecutionError(f"{c_out} output channels do not divide into "
+                             f"{groups} conv groups")
+    opg = c_out // groups
+    eye = jnp.eye(groups, dtype=w.dtype)
+    w5 = jnp.asarray(w).reshape(kh, kw, cpg, groups, opg)
+    full = jnp.einsum("hwcgo,gG->hwGcgo", w5, eye)
+    return full.reshape(kh, kw, groups * cpg, c_out)
+
+
 def prepare_layer(lp: LayerPlan, w, b=None,
                   domain_bits: List[int] | None = None,
                   block_n: int = 128) -> PreparedLayer:
     """Bind ``lp`` to a concrete weight (+ optional bias): a 2-D
     (C_in, C_out) dense matrix or a 4-D (kh, kw, C_in, C_out) HWIO conv
     kernel (flattened to ``(kh*kw*C_in, C_out)``; run conv layers through
-    `execute_conv_layer`)."""
+    `execute_conv_layer`).  A plan with ``groups > 1`` binds a grouped/
+    depthwise conv weight ``(kh, kw, C_in/G, C_out)`` — zero-embedded into
+    its block-diagonal dense form (`_expand_grouped`) so it executes
+    through the same kernels."""
     ndim = getattr(w, "ndim", 0)
     if ndim not in (2, 4):
         raise ExecutionError(f"{lp.name}: planned execution covers 2-D "
@@ -184,6 +211,12 @@ def prepare_layer(lp: LayerPlan, w, b=None,
     if int(w.shape[-1]) != lp.c_out:
         raise ExecutionError(f"{lp.name}: weight has {int(w.shape[-1])} "
                              f"output channels, plan expects {lp.c_out}")
+    if lp.groups > 1:
+        if ndim != 4:
+            raise ExecutionError(f"{lp.name}: groups={lp.groups} needs a "
+                                 f"4-D HWIO conv weight, got shape "
+                                 f"{tuple(w.shape)}")
+        w = _expand_grouped(w, lp.groups)
     conv_shape = tuple(int(s) for s in w.shape) if ndim == 4 else None
     w2 = jnp.asarray(w).reshape(-1, int(w.shape[-1]))
     if domain_bits is None:
@@ -389,6 +422,7 @@ class _StackedPrepared:
         p0 = preps[0]
         self.plan, self.block_n = p0.plan, p0.block_n
         self.conv_shape = p0.conv_shape
+        self.conv_groups = p0.plan.groups
         self.boundary, self.blocks = p0.boundary, p0.blocks
         self.n_repeats = len(preps)
         st = lambda get: (None if get(p0) is None
@@ -437,6 +471,7 @@ class _SingleRepeat:
             prep = dataclasses.replace(prep, w_perm=None)
         self.prep = prep
         self.conv_shape = prep.conv_shape
+        self.conv_groups = prep.plan.groups
 
     def execute(self, x, r, conv=None, *, interpret=None, reference=False):
         if conv is not None:
@@ -477,6 +512,7 @@ class _GroupedPrepared:
                 self.group_of[r] = g
                 self.pos_of[r] = pos
         self.conv_shape = preps[0].conv_shape
+        self.conv_groups = preps[0].plan.groups
 
     @property
     def n_groups(self) -> int:
@@ -512,6 +548,7 @@ class _SwitchPrepared:
                       if p.plan.kernel in _DROPS_FP_STACK else p
                       for p in preps]
         self.conv_shape = preps[0].conv_shape
+        self.conv_groups = preps[0].plan.groups
 
     def execute(self, x, r, conv=None, *, interpret=None, reference=False):
         def run(prep, xx):
@@ -656,13 +693,24 @@ class PlannedBackend:
             raise ExecutionError(
                 f"{name}: dense call site but the plan bound a conv weight "
                 f"— the artifact does not match this model")
-        if conv is not None and conv.get("groups", 1) != 1:
-            # trace-time decline, surfaced via runtime_declines (grouped /
-            # depthwise convs have no im2col lowering yet)
-            self.runtime_declines[name] = (
-                f"grouped conv (groups={conv['groups']}) has no im2col "
-                f"lowering; executed on the default path")
-            return None
+        if conv is not None:
+            cg = int(conv.get("groups", 1))
+            pg = entry.conv_groups
+            if cg != pg:
+                if pg == 1:
+                    # plan lowered without a groups record (pre-groups
+                    # artifact): loud trace-time decline, surfaced via
+                    # runtime_declines — re-emit the artifact to get the
+                    # block-diagonal grouped lowering
+                    self.runtime_declines[name] = (
+                        f"grouped conv (groups={cg}) but the plan was "
+                        f"lowered without groups; executed on the default "
+                        f"path")
+                    return None
+                raise ExecutionError(
+                    f"{name}: call site has groups={cg} but the plan was "
+                    f"lowered with groups={pg} — the artifact does not "
+                    f"match this model")
         if isinstance(entry, _STACKED_TYPES):
             r = _backend.current_scan_index()
             if r is None:

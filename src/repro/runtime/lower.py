@@ -221,6 +221,11 @@ def lower(artifact, params=None, handle=None, *, block_n: int = 128,
         w = _layer_weight(node)
         c_out = int(assign.size)
         c_in = int(art_layer.get("c_in", 0))
+        groups = int(art_layer.get("groups", 1))
+        if groups > 1 and c_out % groups:
+            raise LoweringError(
+                f"layer {name!r}: {c_out} output channels do not divide "
+                f"into {groups} conv groups")
         if w is not None:
             if int(w.shape[-1]) != c_out:
                 raise LoweringError(
@@ -228,7 +233,13 @@ def lower(artifact, params=None, handle=None, *, block_n: int = 128,
                     f"channels but the bound weight has shape "
                     f"{tuple(w.shape)} ({int(w.shape[-1])} channels) — "
                     f"the artifact does not match this model")
-            c_in = int(np.prod(w.shape[:-1]))
+            if groups > 1 and getattr(w, "ndim", 0) != 4:
+                raise LoweringError(
+                    f"layer {name!r}: groups={groups} needs a 4-D HWIO conv "
+                    f"weight, got shape {tuple(w.shape)}")
+            # grouped convs execute zero-embedded over the FULL input
+            # channels (kh*kw*c_in_per_group*groups) — record that K
+            c_in = int(np.prod(w.shape[:-1])) * groups
 
         perm = stable_perm(assign)
         bounds = split_points(assign[perm], n_domains)
@@ -262,7 +273,8 @@ def lower(artifact, params=None, handle=None, *, block_n: int = 128,
             aligned_boundaries=[int(b) for b in aligned],
             w_log_scales=w_ls, act_log_scale=act_ls,
             searchable=bool(art_layer.get("searchable", True)), note=note,
-            tuning=(dict(layer_tuning) if layer_tuning else None)))
+            tuning=(dict(layer_tuning) if layer_tuning else None),
+            groups=groups))
 
     return ExecutionPlan(model=art.get("model", "unknown"), domains=domains,
                          layers=layers, platform=art.get("platform"),

@@ -28,7 +28,12 @@ Plans serialize to JSON (schema v2, shared with the artifact's
                  "counts": [...], "boundaries": [...],
                  "aligned_boundaries": [...], "w_log_scales": [...] | null,
                  "act_log_scale": float | null, "searchable": bool,
-                 "note": str}, ...]}
+                 "note": str, "groups": int}, ...]}
+
+``groups`` > 1 marks a grouped/depthwise conv layer: the executors
+zero-embed its per-group weight into a block-diagonal dense matrix at bind
+time so it runs through the same im2col'd Pallas kernels (see
+`repro.runtime.execute.prepare_layer`).
 """
 from __future__ import annotations
 
@@ -70,6 +75,7 @@ class LayerPlan:
     searchable: bool = True
     note: str = ""                    # e.g. why the fp fallback was chosen
     tuning: Dict[str, int] | None = None  # kernel block sizes: bm/bn/bk
+    groups: int = 1                   # grouped/depthwise conv group count
 
     def __post_init__(self):
         self.perm = np.asarray(self.perm, dtype=np.int64)

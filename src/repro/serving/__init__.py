@@ -1,0 +1,73 @@
+"""repro.serving — continuous-batching inference engine over planned
+execution.
+
+The mapper (repro.api -> repro.runtime) answers "which kernel executes each
+layer"; this package answers "what latency do real requests see".  It turns
+the old fixed-shape serve loop into a reusable engine subsystem so the
+planned split-precision kernels are exercised under realistic mixed-length
+traffic, and "latency" means request-level TTFT and tokens/s — not a
+same-length batch's wall time.
+
+Architecture
+    `Engine` (engine.py)        the serving loop: jitted ragged prefill +
+                                one jitted per-slot-masked decode step over
+                                a fixed B-slot cache pool; optional
+                                `repro.runtime.PlannedBackend` so every
+                                covered projection runs its mapped kernel.
+    `Scheduler` / `RequestQueue` (scheduler.py)
+                                FCFS admission into freed slots between
+                                decode steps ("continuous", default) or
+                                gang-batched ("static", the baseline the
+                                benchmarks compare against).
+    `BatchState` (batch.py)     the B slots: per-slot sequence lengths
+                                (= KV-cache positions), active flags, last
+                                tokens, and the device cache pool.
+    `RequestResult` / `summarize` (metrics.py)
+                                per-request TTFT + decode tok/s, p50/p95
+                                aggregation.
+    traces (trace.py)           JSONL request traces + seeded synthetic
+                                mixed-length traffic.
+
+Request lifecycle
+    submitted -> (arrival_step reached) ready -> admitted into a free slot
+    [ragged prefill -> first token, TTFT clock stops] -> per-slot decode
+    steps -> retired on eos_id / max_new_tokens / pool length cap -> slot
+    freed for the next admission (no drain barrier).
+
+Example::
+
+    from repro.serving import Engine, synthetic_trace
+    eng = Engine(cfg, params, max_batch=4, max_len=64, backend=planned)
+    results = eng.run(synthetic_trace(16, vocab=cfg.vocab))
+    print(summarize(results, eng.stats["wall_s"]))
+
+Migration note — ``serve_batch``
+    `repro.launch.serve.serve_batch` (and ``serve --mapping``) are now thin
+    clients of this engine: a same-length batch is submitted as B requests
+    with a shared generation budget, admitted into B slots at once, and
+    decoded to completion — token-identical to the old fixed-shape loop.
+    Call the engine directly for anything beyond that (mixed lengths,
+    queueing, early EOS, paced arrivals, TTFT accounting).
+
+Exactness
+    Per-slot masking is exact: for non-MoE archs the engine's greedy tokens
+    are identical to serving each request alone (tests pin this), provided
+    activation quantization is STATIC when a planned backend is bound —
+    dynamic max-abs activation scales are computed over the pooled batch
+    and depend on batch composition.  Capacity-style MoE dispatch is
+    batch-composition-dependent by design (tokens of co-scheduled requests
+    compete for expert capacity), so MoE archs only guarantee parity for
+    identical batches.
+"""
+from repro.serving.batch import BatchState, SlotState
+from repro.serving.engine import Engine
+from repro.serving.metrics import RequestResult, percentile, summarize
+from repro.serving.scheduler import (POLICIES, Request, RequestQueue,
+                                     Scheduler)
+from repro.serving.trace import load_trace, save_trace, synthetic_trace
+
+__all__ = [
+    "BatchState", "Engine", "POLICIES", "Request", "RequestQueue",
+    "RequestResult", "Scheduler", "SlotState", "load_trace", "percentile",
+    "save_trace", "summarize", "synthetic_trace",
+]

@@ -1,0 +1,82 @@
+"""Slot-based batch state for the continuous-batching engine.
+
+`BatchState` owns the fixed pool of B decode slots: the per-slot sequence
+lengths (each slot's KV-cache position), the per-slot last sampled token and
+active flags — all host-side numpy, handed to the jitted decode step each
+call — plus the device-side cache pool pytree (`transformer.init_cache`
+layout) that `transformer.scatter_cache` writes admitted requests into.
+
+Host-side per-slot bookkeeping (the request occupying the slot, its
+generated tokens, timing marks) lives in `SlotState`; nothing here touches
+jax beyond holding the cache pool reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import numpy as np
+
+from repro.serving.scheduler import Request
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Host bookkeeping for one occupied slot."""
+    request: Request
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    t_ready: float = 0.0          # wall time the request became schedulable
+    t_first: float = 0.0          # wall time its first token materialized
+    admitted_step: int = 0
+
+
+class BatchState:
+    """Fixed B slots of decode state (see module docstring)."""
+
+    def __init__(self, max_batch: int, caches):
+        self.max_batch = int(max_batch)
+        self.caches = caches                       # device cache pool
+        self.lengths = np.zeros(self.max_batch, np.int32)
+        self.active = np.zeros(self.max_batch, bool)
+        self.last_tok = np.zeros(self.max_batch, np.int32)
+        self.slots: List[Optional[SlotState]] = [None] * self.max_batch
+
+    # ---- queries ---------------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [b for b in range(self.max_batch) if not self.active[b]]
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    def any_active(self) -> bool:
+        return bool(self.active.any())
+
+    # ---- transitions -----------------------------------------------------
+
+    def assign(self, slot: int, req: Request, first_token: int,
+               t_ready: float, t_first: float, step: int) -> SlotState:
+        """Occupy ``slot`` with ``req`` whose prefill produced
+        ``first_token``; the slot's cache length is the prompt length (the
+        first generated token is not in the cache yet)."""
+        if self.active[slot]:
+            raise RuntimeError(f"slot {slot} is still active")
+        st = SlotState(request=req, tokens=[int(first_token)],
+                       t_ready=t_ready, t_first=t_first, admitted_step=step)
+        self.slots[slot] = st
+        self.lengths[slot] = req.prompt_len
+        self.active[slot] = True
+        self.last_tok[slot] = int(first_token)
+        return st
+
+    def retire(self, slot: int) -> SlotState:
+        """Free ``slot`` and return its bookkeeping (the engine turns it
+        into a `RequestResult`).  The cache pool is left as-is — admission
+        overwrites the slot's cache wholesale."""
+        st = self.slots[slot]
+        if st is None:
+            raise RuntimeError(f"slot {slot} is not occupied")
+        self.active[slot] = False
+        self.slots[slot] = None
+        return st

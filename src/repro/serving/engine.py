@@ -1,0 +1,219 @@
+"""`Engine`: continuous-batching inference over (optionally planned) LMs.
+
+One engine owns a fixed pool of ``max_batch`` decode slots backed by a
+single KV-cache/state pool of sequence capacity ``max_len``, and runs the
+standard continuous-batching loop:
+
+  1. ADMIT — the `Scheduler` assigns ready requests to free slots.  The
+     admitted group is right-padded to a shared bucketed prompt length and
+     RAGGED-prefilled in one jitted call (`transformer.prefill` with
+     per-slot ``lengths``); the per-request caches are then scattered into
+     the pool at the assigned slots (`transformer.scatter_cache`) and each
+     request's first token is sampled from its last VALID position.
+  2. DECODE — one jitted step over the whole pool
+     (`transformer.decode_step` with a ``(B,)`` index): every slot's token
+     is embedded at that slot's own cache length and attention masks the
+     cache per slot.  Retired/empty slots ride along masked (`active`).
+  3. RETIRE — slots whose request sampled ``eos_id``, exhausted
+     ``max_new_tokens``, or hit the pool's ``max_len`` free up and step 1
+     refills them — no drain barrier (unless the scheduler runs the
+     ``static`` gang-batching baseline).
+
+The decode step traces ONCE (fixed pool shape); prefill retraces per
+(group size, bucketed prompt length) — bounded by ``max_batch`` times the
+number of buckets.  With a `repro.runtime.PlannedBackend` passed as
+``backend``, both traces execute every covered projection through its
+planned split-precision kernel (the name-keyed matmul-backend protocol
+resolves statically inside jit), so engine latency IS mapped latency.
+
+Exactness notes: outputs are token-identical to per-request serving for
+every non-MoE arch (padding/masking is exact — see the `repro.serving`
+package docstring for the MoE capacity caveat), provided the bound plan
+uses STATIC activation scales; dynamic max-abs activation quantization is
+computed over the whole pooled batch and therefore depends on batch
+composition.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.managed import matmul_backend
+from repro.serving.batch import BatchState
+from repro.serving.metrics import RequestResult
+from repro.serving.scheduler import Request, RequestQueue, Scheduler
+
+
+class Engine:
+    """Continuous-batching serving engine (see module docstring).
+
+    Parameters:
+      cfg, params   — the LM (`repro.configs` ArchConfig + its weights).
+      max_batch     — pool size B (concurrent requests).
+      max_len       — per-slot sequence capacity (prompt + generated - 1
+                      must fit; longer requests retire as "length_cap").
+      backend       — optional matmul backend (e.g. `PlannedBackend`)
+                      installed around every jitted call.
+      scheduler     — a `Scheduler` (default: continuous policy).
+      prefill_bucket— minimum prompt padding; group prompt lengths round up
+                      to the next power-of-two multiple of it (bounds
+                      prefill retraces).
+    """
+
+    def __init__(self, cfg, params, *, max_batch: int = 8, max_len: int = 64,
+                 backend=None, scheduler: Optional[Scheduler] = None,
+                 prefill_bucket: int = 8):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = int(max_batch)
+        self.max_len = int(max_len)
+        self.backend = backend
+        self.scheduler = scheduler or Scheduler()
+        self.prefill_bucket = max(1, int(prefill_bucket))
+        self.stats: Dict[str, float] = {}
+
+        def decode_fn(params, tok, caches, lengths, active):
+            logits, caches = T.decode_step(params, cfg, tok, caches, lengths,
+                                           active=active)
+            return jnp.argmax(logits, axis=-1), caches
+
+        def prefill_fn(params, prompts, lengths, pool, slots, frontend):
+            fresh = T.init_cache(cfg, prompts.shape[0], self.max_len)
+            logits, fresh = T.prefill(params, cfg, prompts, fresh,
+                                      cross_source=frontend, lengths=lengths)
+            tok0 = jnp.argmax(logits, axis=-1)
+            return tok0, T.scatter_cache(pool, fresh, slots)
+
+        self._decode = jax.jit(decode_fn)
+        self._prefill = jax.jit(prefill_fn)
+
+    # ---- helpers ---------------------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        b = self.prefill_bucket
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _ctx(self):
+        return (matmul_backend(self.backend) if self.backend is not None
+                else contextlib.nullcontext())
+
+    def _admit(self, batch: BatchState, admits, step: int,
+               t_ready: Dict[int, float]):
+        slots = np.asarray([s for s, _ in admits], np.int32)
+        reqs = [r for _, r in admits]
+        k = len(reqs)
+        P = self._bucket(max(r.prompt_len for r in reqs))
+        prompts = np.zeros((k, P), np.int32)
+        lengths = np.zeros(k, np.int32)
+        for i, r in enumerate(reqs):
+            prompts[i, :r.prompt_len] = r.prompt
+            lengths[i] = r.prompt_len
+        frontend = None
+        if self.cfg.frontend:
+            missing = [r.rid for r in reqs if r.frontend is None]
+            if missing:
+                raise ValueError(
+                    f"arch {self.cfg.name} needs a per-request cross-"
+                    f"attention `frontend`, missing on: {missing}")
+            frontend = jnp.stack(
+                [jnp.asarray(r.frontend, jnp.bfloat16) for r in reqs])
+        t0 = time.monotonic()
+        tok0, batch.caches = self._prefill(self.params, prompts, lengths,
+                                           batch.caches, slots, frontend)
+        tok0 = np.asarray(tok0)           # sync: first tokens materialized
+        t1 = time.monotonic()
+        self.stats["prefill_s"] += t1 - t0
+        self.stats["prefill_calls"] += 1
+        for i, (slot, req) in enumerate(admits):
+            batch.assign(slot, req, int(tok0[i]),
+                         t_ready=t_ready[id(req)], t_first=t1, step=step)
+        return [s for s, _ in admits]
+
+    def _maybe_retire(self, batch: BatchState, slot: int, now: float,
+                      step: int, results: Dict[int, RequestResult]) -> bool:
+        st = batch.slots[slot]
+        req = st.request
+        reason = None
+        if req.eos_id is not None and st.tokens[-1] == req.eos_id:
+            reason = "eos"
+        elif len(st.tokens) >= req.max_new_tokens:
+            reason = "max_new_tokens"
+        elif int(batch.lengths[slot]) >= self.max_len:
+            reason = "length_cap"   # no room to embed the next token
+        if reason is None:
+            return False
+        st = batch.retire(slot)
+        results[id(req)] = RequestResult(
+            rid=req.rid, prompt_len=req.prompt_len, tokens=st.tokens,
+            finish_reason=reason, ttft_s=st.t_first - st.t_ready,
+            finish_s=now - st.t_ready, admitted_step=st.admitted_step,
+            finished_step=step)
+        return True
+
+    # ---- main loop -------------------------------------------------------
+
+    def run(self, requests: Sequence[Request]) -> List[RequestResult]:
+        """Serve ``requests`` to completion; returns one `RequestResult` per
+        request, in submission order.  Timing aggregates land in
+        ``self.stats``."""
+        for r in requests:
+            if r.prompt_len >= self.max_len:
+                raise ValueError(
+                    f"request {r.rid!r}: prompt_len {r.prompt_len} does not "
+                    f"fit the engine's max_len {self.max_len} (needs "
+                    f"prompt_len < max_len)")
+        queue = RequestQueue()
+        for r in requests:
+            queue.push(r)
+        batch = BatchState(self.max_batch,
+                           T.init_cache(self.cfg, self.max_batch,
+                                        self.max_len))
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "decode_steps": 0,
+                      "prefill_calls": 0, "wall_s": 0.0}
+        results: Dict[int, RequestResult] = {}
+        t_ready: Dict[int, float] = {}
+        t0 = time.monotonic()
+        step = 0
+        with self._ctx():
+            while len(queue) or batch.any_active():
+                # idle + only future arrivals: fast-forward the step clock
+                if not batch.any_active() and queue.ready(step) == 0:
+                    step = max(step, queue.next_arrival())
+                now = time.monotonic()
+                for r in queue:
+                    if r.arrival_step <= step and id(r) not in t_ready:
+                        t_ready[id(r)] = now
+                admits = self.scheduler.admissions(
+                    queue, batch.free_slots(), batch.n_active, step)
+                if admits:
+                    for slot in self._admit(batch, admits, step, t_ready):
+                        self._maybe_retire(batch, slot, time.monotonic(),
+                                           step, results)
+                if not batch.any_active():
+                    continue
+                t = time.monotonic()
+                tok, batch.caches = self._decode(
+                    self.params, batch.last_tok, batch.caches,
+                    batch.lengths, batch.active)
+                tok = np.asarray(tok)               # sync
+                now = time.monotonic()
+                self.stats["decode_s"] += now - t
+                self.stats["decode_steps"] += 1
+                for b in range(self.max_batch):
+                    if not batch.active[b]:
+                        continue
+                    batch.slots[b].tokens.append(int(tok[b]))
+                    batch.last_tok[b] = tok[b]
+                    batch.lengths[b] += 1
+                    self._maybe_retire(batch, b, now, step, results)
+                step += 1
+        self.stats["wall_s"] = time.monotonic() - t0
+        return [results[id(r)] for r in requests]

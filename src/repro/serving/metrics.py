@@ -1,0 +1,63 @@
+"""Per-request latency/throughput metrics for the serving engine.
+
+`RequestResult` is what the engine hands back per request: the generated
+tokens plus the request-level latency numbers the repo's "latency" story
+was missing — TTFT (submission-to-first-token, queueing included: that is
+exactly what static batching inflates) and the steady decode rate.
+`summarize` aggregates a run into the p50/p95 TTFT + total-throughput
+record `benchmarks/bench_runtime.py` persists."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """One finished request."""
+    rid: Any
+    prompt_len: int
+    tokens: List[int]                 # all generated tokens, first included
+    finish_reason: str                # "eos" | "max_new_tokens" | "length_cap"
+    ttft_s: float                     # became-schedulable -> first token
+    finish_s: float                   # became-schedulable -> last token
+    admitted_step: int
+    finished_step: int
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def decode_tok_s(self) -> float:
+        """Steady decode rate: tokens after the first over post-TTFT time."""
+        dt = self.finish_s - self.ttft_s
+        return (self.n_tokens - 1) / dt if dt > 0 else 0.0
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile (p in [0, 100]); 0.0 on empty input."""
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    k = min(len(xs) - 1, max(0, int(round(p / 100.0 * (len(xs) - 1)))))
+    return float(xs[k])
+
+
+def summarize(results: List[RequestResult], wall_s: float) -> Dict[str, Any]:
+    """Aggregate a run: total token throughput + TTFT/decode-rate tails."""
+    ttfts = [r.ttft_s for r in results]
+    toks = sum(r.n_tokens for r in results)
+    return {
+        "requests": len(results),
+        "total_tokens": toks,
+        "wall_s": round(wall_s, 4),
+        "total_tok_s": round(toks / wall_s, 2) if wall_s > 0 else 0.0,
+        "ttft_p50_s": round(percentile(ttfts, 50), 4),
+        "ttft_p95_s": round(percentile(ttfts, 95), 4),
+        "decode_tok_s_p50": round(
+            percentile([r.decode_tok_s for r in results], 50), 2),
+        "finish_reasons": {
+            reason: sum(1 for r in results if r.finish_reason == reason)
+            for reason in sorted({r.finish_reason for r in results})},
+    }

@@ -1,0 +1,116 @@
+"""Request queue + slot scheduler for the continuous-batching engine.
+
+`Request` is the unit of work (one prompt, one generation budget); the
+`RequestQueue` holds submitted requests in arrival order, optionally gated
+by an ``arrival_step`` (trace replay: a request only becomes visible once
+the engine's decode-step clock reaches it).  The `Scheduler` decides which
+queued requests enter which free slots between decode steps:
+
+  * ``policy="continuous"`` (the engine default) admits ready requests into
+    EVERY free slot, every step — slots freed by retired requests are
+    refilled immediately while the rest of the batch keeps decoding.  This
+    is what makes mixed-length traffic cheap: a short request never holds
+    the batch hostage to the longest one.
+  * ``policy="static"`` is the classic static-batching baseline: requests
+    are admitted in gangs of up to ``max_batch`` and the next gang waits
+    until EVERY slot has retired.  `benchmarks/bench_runtime.py` runs both
+    policies over the same trace to measure what continuous batching buys.
+
+Both policies are FCFS; a request whose prompt cannot fit the engine's
+``max_len`` (prompt_len + 1 > max_len) is rejected at submission time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+POLICIES = ("continuous", "static")
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``prompt`` is a 1-D int32 token array; ``max_new_tokens`` caps the
+    generation (the first token — sampled from the prefill logits — counts);
+    ``eos_id`` retires the request early when sampled.  ``arrival_step``
+    hides the request from the scheduler until the engine's decode-step
+    clock reaches it (trace replay).  ``frontend`` optionally carries a
+    per-request cross-attention source row (vision/audio archs)."""
+    rid: Any
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    arrival_step: int = 0
+    frontend: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, dtype=np.int32).reshape(-1)
+        if self.prompt.size < 1:
+            raise ValueError(f"request {self.rid!r}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid!r}: max_new_tokens must be "
+                             f">= 1, got {self.max_new_tokens}")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.size)
+
+
+class RequestQueue:
+    """FCFS queue with arrival-step visibility."""
+
+    def __init__(self):
+        self._q: deque[Request] = deque()
+
+    def push(self, req: Request) -> None:
+        self._q.append(req)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __iter__(self):
+        return iter(self._q)
+
+    def ready(self, step: int) -> int:
+        """How many queued requests are visible at decode step ``step``."""
+        return sum(1 for r in self._q if r.arrival_step <= step)
+
+    def next_arrival(self) -> Optional[int]:
+        """Earliest arrival_step still queued (None when empty)."""
+        return min((r.arrival_step for r in self._q), default=None)
+
+    def pop_ready(self, step: int, k: int) -> List[Request]:
+        """Up to ``k`` visible requests, FCFS (non-visible ones keep their
+        relative order)."""
+        out: List[Request] = []
+        rest: deque[Request] = deque()
+        while self._q and len(out) < k:
+            r = self._q.popleft()
+            (out if r.arrival_step <= step else rest).append(r)
+        rest.extend(self._q)
+        self._q = rest
+        return out
+
+
+class Scheduler:
+    """Slot-admission policy over a `RequestQueue` (see module docstring)."""
+
+    def __init__(self, policy: str = "continuous"):
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, "
+                             f"got {policy!r}")
+        self.policy = policy
+
+    def admissions(self, queue: RequestQueue, free_slots: List[int],
+                   n_active: int, step: int) -> List[Tuple[int, Request]]:
+        """``[(slot, request), ...]`` to admit before the next decode step."""
+        if not free_slots:
+            return []
+        if self.policy == "static" and n_active > 0:
+            return []  # gang scheduling: wait for the whole batch to drain
+        reqs = queue.pop_ready(step, len(free_slots))
+        return list(zip(free_slots, reqs))

@@ -1,0 +1,87 @@
+"""Request traces: JSONL load/save + seeded synthetic mixed-length traffic.
+
+Trace format (one JSON object per line)::
+
+    {"id": "r0", "prompt": [3, 17, ...], "max_new_tokens": 12,
+     "arrival_step": 0, "eos_id": null}
+
+``prompt`` may be replaced by ``"prompt_len": N`` — the loader then draws N
+tokens deterministically from the request id (useful for shipping
+shape-only traces); that requires a ``vocab``.  `synthetic_trace` builds the
+mixed-length trace the engine benchmarks/CI replay when no file is given.
+"""
+from __future__ import annotations
+
+import json
+import zlib
+from pathlib import Path
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.scheduler import Request
+
+
+def synthetic_trace(n: int, *, vocab: int, min_prompt: int = 4,
+                    max_prompt: int = 32, min_new: int = 4,
+                    max_new: int = 16, seed: int = 0,
+                    arrival_every: int = 0) -> List[Request]:
+    """``n`` mixed-length requests with deterministic prompts.  With
+    ``arrival_every`` > 0, request i only becomes visible at decode step
+    ``i * arrival_every`` (a paced open-loop trace); 0 means everything is
+    queued up front (closed-loop, the worst case for static batching)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(min_prompt, max_prompt + 1))
+        gen = int(rng.integers(min_new, max_new + 1))
+        reqs.append(Request(
+            rid=f"r{i}",
+            prompt=rng.integers(0, vocab, size=plen).astype(np.int32),
+            max_new_tokens=gen,
+            arrival_step=i * arrival_every))
+    return reqs
+
+
+def load_trace(path, vocab: Optional[int] = None) -> List[Request]:
+    """Parse a JSONL trace file (see module docstring)."""
+    reqs = []
+    for ln, line in enumerate(Path(path).read_text().splitlines()):
+        line = line.strip()
+        if not line:
+            continue
+        doc = json.loads(line)
+        rid = doc.get("id", f"r{ln}")
+        if "prompt" in doc:
+            prompt = np.asarray(doc["prompt"], dtype=np.int32)
+        elif "prompt_len" in doc:
+            if vocab is None:
+                raise ValueError(f"{path}:{ln + 1}: shape-only trace entry "
+                                 f"(prompt_len) needs a vocab to draw tokens")
+            # crc32, not hash(): str hashes are salted per process, which
+            # would make "deterministic" prompts differ run to run
+            rng = np.random.default_rng(zlib.crc32(str(rid).encode()))
+            prompt = rng.integers(0, vocab,
+                                  size=int(doc["prompt_len"])).astype(np.int32)
+        else:
+            raise ValueError(f"{path}:{ln + 1}: trace entry needs 'prompt' "
+                             f"or 'prompt_len'")
+        reqs.append(Request(
+            rid=rid, prompt=prompt,
+            max_new_tokens=int(doc.get("max_new_tokens", 16)),
+            eos_id=doc.get("eos_id"),
+            arrival_step=int(doc.get("arrival_step", 0))))
+    return reqs
+
+
+def save_trace(path, requests: List[Request]) -> Path:
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    lines = []
+    for r in requests:
+        lines.append(json.dumps({
+            "id": r.rid, "prompt": [int(t) for t in r.prompt],
+            "max_new_tokens": r.max_new_tokens, "eos_id": r.eos_id,
+            "arrival_step": r.arrival_step}))
+    p.write_text("\n".join(lines) + "\n")
+    return p

@@ -808,3 +808,132 @@ def test_gap9_search_and_lowering():
                              KERNEL_SPLIT_TERNARY, KERNEL_FP)
         if len(lp.active_domains()) > 2:
             assert lp.kernel == KERNEL_FP and lp.note
+
+
+# --------------------------------------------------------------------------
+# grouped/depthwise conv im2col lowering (block-diagonal zero-embedding)
+# --------------------------------------------------------------------------
+
+def test_grouped_conv_planned_matches_lax_conv():
+    """A plan with ``groups`` executes a depthwise conv through the im2col
+    kernels via block-diagonal weight expansion — close to the exact
+    lax grouped conv (quantization tolerance), jit included."""
+    from repro.models import managed as mg
+    rng = np.random.default_rng(29)
+    c, g = 12, 4                      # 4 groups x 3 in-ch x 3 out-ch
+    doc = {
+        "schema_version": 2, "model": "gc",
+        "domains": [{"name": "int8", "weight_bits": 8, "act_bits": 8}],
+        "layers": [{"name": "gc", "searchable": False, "groups": g,
+                    "assignment": [0] * c, "counts": [c]}],
+    }
+    params = {"gc": {"w": jnp.asarray(rng.normal(size=(3, 3, c // g, c)) * 0.4,
+                                      jnp.float32),
+                     "b": jnp.asarray(rng.normal(size=(c,)) * 0.1,
+                                      jnp.float32)}}
+    plan = lower(doc, params=params)
+    assert plan["gc"].groups == g
+    backend = PlannedBackend(plan, params, interpret=True)
+    assert backend.fully_covered
+    x = jnp.asarray(rng.normal(size=(2, 6, 6, c)), jnp.float32)
+    fwd = jax.jit(lambda p, xx: mg.conv2d_linear(p["gc"], xx, groups=g,
+                                                 name="gc"))
+    with mg.matmul_backend(backend):
+        y = fwd(params, x)
+    assert not backend.runtime_declines
+    y_ref = mg.conv2d_linear(params["gc"], x, groups=g)
+    rel = float(jnp.linalg.norm(y - y_ref) /
+                jnp.maximum(jnp.linalg.norm(y_ref), 1e-9))
+    assert rel < 0.1, rel
+    # group-count mismatch at the call site is a loud error, not silent fp
+    with pytest.raises(ExecutionError, match="groups"):
+        backend("gc", params["gc"], x,
+                conv={"stride": 1, "padding": "SAME", "groups": 2})
+
+
+def test_grouped_conv_expansion_is_block_diagonal():
+    """`_expand_grouped`: input-channel block i only feeds output block i;
+    off-diagonal entries are exactly zero (they quantize to code 0)."""
+    from repro.runtime.execute import _expand_grouped
+    rng = np.random.default_rng(31)
+    w = jnp.asarray(rng.normal(size=(1, 1, 2, 6)), jnp.float32)   # g=3
+    full = np.asarray(_expand_grouped(w, 3))[0, 0]                # (6, 6)
+    for gi in range(3):
+        blk = full[gi * 2:(gi + 1) * 2, gi * 2:(gi + 1) * 2]
+        np.testing.assert_array_equal(blk, np.asarray(w)[0, 0][:,
+                                      gi * 2:(gi + 1) * 2])
+        off = np.delete(full[gi * 2:(gi + 1) * 2], np.s_[gi * 2:(gi + 1) * 2],
+                        axis=1)
+        assert (off == 0).all()
+
+
+@pytest.mark.slow
+def test_mbv1_artifact_full_coverage():
+    """ROADMAP open item: mbv1's own emitted artifact (depthwise convs
+    included) lowers and binds with FULL coverage — no trace-time declines,
+    no unbound layers."""
+    from repro.launch.train import emit_static_mapping
+    from repro.models import cnn as C
+    from repro.models import managed as mg
+    cfg = C.get_config("mobilenetv1_tiny")
+    init_fn, apply_fn, plan_fn = C.get_model(cfg)
+    params = init_fn(jax.random.PRNGKey(0), cfg, None)
+    hints = {n: (g, s) for (n, g, s) in plan_fn(cfg)}
+    import tempfile
+    from pathlib import Path
+    with tempfile.TemporaryDirectory() as td:
+        art = emit_static_mapping(params, cfg, "diana",
+                                  Path(td) / "m.json", plan_hints=hints)
+    dw_layers = [l for l in art.layers if l.get("groups", 1) > 1]
+    assert len(dw_layers) == 13          # every depthwise block emitted
+    assert all(not l["searchable"] for l in dw_layers)  # pinned (paper rule)
+    plan = lower(art, params=params)
+    backend = PlannedBackend(plan, params, interpret=True)
+    assert backend.fully_covered, backend.unbound
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, *cfg.img_hw, cfg.in_ch),
+                          jnp.float32)
+    fwd = jax.jit(lambda p, xb: apply_fn(p, xb, cfg, None, "fp", 1.0))
+    with mg.matmul_backend(backend):
+        y = jax.block_until_ready(fwd(params, x))
+    assert not backend.runtime_declines, backend.runtime_declines
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_grouped_conv_plan_json_roundtrip():
+    lp = LayerPlan(name="dw", kernel=KERNEL_QUANT, c_in=9 * 4, c_out=4,
+                   perm=np.arange(4), counts=[4], boundaries=[4],
+                   aligned_boundaries=[128], w_log_scales=[0.1],
+                   act_log_scale=None, groups=4)
+    plan = ExecutionPlan(model="m", domains=[{"name": "d", "weight_bits": 8,
+                                              "act_bits": 8}], layers=[lp])
+    back = ExecutionPlan.from_json(plan.to_json())
+    assert back["dw"].groups == 4
+
+
+# --------------------------------------------------------------------------
+# gpu_tc_like: GPU tensor-core platform (int8 + fp16 pair)
+# --------------------------------------------------------------------------
+
+def test_gpu_tc_platform_registered_and_fuses_split_precision():
+    plat = Platform.get("gpu_tc_like")
+    assert [d.name for d in plat.domains] == ["tc_int8", "tc_fp16"]
+    assert [d.weight_bits for d in plat.domains] == [8, 16]
+    caps = plat.kernel_capabilities()
+    # the mixed pairing fuses (int8 ordered first), no fallback note
+    kernel, note = caps[("tc_int8", "tc_fp16")]
+    assert kernel == KERNEL_SPLIT and not note
+    from repro.core.cost_models import LayerGeometry
+    lat = plat.cost_model().latency(LayerGeometry(c_in=16, c_out=32),
+                                    jnp.asarray([8.0, 8.0]))
+    assert lat.shape == (2,)
+    assert float(lat[0]) < float(lat[1])     # int8 MMA @2x throughput
+
+
+def test_gpu_tc_search_lowers_executably():
+    handle = mlp_handle(in_dim=48, widths=(24,), n_classes=10)
+    res = SearchPipeline(handle, "gpu_tc_like", config=TINY,
+                         data_fn=_data_fn()).run()
+    plan = lower(res.artifact, params=res.params, handle=handle)
+    for lp in plan.layers:
+        assert lp.kernel in (KERNEL_QUANT, KERNEL_SPLIT, KERNEL_FP)
+        assert not lp.note                   # every pairing has a kernel

@@ -21,6 +21,14 @@ This is the repo's perf baseline for the mapping-execution hot path.  Legs:
                          policies: total token throughput ratio + per-policy
                          p50/p95 TTFT (warmed jit caches; same greedy
                          tokens under both policies by construction)
+  * ``engine:yi9b_paged`` paged vs dense KV layout on the SAME engine:
+                         (a) a skewed-length trace (one long prompt among
+                         short ones) where the paged pool's peak in-use KV
+                         bytes must undercut the dense B x max_len pool
+                         while producing IDENTICAL tokens (asserted, every
+                         mode — the quick run is the CI parity gate), and
+                         (b) a shared-prefix trace through the prefix cache
+                         recording hit counts + TTFT
 
 The yi-9b legs run twice — ``stack_mode="grouped"`` (current) vs
 ``stack_mode="switch"`` (the PR 3 one-branch-per-repeat baseline) — and
@@ -306,18 +314,106 @@ def _bench_engine(leg: str, *, requests: int, max_batch: int,
     return rec
 
 
+def _bench_engine_paged(leg: str, *, quick: bool) -> dict:
+    """Paged-vs-dense KV layout on the serving engine (yi-9b reduced).
+
+    Skewed trace: one ``long_prompt`` request among short ones — the dense
+    layout allocates B x max_len up front (peak == capacity) while the
+    paged pool's peak tracks tokens actually in flight.  Token parity
+    between the layouts is ASSERTED in every mode (the --quick run is the
+    CI gate for it); the full run additionally asserts the >= 2x peak-KV
+    reduction the skew buys.  Shared-prefix trace: every prompt opens with
+    the same system prefix — later admissions map the first request's
+    pages (cold pass records the hit counts; a second, fully-resident pass
+    records warmed TTFT)."""
+    from repro.configs import base as cfgbase
+    from repro.models import transformer as T
+    from repro.serving import Engine, summarize, synthetic_trace
+
+    cfgbase.load_all()
+    cfg = cfgbase.reduce_for_smoke(cfgbase.get("yi-9b"))
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    n, B = (6, 2) if quick else (12, 4)
+    long_prompt = 32 if quick else 128
+    skew = synthetic_trace(n, vocab=cfg.vocab, min_prompt=4, max_prompt=8,
+                           min_new=2, max_new=6, seed=13,
+                           long_every=n, long_prompt=long_prompt)
+    max_len = max(r.prompt_len + r.max_new_tokens for r in skew)
+    rec = {"leg": leg, "model": cfg.name, "requests": n, "max_batch": B,
+           "max_len": max_len, "page_size": 8, "layouts": {}}
+
+    mk = lambda layout: Engine(cfg, params, max_batch=B, max_len=max_len,
+                               kv_layout=layout, page_size=8)
+    token_sets = {}
+    for layout in ("dense", "paged"):
+        eng = mk(layout)
+        eng.run(skew)                         # warm the jitted steps
+        results = eng.run(skew)               # timed pass
+        summ = summarize(results, eng.stats["wall_s"])
+        summ["kv_peak_bytes"] = eng.stats["kv_peak_bytes"]
+        summ["kv_capacity_bytes"] = eng.stats["kv_capacity_bytes"]
+        rec["layouts"][layout] = summ
+        token_sets[layout] = [r.tokens for r in results]
+        print(f"[bench] {leg}[{layout}]: {summ['total_tok_s']} tok/s, "
+              f"peak kv {summ['kv_peak_bytes']} / "
+              f"capacity {summ['kv_capacity_bytes']} bytes")
+    assert token_sets["paged"] == token_sets["dense"], \
+        "paged layout changed greedy tokens vs dense"
+    rec["paged_token_parity"] = True
+    rec["dense_vs_paged_peak_kv"] = round(
+        rec["layouts"]["dense"]["kv_peak_bytes"]
+        / max(rec["layouts"]["paged"]["kv_peak_bytes"], 1), 3)
+    if not quick:
+        assert rec["dense_vs_paged_peak_kv"] >= 2.0, rec
+    print(f"[bench] {leg}: token parity ok, paged peak KV "
+          f"x{rec['dense_vs_paged_peak_kv']} below dense on the skewed "
+          f"trace")
+
+    shared = 24
+    pre = synthetic_trace(n, vocab=cfg.vocab, min_prompt=4, max_prompt=8,
+                          min_new=2, max_new=6, seed=17,
+                          shared_prefix=shared)
+    eng = mk("paged")
+    eng.run(pre)                              # cold: first sharer populates
+    cold = {k: eng.stats[k] for k in
+            ("prefix_lookups", "prefix_hit_requests", "prefix_hit_tokens",
+             "cow_copies", "page_evictions")}
+    prompt_tokens = sum(r.prompt_len for r in pre)
+    results = eng.run(pre)                    # warmed: fully resident
+    summ = summarize(results, eng.stats["wall_s"])
+    rec["prefix"] = {
+        "shared_prefix": shared, "prompt_tokens": prompt_tokens,
+        "cold": cold,
+        "cold_hit_rate": round(cold["prefix_hit_tokens"] / prompt_tokens, 3),
+        # pool stats are cumulative across runs on one engine
+        "warm_hit_tokens": eng.stats["prefix_hit_tokens"]
+        - cold["prefix_hit_tokens"],
+        "warm_ttft_p50_s": summ["ttft_p50_s"],
+        "warm_ttft_p95_s": summ["ttft_p95_s"],
+        "warm_total_tok_s": summ["total_tok_s"],
+    }
+    assert cold["prefix_hit_tokens"] > 0, "shared-prefix trace missed cache"
+    print(f"[bench] {leg}[prefix]: prefix_hit_tokens="
+          f"{cold['prefix_hit_tokens']}/{prompt_tokens} cold "
+          f"({cold['prefix_hit_requests']} requests, "
+          f"{cold['cow_copies']} cow), warm ttft p50 "
+          f"{summ['ttft_p50_s'] * 1e3:.0f}ms")
+    return rec
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
                     help="smaller batch/seq/gen (the ci_smoke.sh leg)")
     ap.add_argument("--out", default="BENCH_runtime.json")
     ap.add_argument("--legs", default="all",
-                    help="comma list: zamba2,yi9b,cnn,engine (default all)")
+                    help="comma list: zamba2,yi9b,cnn,engine,paged "
+                         "(default all)")
     args = ap.parse_args(argv)
 
     requests, prompt_len, gen_len = (2, 8, 4) if args.quick else (4, 16, 12)
-    legs = (["zamba2", "yi9b", "cnn", "engine"] if args.legs == "all"
-            else args.legs.split(","))
+    legs = (["zamba2", "yi9b", "cnn", "engine", "paged"]
+            if args.legs == "all" else args.legs.split(","))
     results = []
 
     if "zamba2" in legs:
@@ -344,6 +440,9 @@ def main(argv=None):
             max_batch=(2 if args.quick else 4),
             max_prompt=8,
             max_new=(12 if args.quick else 24)))
+    if "paged" in legs:
+        results.append(_bench_engine_paged("engine:yi9b_paged",
+                                           quick=args.quick))
 
     doc = {
         "bench": "runtime_planned_serving",

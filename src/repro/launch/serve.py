@@ -178,9 +178,10 @@ def serve_engine(args, cfg, params, backend=None):
             min_prompt=max(2, args.prompt_len // 4),
             max_prompt=args.prompt_len,
             min_new=max(2, args.gen_len // 4), max_new=args.gen_len,
-            seed=args.seed)
+            seed=args.seed, shared_prefix=args.shared_prefix)
         print(f"[serve] synthetic trace: {len(trace)} mixed-length requests "
-              f"(prompts <= {args.prompt_len}, gen <= {args.gen_len})")
+              f"(prompts <= {args.prompt_len}, gen <= {args.gen_len}, "
+              f"shared prefix {args.shared_prefix})")
     if cfg.frontend:
         key = jax.random.PRNGKey(args.seed)
         for i, r in enumerate(trace):
@@ -190,7 +191,10 @@ def serve_engine(args, cfg, params, backend=None):
     max_len = args.max_len or max(r.prompt_len + r.max_new_tokens
                                   for r in trace)
     engine = Engine(cfg, params, max_batch=args.max_batch, max_len=max_len,
-                    backend=backend, scheduler=Scheduler(args.policy))
+                    backend=backend, scheduler=Scheduler(args.policy),
+                    kv_layout=args.kv_layout, page_size=args.page_size,
+                    num_pages=args.num_pages,
+                    prefill_chunk=args.prefill_chunk)
     results = engine.run(trace)
     for r in results:
         print(f"[serve]  {r.rid}: prompt={r.prompt_len} "
@@ -204,6 +208,18 @@ def serve_engine(args, cfg, params, backend=None):
           f"ttft p50 {summ['ttft_p50_s'] * 1e3:.0f}ms / "
           f"p95 {summ['ttft_p95_s'] * 1e3:.0f}ms, "
           f"{engine.stats['decode_steps']} decode steps)")
+    if args.kv_layout == "paged":
+        st = engine.stats
+        print(f"[serve] paged kv: page_size={engine.page_size} "
+              f"pool={engine.num_pages} pages "
+              f"kv_peak_pages={st['kv_peak_pages']} "
+              f"kv_peak_bytes={st['kv_peak_bytes']} "
+              f"(capacity {st['kv_capacity_bytes']}) "
+              f"prefix_hit_tokens={st['prefix_hit_tokens']} "
+              f"prefix_hit_requests={st['prefix_hit_requests']} "
+              f"(lookups {st['prefix_lookups']}) "
+              f"cow_copies={st['cow_copies']} "
+              f"evictions={st['page_evictions']}")
     return results, summ
 
 
@@ -281,6 +297,23 @@ def main(argv=None):
                     choices=["continuous", "static"],
                     help="engine admission policy (static = gang batching "
                          "baseline)")
+    ap.add_argument("--kv-layout", default="paged",
+                    choices=["paged", "dense"],
+                    help="KV-cache layout: paged (block-table pool with "
+                         "chunked prefill + prefix caching) or dense "
+                         "(B x max_len slots, the parity oracle)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged layout: tokens per KV page")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged layout: pool capacity in pages (default "
+                         "max_batch * ceil(max_len / page_size))")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="paged layout: prompt tokens prefilled per engine "
+                         "step (default 2 * page_size)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="synthetic --engine trace: prepend the same "
+                         "N-token system prefix to every prompt (exercises "
+                         "prefix caching)")
     ap.add_argument("--mapping", default=None,
                     help="mapping artifact JSON (repro.api schema); lowered "
                          "to per-layer ExecutionPlans, with the global "

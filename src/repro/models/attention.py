@@ -169,18 +169,66 @@ def cache_update(buf, val, index):
     return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), start)
 
 
+# ------------------------------------------------------------- paged KV pool
+
+def _paged_rows(pool, val, pages, index, mask):
+    """Flat row indices of ``val (B, S, ...)`` in ``pool (P, ps, ...)``.
+
+    ``pages`` is the (B, W) int32 page table; ``index`` the (B,)-or-scalar
+    starting logical position.  Row 0 of the pool is the TRASH page: masked
+    (padding) writes and any position whose page-table entry is 0 land
+    there, so a slot with a zeroed table can never corrupt live pages."""
+    B, S = val.shape[:2]
+    W, ps = pages.shape[1], pool.shape[1]
+    pos = jnp.reshape(jnp.asarray(index), (-1, 1)) + jnp.arange(S)[None, :]
+    logical = jnp.clip(pos // ps, 0, W - 1)
+    phys = jnp.take_along_axis(pages, logical, axis=1) * ps + pos % ps
+    valid = pos < W * ps
+    if mask is not None:
+        valid = valid & mask
+    return jnp.where(valid, phys, 0)
+
+
+def paged_update(pool, val, pages, index, mask=None):
+    """Scatter ``val (B, S, ...)`` into the shared page pool ``pool
+    (P, ps, ...)`` at per-slot logical positions ``index`` under page table
+    ``pages (B, W)``; ``mask (B, S)`` suppresses padding writes (they hit
+    the trash page, row 0)."""
+    rows = _paged_rows(pool, val, pages, index, mask)
+    B, S = val.shape[:2]
+    feat = pool.shape[2:]
+    flat = pool.reshape((pool.shape[0] * pool.shape[1],) + feat)
+    flat = flat.at[rows.reshape(-1)].set(
+        val.astype(pool.dtype).reshape((B * S,) + feat))
+    return flat.reshape(pool.shape)
+
+
+def paged_gather(pool, pages):
+    """Gather each slot's pages into a dense (B, W*ps, ...) sequence view —
+    `full_attention`'s q_pos0/kv_len masking then applies unchanged (the
+    tail beyond kv_len, including any trash-page rows, is masked out)."""
+    B, W = pages.shape
+    ps = pool.shape[1]
+    return pool[pages].reshape((B, W * ps) + pool.shape[2:])
+
+
 # ---------------------------------------------------------------- GQA layer
 
 def gqa(p, x, positions, cfg: AttnConfig, *, cache=None, cache_index=None,
-        chunked=False, kv_override=None, name=None):
+        chunked=False, kv_override=None, pages=None, write_mask=None,
+        name=None):
     """Grouped-query attention.
 
     cache: optional dict {"k","v"} of (B, S_max, KVH, hd) + writes at
     ``cache_index`` — a scalar, or a ``(B,)`` array of per-slot positions
     (the continuous-batching decode path; masks then build per slot);
     decode passes S==1 inputs.  kv_override supplies precomputed (k, v) for
-    cross-attention.  ``name``: this block's pytree path, threaded into the
-    projections' matmul-backend calls.
+    cross-attention.  With ``pages`` (a (B, W) page table) the cache leaves
+    are the SHARED (num_pages, page_size, ...) pool instead: writes scatter
+    through the table (`paged_update`, padding suppressed by ``write_mask``)
+    and reads attend over the gathered per-slot view (`paged_gather`) under
+    the same q_pos0/kv_len masks.  ``name``: this block's pytree path,
+    threaded into the projections' matmul-backend calls.
     """
     B, S, D = x.shape
     H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -195,6 +243,14 @@ def gqa(p, x, positions, cfg: AttnConfig, *, cache=None, cache_index=None,
     else:
         k, v = kv_override
 
+    if pages is not None:
+        upd = partial(paged_update, pages=pages, index=cache_index,
+                      mask=write_mask)
+        view = partial(paged_gather, pages=pages)
+    else:
+        upd = partial(cache_update, index=cache_index)
+        view = lambda buf: buf
+
     kv_len = None
     if cache is not None:
         if cache["k"].dtype == jnp.int8:
@@ -203,15 +259,16 @@ def gqa(p, x, positions, cfg: AttnConfig, *, cache=None, cache_index=None,
             enc = lambda t: jnp.clip(jnp.round(t.astype(jnp.float32) *
                                                KV_QSCALE), -127, 127
                                      ).astype(jnp.int8)
-            kc = cache_update(cache["k"], enc(k), cache_index)
-            vc = cache_update(cache["v"], enc(v), cache_index)
+            kc = upd(cache["k"], enc(k))
+            vc = upd(cache["v"], enc(v))
             new_cache = {"k": kc, "v": vc}
-            k = kc.astype(x.dtype) * (1.0 / KV_QSCALE)
-            v = vc.astype(x.dtype) * (1.0 / KV_QSCALE)
+            k = view(kc).astype(x.dtype) * (1.0 / KV_QSCALE)
+            v = view(vc).astype(x.dtype) * (1.0 / KV_QSCALE)
         else:
-            k = cache_update(cache["k"], k, cache_index)
-            v = cache_update(cache["v"], v, cache_index)
-            new_cache = {"k": k, "v": v}
+            kc = upd(cache["k"], k)
+            vc = upd(cache["v"], v)
+            new_cache = {"k": kc, "v": vc}
+            k, v = view(kc), view(vc)
         kv_len = cache_index + S
     else:
         new_cache = None
@@ -261,9 +318,11 @@ def init_mla(key, cfg: MLAConfig, dtype=jnp.bfloat16):
 
 
 def mla(p, x, positions, cfg: MLAConfig, *, cache=None, cache_index=None,
-        chunked=False, name=None):
+        chunked=False, pages=None, write_mask=None, name=None):
     """Multi-head Latent Attention (DeepSeek-V2). Cache holds the compressed
-    latent + shared rope key: (B, S_max, kv_lora_rank + qk_rope_dim)."""
+    latent + shared rope key: (B, S_max, kv_lora_rank + qk_rope_dim) — or,
+    with ``pages``, the shared (num_pages, page_size, r + rd) pool read
+    through the per-slot page table (see `gqa`)."""
     B, S, D = x.shape
     H = cfg.n_heads
     nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -277,22 +336,31 @@ def mla(p, x, positions, cfg: MLAConfig, *, cache=None, cache_index=None,
     latent = L.norm(p["kv_norm"], latent)
     k_rope = L.rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
 
+    if pages is not None:
+        upd = partial(paged_update, pages=pages, index=cache_index,
+                      mask=write_mask)
+        view = partial(paged_gather, pages=pages)
+    else:
+        upd = partial(cache_update, index=cache_index)
+        view = lambda buf: buf
+
     kv_len = None
     if cache is not None:
         packed = jnp.concatenate([latent, k_rope], axis=-1)
         if cache["latent"].dtype == jnp.int8:
             codes = jnp.clip(jnp.round(packed.astype(jnp.float32) *
                                        KV_QSCALE), -127, 127).astype(jnp.int8)
-            buf = cache_update(cache["latent"], codes, cache_index)
+            buf = upd(cache["latent"], codes)
             new_cache = {"latent": buf}
-            deq = buf.astype(x.dtype) * (1.0 / KV_QSCALE)
+            deq = view(buf).astype(x.dtype) * (1.0 / KV_QSCALE)
             latent = deq[..., :cfg.kv_lora_rank]
             k_rope = deq[..., cfg.kv_lora_rank:]
         else:
-            buf = cache_update(cache["latent"], packed, cache_index)
+            buf = upd(cache["latent"], packed)
             new_cache = {"latent": buf}
-            latent = buf[..., :cfg.kv_lora_rank]
-            k_rope = buf[..., cfg.kv_lora_rank:]
+            seq = view(buf)
+            latent = seq[..., :cfg.kv_lora_rank]
+            k_rope = seq[..., cfg.kv_lora_rank:]
         kv_len = cache_index + S
     else:
         new_cache = None

@@ -139,7 +139,7 @@ def init_shared_block(key, cfg: ArchConfig):
 
 def block_apply(p, x, kind, cfg: ArchConfig, positions, *, cache=None,
                 cache_index=None, cross_kv=None, chunked=False, shared=None,
-                name=None, length_mask=None):
+                name=None, length_mask=None, pages=None):
     """One block. Returns (x, new_cache, aux_loss).
 
     ``name`` is the block's params-pytree path prefix (``"units/3"``,
@@ -153,18 +153,25 @@ def block_apply(p, x, kind, cfg: ArchConfig, positions, *, cache=None,
     ``(B,)`` array of per-slot cache positions, and ``length_mask`` (B, S)
     marks the valid tokens of a ragged batch — together these are the
     continuous-batching serving path: recurrent/MoE layers suppress masked
-    tokens exactly, attention writes and masks the KV cache per slot."""
+    tokens exactly, attention writes and masks the KV cache per slot.
+
+    ``pages`` (B, W) switches the attention KV leaves to the paged layout
+    (shared page pool + per-slot page table, `attention.paged_update` /
+    `paged_gather`); per-slot state (recurrent, encoder memory) is O(1) per
+    slot and stays slot-indexed either way."""
     aux = 0.0
     if kind in ("attn", "mla"):
         h = L.norm(p["norm1"], x, cfg.norm)
         if kind == "attn":
             ao, nc = A.gqa(p["attn"], h, positions, _attn_cfg(cfg),
                            cache=cache, cache_index=cache_index,
-                           chunked=chunked, name=_j(name, "attn"))
+                           chunked=chunked, pages=pages,
+                           write_mask=length_mask, name=_j(name, "attn"))
         else:
             ao, nc = A.mla(p["attn"], h, positions, _mla_cfg(cfg),
                            cache=cache, cache_index=cache_index,
-                           chunked=chunked, name=_j(name, "attn"))
+                           chunked=chunked, pages=pages,
+                           write_mask=length_mask, name=_j(name, "attn"))
         if cfg.parallel_block and "ffn" in p:
             x = x + ao + L.ffn(p["ffn"], h, cfg.act, _j(name, "ffn"))
         else:
@@ -203,7 +210,8 @@ def block_apply(p, x, kind, cfg: ArchConfig, positions, *, cache=None,
             self_cache = {"k": cache["k"], "v": cache["v"]}
         ao, nc = A.gqa(p["attn"], h, positions, _attn_cfg(cfg),
                        cache=self_cache, cache_index=cache_index,
-                       chunked=chunked, name=_j(name, "attn"))
+                       chunked=chunked, pages=pages, write_mask=length_mask,
+                       name=_j(name, "attn"))
         x = x + ao
         hx = L.norm(p["normx"], x, cfg.norm)
         if cache is not None and cross_kv is not None:      # prefill: store
@@ -237,6 +245,7 @@ def block_apply(p, x, kind, cfg: ArchConfig, positions, *, cache=None,
         h = L.norm(p["norm1"], x, cfg.norm)
         ao, nc = A.gqa(shared["attn"], h, positions, _attn_cfg(cfg),
                        cache=cache, cache_index=cache_index, chunked=chunked,
+                       pages=pages, write_mask=length_mask,
                        name="shared/attn")
         x = x + ao
         x = x + L.ffn(shared["ffn"],
@@ -340,12 +349,13 @@ def encode(params, cfg: ArchConfig, frames):
 
 def backbone(params, cfg: ArchConfig, x, positions, *, caches=None,
              cache_index=None, cross_source=None, chunked=False,
-             remat=False, length_mask=None):
+             remat=False, length_mask=None, pages=None):
     """Run all layers. caches: None or pytree matching cache_specs.
     Returns (hidden, new_caches, aux).
 
     ``cache_index`` scalar or (B,) per-slot positions, ``length_mask``
-    (B, S) valid-token mask — see `block_apply`."""
+    (B, S) valid-token mask, ``pages`` (B, W) paged-KV page table — see
+    `block_apply`."""
     from repro.distributed.sharding import constrain
     period = len(cfg.pattern)
     shared = params.get("shared")
@@ -371,7 +381,7 @@ def backbone(params, cfg: ArchConfig, x, positions, *, caches=None,
                     blk, x, kind, cfg, positions, cache=c,
                     cache_index=cache_index, cross_kv=ckv, chunked=chunked,
                     shared=shared, name=f"units/{i}",
-                    length_mask=length_mask)
+                    length_mask=length_mask, pages=pages)
                 aux = aux + a
                 new_cache.append(nc)
         x = constrain(x, "act")
@@ -384,7 +394,7 @@ def backbone(params, cfg: ArchConfig, x, positions, *, caches=None,
                                  positions, cache=fd_cache,
                                  cache_index=cache_index, chunked=chunked,
                                  shared=shared, name="first_dense",
-                                 length_mask=length_mask)
+                                 length_mask=length_mask, pages=pages)
         units = params["units"]  # init_lm already excluded layer 0
     else:
         x, nfc, a0 = x, None, 0.0
@@ -404,7 +414,7 @@ def backbone(params, cfg: ArchConfig, x, positions, *, caches=None,
             x, nc, a = block_apply(blk, x, kind, cfg, positions, cache=c,
                                    cache_index=cache_index, chunked=chunked,
                                    shared=shared, name=f"rem/{i}",
-                                   length_mask=length_mask)
+                                   length_mask=length_mask, pages=pages)
             aux = aux + a
             new_rem.append(nc)
 
@@ -529,37 +539,104 @@ def _materialize(spec, make):
     return make(shape, dt)
 
 
-def cache_specs(cfg: ArchConfig, B: int, S_max: int, concrete=False):
+def _assemble_caches(cfg: ArchConfig, block_fn, stacked, plain):
+    """Shared layout walk for every cache-shaped pytree: ``block_fn(kind)``
+    emits one block's leaf dict; ``stacked(leaf, repeats)`` builds the
+    scan-stacked "units" version of a leaf, ``plain(leaf)`` the unstacked
+    "rem"/"first" version."""
     period = len(cfg.pattern)
     repeats = cfg.n_layers // period
     if cfg.moe_first_dense and period == 1:
         repeats -= 1  # layer 0 cache lives under "first"
-    make = (lambda s, d: jnp.zeros(s, d)) if concrete else \
-        (lambda s, d: jax.ShapeDtypeStruct(s, d))
 
-    def stack(spec):
+    def walk(spec, leaf):
         if spec is None:
             return None
         if isinstance(spec, dict):
-            return {k: stack(v) for k, v in spec.items()}
-        shape, dt = spec
-        return make((repeats, *shape), dt)
+            return {k: walk(v, leaf) for k, v in spec.items()}
+        return leaf(spec)
 
     caches = {"units": tuple(
-        stack(_block_cache_spec(cfg, kind, B, S_max)) for kind in cfg.pattern)}
+        walk(block_fn(kind), lambda sp: stacked(sp, repeats))
+        for kind in cfg.pattern)}
     rem = _zamba_remainder(cfg)
     if rem:
-        caches["rem"] = [
-            _materialize(_block_cache_spec(cfg, cfg.pattern[i % period], B, S_max),
-                         make) for i in range(rem)]
+        caches["rem"] = [walk(block_fn(cfg.pattern[i % period]), plain)
+                         for i in range(rem)]
     if cfg.moe_first_dense:
-        caches["first"] = _materialize(
-            _block_cache_spec(cfg, cfg.pattern[0], B, S_max), make)
+        caches["first"] = walk(block_fn(cfg.pattern[0]), plain)
     return caches
+
+
+def cache_specs(cfg: ArchConfig, B: int, S_max: int, concrete=False):
+    make = (lambda s, d: jnp.zeros(s, d)) if concrete else \
+        (lambda s, d: jax.ShapeDtypeStruct(s, d))
+    return _assemble_caches(
+        cfg, lambda kind: _block_cache_spec(cfg, kind, B, S_max),
+        stacked=lambda sp, r: make((r, *sp[0]), sp[1]),
+        plain=lambda sp: make(*sp))
 
 
 def init_cache(cfg: ArchConfig, B: int, S_max: int):
     return cache_specs(cfg, B, S_max, concrete=True)
+
+
+# ------------------------------------------------------------ paged KV pool
+
+# Sequence-indexed attention-KV leaves — the ones a paged layout moves from
+# per-slot (B, S_max, ...) buffers into the shared page pool.  Everything
+# else (recurrent state, conv tails, encoder memory) is O(1)-per-slot and
+# stays slot-indexed in both layouts.
+_PAGED_KEYS = frozenset({"k", "v", "latent"})
+_SEQ_KINDS = frozenset({"attn", "dec", "shared_attn", "mla"})
+
+
+def _paged_block_cache_spec(cfg: ArchConfig, kind: str, B: int,
+                            pool_rows: int, page_size: int):
+    spec = _block_cache_spec(cfg, kind, B, 1)
+    if kind not in _SEQ_KINDS:
+        return spec
+    for key in spec:
+        if key in _PAGED_KEYS:
+            (_, _, *feat), dt = spec[key]
+            spec[key] = ((pool_rows, page_size, *feat), dt)
+    return spec
+
+
+def paged_cache_specs(cfg: ArchConfig, B: int, pool_rows: int,
+                      page_size: int, concrete=False):
+    """Cache pytree for the PAGED layout: attention-KV leaves become the
+    shared ``(pool_rows, page_size, ...)`` page pool (``pool_rows`` includes
+    the trash row 0 — pass num_pages + 1); per-slot state keeps its dense
+    shape.  Same tree structure as `cache_specs`."""
+    make = (lambda s, d: jnp.zeros(s, d)) if concrete else \
+        (lambda s, d: jax.ShapeDtypeStruct(s, d))
+    return _assemble_caches(
+        cfg, lambda kind: _paged_block_cache_spec(cfg, kind, B, pool_rows,
+                                                  page_size),
+        stacked=lambda sp, r: make((r, *sp[0]), sp[1]),
+        plain=lambda sp: make(*sp))
+
+
+def init_paged_cache(cfg: ArchConfig, B: int, pool_rows: int, page_size: int):
+    return paged_cache_specs(cfg, B, pool_rows, page_size, concrete=True)
+
+
+def cache_kv_axes(cfg: ArchConfig):
+    """Marker pytree (same structure as `cache_specs`/`paged_cache_specs`):
+    ``"page"`` for sequence-indexed attention-KV leaves, ``"slot"`` for
+    per-slot state, with the count of leading scan-stack axes appended —
+    ``"page1"`` means "KV leaf whose pool/batch axis sits at axis 1 under
+    the stacked repeats".  This is what the engine's jitted slot-reset /
+    page-copy helpers and the KV-byte accounting use to address leaves of
+    either layout."""
+    def roles(kind):
+        spec = _block_cache_spec(cfg, kind, 1, 1)
+        return {key: ("page" if kind in _SEQ_KINDS and key in _PAGED_KEYS
+                      else "slot") for key in spec}
+    return _assemble_caches(cfg, roles,
+                            stacked=lambda role, r: role + "1",
+                            plain=lambda role: role + "0")
 
 
 def cache_batch_axes(caches):
@@ -619,17 +696,50 @@ def prefill(params, cfg: ArchConfig, tokens, caches, cross_source=None,
     return logits, caches
 
 
+def prefill_chunk(params, cfg: ArchConfig, tokens, caches, index, valid,
+                  pages, cross_source=None):
+    """One fixed-size chunk of a paged CHUNKED prefill.
+
+    ``tokens`` (B, C) holds the next (up to C) prompt tokens of every
+    currently-prefilling slot, left-aligned; ``index`` (B,) is each slot's
+    prefill progress (tokens already in its pages) and ``valid`` (B,) how
+    many of this chunk's tokens are real — 0 for slots that are decoding or
+    idle, whose rows are fully masked: attention writes land in the trash
+    page and recurrent state carries through unchanged (`ssm` masked steps
+    are exact identities), so interleaving chunks with decode steps cannot
+    perturb other slots.  Recurrent state accumulated in ``caches`` across
+    calls IS the carried chunk boundary state.  Returns (logits at each
+    slot's last valid token — the slot's first generated token once its
+    whole prompt is in, garbage before that — and the updated caches)."""
+    B, C = tokens.shape
+    index = jnp.asarray(index)
+    valid = jnp.asarray(valid)
+    x = params["emb"][tokens]
+    positions = index[:, None] + jnp.arange(C)[None, :]
+    length_mask = jnp.arange(C)[None, :] < valid[:, None]
+    if cfg.frontend == "audio" and cross_source is not None:
+        cross_source = encode(params, cfg, cross_source)
+    h, caches, _ = backbone(params, cfg, x, positions, caches=caches,
+                            cache_index=index, cross_source=cross_source,
+                            length_mask=length_mask, pages=pages)
+    last = jnp.clip(valid - 1, 0, C - 1)
+    h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+    logits = _project_logits(params, cfg, h_last)
+    return logits, caches
+
+
 def decode_step(params, cfg: ArchConfig, token, caches, index,
-                cross_source=None, active=None):
+                cross_source=None, active=None, pages=None):
     """One decode step. token (B,), index: position of the new token — a
     scalar (classic same-length batch) or a ``(B,)`` array of PER-SLOT cache
     lengths (continuous batching: each slot's token lands at that slot's own
     position and attention masks the cache per slot).  ``active`` (B,) bool
     marks live slots: retired/empty slots are suppressed in cross-slot
     coupling (MoE capacity) and their recurrent states carry through
-    unchanged — their logits are garbage by contract.  Cross-attention KV
-    (frontend/encoder memory) is read from the cache written at prefill —
-    cross_source is ignored here."""
+    unchanged — their logits are garbage by contract.  ``pages`` (B, W)
+    switches attention KV to the paged pool layout (see `block_apply`).
+    Cross-attention KV (frontend/encoder memory) is read from the cache
+    written at prefill — cross_source is ignored here."""
     x = params["emb"][token][:, None, :]
     B = x.shape[0]
     positions = (jnp.asarray(index)[:, None] if jnp.ndim(index) == 1
@@ -637,7 +747,7 @@ def decode_step(params, cfg: ArchConfig, token, caches, index,
     length_mask = None if active is None else jnp.asarray(active)[:, None]
     h, caches, _ = backbone(params, cfg, x, positions, caches=caches,
                             cache_index=index, cross_source=None,
-                            length_mask=length_mask)
+                            length_mask=length_mask, pages=pages)
     logits = _project_logits(params, cfg, h[:, -1])
     return logits, caches
 

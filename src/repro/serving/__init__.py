@@ -8,31 +8,66 @@ planned split-precision kernels are exercised under realistic mixed-length
 traffic, and "latency" means request-level TTFT and tokens/s — not a
 same-length batch's wall time.
 
+KV lives in a PAGED cache by default: a shared pool of ``num_pages``
+fixed-size pages (page_size tokens each, 16 by default — big enough to
+amortize gather indexing, small enough that a short request wastes less
+than one page per slot), with each slot mapping logical positions through a
+``(W,)`` int32 page-table row.  Peak KV memory therefore tracks tokens in
+flight rather than B x worst-case ``max_len``; prompts stream in CHUNKS
+interleaved with other slots' decode steps; and prompt pages are
+content-hashed so requests sharing a system prefix map the SAME pages
+(copy-on-write for a partially covered tail page) instead of recomputing
+it.  ``kv_layout="dense"`` keeps the PR-5 B x max_len layout as the parity
+oracle.
+
 Architecture
-    `Engine` (engine.py)        the serving loop: jitted ragged prefill +
-                                one jitted per-slot-masked decode step over
-                                a fixed B-slot cache pool; optional
-                                `repro.runtime.PlannedBackend` so every
-                                covered projection runs its mapped kernel.
+    `Engine` (engine.py)        the serving loop: chunked prefill + one
+                                jitted page-table decode step over the
+                                shared page pool (dense: ragged prefill +
+                                per-slot-masked decode over B fixed slots);
+                                optional `repro.runtime.PlannedBackend` so
+                                every covered projection runs its mapped
+                                kernel.
+    `PagePool` (paged.py)       host-side refcounted page allocator +
+                                exact-token-prefix hash index with LRU
+                                parking of retired-but-cached pages and
+                                copy-on-write sharing.
     `Scheduler` / `RequestQueue` (scheduler.py)
                                 FCFS admission into freed slots between
                                 decode steps ("continuous", default) or
                                 gang-batched ("static", the baseline the
-                                benchmarks compare against).
+                                benchmarks compare against).  Paged
+                                admission is "fits in free pages" (with
+                                head-of-line blocking), not
+                                ``prompt_len < max_len``.
     `BatchState` (batch.py)     the B slots: per-slot sequence lengths
-                                (= KV-cache positions), active flags, last
-                                tokens, and the device cache pool.
+                                (= KV positions), active/prefilling flags,
+                                page-table rows, last tokens, retire
+                                predicate mirrors, and the device cache
+                                pool.
     `RequestResult` / `summarize` (metrics.py)
                                 per-request TTFT + decode tok/s, p50/p95
                                 aggregation.
     traces (trace.py)           JSONL request traces + seeded synthetic
-                                mixed-length traffic.
+                                mixed-length / skewed-length /
+                                shared-prefix traffic.
 
-Request lifecycle
-    submitted -> (arrival_step reached) ready -> admitted into a free slot
-    [ragged prefill -> first token, TTFT clock stops] -> per-slot decode
-    steps -> retired on eos_id / max_new_tokens / pool length cap -> slot
-    freed for the next admission (no drain barrier).
+Request lifecycle (paged)
+    submitted -> (arrival_step reached) ready -> fits in free pages ->
+    pages reserved (prefix-cache hits map shared pages; only the unique
+    suffix needs compute) -> chunked prefill, ``prefill_chunk`` tokens per
+    engine step interleaved with decode of other slots -> first token,
+    TTFT clock stops -> per-slot decode steps -> retired on eos_id /
+    max_new_tokens / page-capacity cap -> pages released (hashed prefix
+    pages park in an LRU and stay matchable; the rest return to the free
+    list).
+
+Prefix caching is enabled automatically only where sharing is exact:
+attention-only, non-MoE, frontend-free archs.  Recurrent (SSM/xLSTM)
+per-slot state is not page-resident, and MoE capacity dispatch depends on
+batch composition, so their prompts are always recomputed — chunked
+prefill still applies (masked chunk steps are exact identities, so
+recurrent state carries across chunk boundaries).
 
 Example::
 
@@ -60,14 +95,15 @@ Exactness
     identical batches.
 """
 from repro.serving.batch import BatchState, SlotState
-from repro.serving.engine import Engine
+from repro.serving.engine import KV_LAYOUTS, Engine
 from repro.serving.metrics import RequestResult, percentile, summarize
+from repro.serving.paged import PagePool
 from repro.serving.scheduler import (POLICIES, Request, RequestQueue,
                                      Scheduler)
 from repro.serving.trace import load_trace, save_trace, synthetic_trace
 
 __all__ = [
-    "BatchState", "Engine", "POLICIES", "Request", "RequestQueue",
-    "RequestResult", "Scheduler", "SlotState", "load_trace", "percentile",
-    "save_trace", "summarize", "synthetic_trace",
+    "BatchState", "Engine", "KV_LAYOUTS", "PagePool", "POLICIES", "Request",
+    "RequestQueue", "RequestResult", "Scheduler", "SlotState", "load_trace",
+    "percentile", "save_trace", "summarize", "synthetic_trace",
 ]

@@ -3,8 +3,17 @@
 `BatchState` owns the fixed pool of B decode slots: the per-slot sequence
 lengths (each slot's KV-cache position), the per-slot last sampled token and
 active flags — all host-side numpy, handed to the jitted decode step each
-call — plus the device-side cache pool pytree (`transformer.init_cache`
-layout) that `transformer.scatter_cache` writes admitted requests into.
+call — plus the device-side cache pool pytree (dense `transformer.init_cache`
+or paged `init_paged_cache` layout).
+
+Under the PAGED layout it additionally carries the per-slot page tables
+(``page_table`` (B, W) int32 rows of page-pool indices, 0 = unmapped/trash)
+and the chunked-prefill progress state: a slot being prefilled is BUSY
+(``prefilling``, not eligible for admission) but not yet ACTIVE (not
+decoding); ``fill_pos`` tracks how many prompt tokens are already in its
+pages.  Retire-predicate inputs (``eos_id``/``max_new``/``n_gen``) are
+mirrored into numpy arrays at assignment so the engine's post-decode retire
+sweep is one vectorized pass over host data — no per-slot device sync.
 
 Host-side per-slot bookkeeping (the request occupying the slot, its
 generated tokens, timing marks) lives in `SlotState`; nothing here touches
@@ -30,30 +39,83 @@ class SlotState:
     admitted_step: int = 0
 
 
-class BatchState:
-    """Fixed B slots of decode state (see module docstring)."""
+@dataclasses.dataclass
+class PendingPrefill:
+    """A request whose prompt is still streaming into its pages."""
+    request: Request
+    t_ready: float = 0.0
+    admitted_step: int = 0
 
-    def __init__(self, max_batch: int, caches):
+
+class BatchState:
+    """Fixed B slots of decode state (see module docstring).
+
+    ``pages_per_slot`` (W) switches on the paged bookkeeping; dense-layout
+    engines leave it None and never touch the page fields."""
+
+    def __init__(self, max_batch: int, caches, pages_per_slot: int = None):
         self.max_batch = int(max_batch)
         self.caches = caches                       # device cache pool
         self.lengths = np.zeros(self.max_batch, np.int32)
         self.active = np.zeros(self.max_batch, bool)
         self.last_tok = np.zeros(self.max_batch, np.int32)
         self.slots: List[Optional[SlotState]] = [None] * self.max_batch
+        # vectorized-retire inputs, mirrored from the request at assignment
+        self.eos_id = np.full(self.max_batch, -1, np.int64)
+        self.max_new = np.zeros(self.max_batch, np.int64)
+        self.n_gen = np.zeros(self.max_batch, np.int64)
+        # paged layout: page tables + chunked-prefill progress
+        self.pages_per_slot = pages_per_slot
+        if pages_per_slot is not None:
+            self.page_table = np.zeros((self.max_batch, int(pages_per_slot)),
+                                       np.int32)
+            self.slot_pages: List[List[int]] = [[] for _ in
+                                                range(self.max_batch)]
+        self.prefilling = np.zeros(self.max_batch, bool)
+        self.fill_pos = np.zeros(self.max_batch, np.int32)
+        self.pending: List[Optional[PendingPrefill]] = \
+            [None] * self.max_batch
 
     # ---- queries ---------------------------------------------------------
 
     def free_slots(self) -> List[int]:
-        return [b for b in range(self.max_batch) if not self.active[b]]
+        """Slots holding neither a decoding nor a prefilling request."""
+        return [b for b in range(self.max_batch)
+                if not (self.active[b] or self.prefilling[b])]
 
     @property
     def n_active(self) -> int:
         return int(self.active.sum())
 
+    @property
+    def n_busy(self) -> int:
+        """Active + prefilling (what gang scheduling must wait out)."""
+        return int((self.active | self.prefilling).sum())
+
     def any_active(self) -> bool:
         return bool(self.active.any())
 
+    def any_busy(self) -> bool:
+        return bool((self.active | self.prefilling).any())
+
     # ---- transitions -----------------------------------------------------
+
+    def start_prefill(self, slot: int, req: Request, pages: List[int],
+                      hit_len: int, t_ready: float, step: int) -> None:
+        """Begin chunked prefill of ``req`` in ``slot``: map its ``pages``
+        into the slot's page table and start streaming the prompt at
+        position ``hit_len`` (>0 when a cached prefix was matched — those
+        tokens' KV is already resident in the shared pages)."""
+        if self.active[slot] or self.prefilling[slot]:
+            raise RuntimeError(f"slot {slot} is busy")
+        self.prefilling[slot] = True
+        self.fill_pos[slot] = hit_len
+        self.lengths[slot] = hit_len
+        self.slot_pages[slot] = list(pages)
+        self.page_table[slot, :] = 0
+        self.page_table[slot, :len(pages)] = pages
+        self.pending[slot] = PendingPrefill(request=req, t_ready=t_ready,
+                                            admitted_step=step)
 
     def assign(self, slot: int, req: Request, first_token: int,
                t_ready: float, t_first: float, step: int) -> SlotState:
@@ -67,16 +129,23 @@ class BatchState:
         self.slots[slot] = st
         self.lengths[slot] = req.prompt_len
         self.active[slot] = True
+        self.prefilling[slot] = False
+        self.pending[slot] = None
         self.last_tok[slot] = int(first_token)
+        self.eos_id[slot] = -1 if req.eos_id is None else int(req.eos_id)
+        self.max_new[slot] = int(req.max_new_tokens)
+        self.n_gen[slot] = 1
         return st
 
     def retire(self, slot: int) -> SlotState:
         """Free ``slot`` and return its bookkeeping (the engine turns it
         into a `RequestResult`).  The cache pool is left as-is — admission
-        overwrites the slot's cache wholesale."""
+        overwrites/remaps the slot's cache wholesale."""
         st = self.slots[slot]
         if st is None:
             raise RuntimeError(f"slot {slot} is not occupied")
         self.active[slot] = False
         self.slots[slot] = None
+        self.eos_id[slot] = -1
+        self.n_gen[slot] = 0
         return st

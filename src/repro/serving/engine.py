@@ -1,30 +1,44 @@
 """`Engine`: continuous-batching inference over (optionally planned) LMs.
 
-One engine owns a fixed pool of ``max_batch`` decode slots backed by a
-single KV-cache/state pool of sequence capacity ``max_len``, and runs the
-standard continuous-batching loop:
+One engine owns a fixed pool of ``max_batch`` decode slots and runs the
+standard continuous-batching loop (ADMIT -> PREFILL -> DECODE -> RETIRE).
+Two KV layouts back the slots:
 
-  1. ADMIT — the `Scheduler` assigns ready requests to free slots.  The
-     admitted group is right-padded to a shared bucketed prompt length and
-     RAGGED-prefilled in one jitted call (`transformer.prefill` with
-     per-slot ``lengths``); the per-request caches are then scattered into
-     the pool at the assigned slots (`transformer.scatter_cache`) and each
-     request's first token is sampled from its last VALID position.
-  2. DECODE — one jitted step over the whole pool
-     (`transformer.decode_step` with a ``(B,)`` index): every slot's token
-     is embedded at that slot's own cache length and attention masks the
-     cache per slot.  Retired/empty slots ride along masked (`active`).
-  3. RETIRE — slots whose request sampled ``eos_id``, exhausted
-     ``max_new_tokens``, or hit the pool's ``max_len`` free up and step 1
-     refills them — no drain barrier (unless the scheduler runs the
-     ``static`` gang-batching baseline).
+``kv_layout="paged"`` (default) — the vLLM-style BLOCK-TABLE layout:
+  * KV lives in a SHARED pool of ``num_pages`` fixed-size pages
+    (`transformer.init_paged_cache`; row 0 is a trash page for masked
+    writes).  Each slot maps logical positions to pages through a
+    ``(W,)`` int32 page-table row; attention gathers the slot's pages into
+    a contiguous view and the existing ``q_pos0``/``kv_len`` per-slot
+    masking applies unchanged.  Peak KV memory scales with TOKENS IN
+    FLIGHT, not B x worst-case max_len.
+  * CHUNKED PREFILL: prompts stream into their pages ``prefill_chunk``
+    tokens per engine step, interleaved with decode steps of the other
+    slots, so a long prompt neither stalls the batch nor needs a
+    monolithic prefill trace.  Admission requires "fits in free pages"
+    (per-request reservation of ceil(min(prompt+budget, W*page_size) /
+    page_size) pages), not ``prompt_len < max_len``.  Recurrent (SSM /
+    xLSTM) state carries across chunks exactly — masked steps are
+    identities — so hybrid archs chunk-prefill too.
+  * PREFIX CACHING: once a prompt's pages are written they are registered
+    under exact token-prefix keys; a later request whose prompt shares the
+    prefix maps the SAME pages (copy-on-write for a partially covered tail
+    page) and prefills only its unique suffix.  Enabled automatically for
+    attention-only, non-MoE, frontend-free archs — recurrent state is not
+    page-resident and MoE dispatch is batch-dependent, so sharing would be
+    unsound there.
 
-The decode step traces ONCE (fixed pool shape); prefill retraces per
-(group size, bucketed prompt length) — bounded by ``max_batch`` times the
-number of buckets.  With a `repro.runtime.PlannedBackend` passed as
-``backend``, both traces execute every covered projection through its
-planned split-precision kernel (the name-keyed matmul-backend protocol
-resolves statically inside jit), so engine latency IS mapped latency.
+``kv_layout="dense"`` — the PR-5 layout kept as the parity oracle: B slots
+of ``max_len`` dense KV, one-shot ragged prefill per admission group
+(bucketed prompt length AND group size, so mixed traffic retraces prefill
+at most O(log^2) times), `transformer.scatter_cache` admission.
+
+The decode step traces ONCE per layout (fixed pool shapes; the paged chunk
+step likewise traces once).  With a `repro.runtime.PlannedBackend` passed
+as ``backend``, every jitted call executes covered projections through
+their planned split-precision kernels (the name-keyed matmul-backend
+protocol resolves statically inside jit), so engine latency IS mapped
+latency.
 
 Exactness notes: outputs are token-identical to per-request serving for
 every non-MoE arch (padding/masking is exact — see the `repro.serving`
@@ -36,7 +50,9 @@ composition.
 from __future__ import annotations
 
 import contextlib
+import math
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -47,7 +63,14 @@ from repro.models import transformer as T
 from repro.models.managed import matmul_backend
 from repro.serving.batch import BatchState
 from repro.serving.metrics import RequestResult
+from repro.serving.paged import PagePool
 from repro.serving.scheduler import Request, RequestQueue, Scheduler
+
+KV_LAYOUTS = ("paged", "dense")
+
+# prefix sharing is only sound when ALL sequence state is page-resident
+# (pure attention KV) and per-token compute is batch-composition-free
+_PREFIX_SAFE_KINDS = frozenset({"attn", "shared_attn", "mla"})
 
 
 class Engine:
@@ -56,19 +79,38 @@ class Engine:
     Parameters:
       cfg, params   — the LM (`repro.configs` ArchConfig + its weights).
       max_batch     — pool size B (concurrent requests).
-      max_len       — per-slot sequence capacity (prompt + generated - 1
-                      must fit; longer requests retire as "length_cap").
+      max_len       — per-slot sequence capacity: dense slots hold exactly
+                      ``max_len`` tokens; paged slots hold ``W * page_size``
+                      with W = ceil(max_len / page_size) (requests beyond
+                      that retire as "length_cap").
       backend       — optional matmul backend (e.g. `PlannedBackend`)
                       installed around every jitted call.
       scheduler     — a `Scheduler` (default: continuous policy).
-      prefill_bucket— minimum prompt padding; group prompt lengths round up
-                      to the next power-of-two multiple of it (bounds
-                      prefill retraces).
+      prefill_bucket— dense layout: minimum prompt padding; group prompt
+                      lengths round up to the next power-of-two multiple of
+                      it (bounds prefill retraces).
+      kv_layout     — "paged" (default) or "dense" (see module docstring).
+      page_size     — paged: tokens per KV page (16 default — a multiple of
+                      typical attention block tiles, small enough that a
+                      short request wastes < page_size tokens per slot).
+      num_pages     — paged: pool capacity (default B * W: same worst-case
+                      capacity as dense; undercommit for memory savings,
+                      overcommit for longer admission queues).
+      prefill_chunk — paged: prompt tokens per chunked-prefill step
+                      (default 2 * page_size).
+      prefix_cache  — paged: hash-share prompt pages across requests
+                      (auto-disabled for archs where sharing is unsound).
     """
 
     def __init__(self, cfg, params, *, max_batch: int = 8, max_len: int = 64,
                  backend=None, scheduler: Optional[Scheduler] = None,
-                 prefill_bucket: int = 8):
+                 prefill_bucket: int = 8, kv_layout: str = "paged",
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = True):
+        if kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}, "
+                             f"got {kv_layout!r}")
         self.cfg = cfg
         self.params = params
         self.max_batch = int(max_batch)
@@ -76,24 +118,124 @@ class Engine:
         self.backend = backend
         self.scheduler = scheduler or Scheduler()
         self.prefill_bucket = max(1, int(prefill_bucket))
+        self.kv_layout = kv_layout
         self.stats: Dict[str, float] = {}
+        # python-side counters bumped inside the traced function bodies:
+        # they count TRACES, not calls (tests pin the retrace bound)
+        self.trace_counts = {"prefill": 0, "decode": 0, "chunk": 0}
+
+        if kv_layout == "paged":
+            self.page_size = int(page_size)
+            self.pages_per_slot = -(-self.max_len // self.page_size)
+            self.slot_cap = self.pages_per_slot * self.page_size
+            self.num_pages = (int(num_pages) if num_pages is not None
+                              else self.max_batch * self.pages_per_slot)
+            self.prefill_chunk = (int(prefill_chunk) if prefill_chunk
+                                  else 2 * self.page_size)
+            self.prefix_cache = bool(prefix_cache) and \
+                cfg.moe is None and not cfg.frontend and \
+                set(cfg.pattern) <= _PREFIX_SAFE_KINDS
+            self.pool_mgr = PagePool(self.num_pages, self.page_size)
+            # the DEVICE page pool persists across run() calls: the
+            # allocator's hash index outlives a run, so the pages it can
+            # match must stay resident too (a repeated trace then serves
+            # its prompts straight from cache)
+            self._paged_caches = None
+        else:
+            self.slot_cap = self.max_len
+            self.prefix_cache = False
+
+        self._kv_axes = T.cache_kv_axes(cfg)
+        self._kv_capacity_bytes, self._kv_page_bytes = self._kv_footprint()
 
         def decode_fn(params, tok, caches, lengths, active):
+            self.trace_counts["decode"] += 1
             logits, caches = T.decode_step(params, cfg, tok, caches, lengths,
                                            active=active)
             return jnp.argmax(logits, axis=-1), caches
 
+        def decode_paged_fn(params, tok, caches, lengths, active, pages):
+            self.trace_counts["decode"] += 1
+            logits, caches = T.decode_step(params, cfg, tok, caches, lengths,
+                                           active=active, pages=pages)
+            return jnp.argmax(logits, axis=-1), caches
+
         def prefill_fn(params, prompts, lengths, pool, slots, frontend):
+            self.trace_counts["prefill"] += 1
             fresh = T.init_cache(cfg, prompts.shape[0], self.max_len)
             logits, fresh = T.prefill(params, cfg, prompts, fresh,
                                       cross_source=frontend, lengths=lengths)
             tok0 = jnp.argmax(logits, axis=-1)
             return tok0, T.scatter_cache(pool, fresh, slots)
 
+        def chunk_fn(params, tokens, caches, fill, valid, pages, frontend):
+            self.trace_counts["chunk"] += 1
+            logits, caches = T.prefill_chunk(params, cfg, tokens, caches,
+                                             fill, valid, pages,
+                                             cross_source=frontend)
+            return jnp.argmax(logits, axis=-1), caches
+
+        def reset_fn(caches, slots):
+            # zero the per-slot (non-page) state of freshly admitted slots:
+            # recurrent state and encoder memory must not leak from the
+            # slot's previous occupant (dense admission overwrites via
+            # scatter_cache instead)
+            def f(leaf, ax):
+                if ax == "slot0":
+                    return leaf.at[slots].set(jnp.zeros((), leaf.dtype))
+                if ax == "slot1":
+                    return leaf.at[:, slots].set(jnp.zeros((), leaf.dtype))
+                return leaf
+            return jax.tree.map(f, caches, self._kv_axes)
+
+        def copy_pages_fn(caches, src, dst):
+            # copy-on-write: duplicate shared partially-filled tail pages
+            # into pages the new request owns before it writes them
+            def f(leaf, ax):
+                if ax == "page0":
+                    return leaf.at[dst].set(leaf[src])
+                if ax == "page1":
+                    return leaf.at[:, dst].set(leaf[:, src])
+                return leaf
+            return jax.tree.map(f, caches, self._kv_axes)
+
         self._decode = jax.jit(decode_fn)
+        self._decode_paged = jax.jit(decode_paged_fn)
         self._prefill = jax.jit(prefill_fn)
+        self._chunk = jax.jit(chunk_fn)
+        self._reset = jax.jit(reset_fn)
+        self._copy_pages = jax.jit(copy_pages_fn)
 
     # ---- helpers ---------------------------------------------------------
+
+    def _kv_footprint(self):
+        """(total sequence-KV bytes of the pool, bytes per page or None).
+
+        Sums only the sequence-indexed attention-KV leaves (the ``"page"``
+        markers of `transformer.cache_kv_axes`) — per-slot recurrent state
+        is identical across layouts and excluded so dense-vs-paged peak
+        numbers compare exactly what paging changes."""
+        if self.kv_layout == "paged":
+            specs = T.paged_cache_specs(self.cfg, self.max_batch,
+                                        self.num_pages + 1, self.page_size)
+        else:
+            specs = T.cache_specs(self.cfg, self.max_batch, self.max_len)
+        total = 0
+        per_page = 0
+        for leaf, ax in zip(jax.tree.leaves(specs),
+                            jax.tree.leaves(self._kv_axes)):
+            if not ax.startswith("page"):
+                continue
+            nbytes = math.prod(leaf.shape) * leaf.dtype.itemsize
+            total += nbytes
+            if self.kv_layout == "paged":
+                # bytes of ONE page across all stacked layers of this leaf:
+                # pool-rows axis is 1 under a scan stack ("page1"), else 0
+                rows = leaf.shape[1] if ax == "page1" else leaf.shape[0]
+                per_page += nbytes // rows
+        if self.kv_layout == "paged":
+            return per_page * self.num_pages, per_page  # trash row excluded
+        return total, None
 
     def _bucket(self, n: int) -> int:
         b = self.prefill_bucket
@@ -101,33 +243,136 @@ class Engine:
             b *= 2
         return min(b, self.max_len)
 
+    def _gbucket(self, k: int) -> int:
+        """Admission-group size bucket (next power of two): bounds dense
+        prefill retraces to O(log max_batch * log max_len) combinations."""
+        g = 1
+        while g < k:
+            g *= 2
+        return min(g, self.max_batch)
+
     def _ctx(self):
         return (matmul_backend(self.backend) if self.backend is not None
                 else contextlib.nullcontext())
 
-    def _admit(self, batch: BatchState, admits, step: int,
-               t_ready: Dict[int, float]):
+    def _pages_needed(self, req: Request) -> int:
+        total = min(req.prompt_len + req.max_new_tokens, self.slot_cap)
+        return self.pool_mgr.pages_for(total)
+
+    def _frontend_row(self, req: Request):
+        if not self.cfg.frontend:
+            return None
+        if req.frontend is None:
+            raise ValueError(
+                f"arch {self.cfg.name} needs a per-request cross-attention "
+                f"`frontend`, missing on: [{req.rid!r}]")
+        return jnp.asarray(req.frontend, jnp.bfloat16)
+
+    def _validate(self, requests: Sequence[Request]):
+        for r in requests:
+            if self.kv_layout == "dense":
+                if r.prompt_len >= self.max_len:
+                    raise ValueError(
+                        f"request {r.rid!r}: prompt_len {r.prompt_len} does "
+                        f"not fit the engine's max_len {self.max_len} "
+                        f"(needs prompt_len < max_len)")
+                continue
+            need = self._pages_needed(r)
+            if r.prompt_len >= self.slot_cap or need > self.num_pages:
+                warnings.warn(
+                    f"unservable request {r.rid!r}: needs {need} pages "
+                    f"({r.prompt_len} prompt + {r.max_new_tokens} new tokens "
+                    f"@ page_size {self.page_size}) but the pool caps at "
+                    f"{self.num_pages} pages x {self.page_size} tokens "
+                    f"(slot capacity {self.slot_cap})")
+                raise ValueError(
+                    f"request {r.rid!r}: needs {need} pages, pool has "
+                    f"{self.num_pages} (slot capacity {self.slot_cap} "
+                    f"tokens)")
+
+    # ---- retirement (host-side, vectorized) ------------------------------
+
+    def _retire_slot(self, batch: BatchState, slot: int, reason: str,
+                     now: float, step: int,
+                     results: Dict[int, RequestResult]):
+        st = batch.retire(slot)
+        req = st.request
+        if self.kv_layout == "paged":
+            self.pool_mgr.release(batch.slot_pages[slot])
+            batch.slot_pages[slot] = []
+            batch.page_table[slot, :] = 0
+        results[id(req)] = RequestResult(
+            rid=req.rid, prompt_len=req.prompt_len, tokens=st.tokens,
+            finish_reason=reason, ttft_s=st.t_first - st.t_ready,
+            finish_s=now - st.t_ready, admitted_step=st.admitted_step,
+            finished_step=step)
+
+    def _slot_reason(self, batch: BatchState, slot: int) -> Optional[str]:
+        st = batch.slots[slot]
+        req = st.request
+        if req.eos_id is not None and st.tokens[-1] == req.eos_id:
+            return "eos"
+        if len(st.tokens) >= req.max_new_tokens:
+            return "max_new_tokens"
+        if int(batch.lengths[slot]) >= self.slot_cap:
+            return "length_cap"   # no room to embed the next token
+        return None
+
+    def _maybe_retire(self, batch: BatchState, slot: int, now: float,
+                      step: int, results: Dict[int, RequestResult]) -> bool:
+        reason = self._slot_reason(batch, slot)
+        if reason is None:
+            return False
+        self._retire_slot(batch, slot, reason, now, step, results)
+        return True
+
+    def _postdecode(self, batch: BatchState, tok: np.ndarray, now: float,
+                    step: int, results: Dict[int, RequestResult]):
+        """Record one decode step's tokens and retire finished slots — one
+        host sync happened already (``tok``); every predicate below reads
+        host-side numpy mirrors, no per-slot device pulls."""
+        act = batch.active
+        idx = np.nonzero(act)[0]
+        batch.last_tok[idx] = tok[idx]
+        batch.lengths[idx] += 1
+        batch.n_gen[idx] += 1
+        eos_hit = act & (batch.eos_id >= 0) & (tok == batch.eos_id)
+        budget = act & (batch.n_gen >= batch.max_new)
+        cap = act & (batch.lengths >= self.slot_cap)
+        for b in idx:
+            batch.slots[b].tokens.append(int(tok[b]))
+        for b in np.nonzero(eos_hit | budget | cap)[0]:
+            reason = ("eos" if eos_hit[b] else
+                      "max_new_tokens" if budget[b] else "length_cap")
+            self._retire_slot(batch, int(b), reason, now, step, results)
+
+    # ---- dense admission -------------------------------------------------
+
+    def _admit_dense(self, batch: BatchState, admits, step: int,
+                     t_ready: Dict[int, float]):
         slots = np.asarray([s for s, _ in admits], np.int32)
         reqs = [r for _, r in admits]
         k = len(reqs)
+        kp = self._gbucket(k)                 # pad the GROUP SIZE too
         P = self._bucket(max(r.prompt_len for r in reqs))
-        prompts = np.zeros((k, P), np.int32)
-        lengths = np.zeros(k, np.int32)
+        prompts = np.zeros((kp, P), np.int32)
+        lengths = np.zeros(kp, np.int32)
         for i, r in enumerate(reqs):
             prompts[i, :r.prompt_len] = r.prompt
             lengths[i] = r.prompt_len
+        # pad rows repeat the last real request (identical rows compute
+        # identical caches, so the duplicate scatter writes are no-ops)
+        prompts[k:] = prompts[k - 1]
+        lengths[k:] = lengths[k - 1]
+        slots_p = np.concatenate([slots, np.full(kp - k, slots[-1],
+                                                 np.int32)])
         frontend = None
         if self.cfg.frontend:
-            missing = [r.rid for r in reqs if r.frontend is None]
-            if missing:
-                raise ValueError(
-                    f"arch {self.cfg.name} needs a per-request cross-"
-                    f"attention `frontend`, missing on: {missing}")
-            frontend = jnp.stack(
-                [jnp.asarray(r.frontend, jnp.bfloat16) for r in reqs])
+            rows = [self._frontend_row(r) for r in reqs]
+            frontend = jnp.stack(rows + [rows[-1]] * (kp - k))
         t0 = time.monotonic()
         tok0, batch.caches = self._prefill(self.params, prompts, lengths,
-                                           batch.caches, slots, frontend)
+                                           batch.caches, slots_p, frontend)
         tok0 = np.asarray(tok0)           # sync: first tokens materialized
         t1 = time.monotonic()
         self.stats["prefill_s"] += t1 - t0
@@ -137,50 +382,123 @@ class Engine:
                          t_ready=t_ready[id(req)], t_first=t1, step=step)
         return [s for s, _ in admits]
 
-    def _maybe_retire(self, batch: BatchState, slot: int, now: float,
-                      step: int, results: Dict[int, RequestResult]) -> bool:
-        st = batch.slots[slot]
-        req = st.request
-        reason = None
-        if req.eos_id is not None and st.tokens[-1] == req.eos_id:
-            reason = "eos"
-        elif len(st.tokens) >= req.max_new_tokens:
-            reason = "max_new_tokens"
-        elif int(batch.lengths[slot]) >= self.max_len:
-            reason = "length_cap"   # no room to embed the next token
-        if reason is None:
-            return False
-        st = batch.retire(slot)
-        results[id(req)] = RequestResult(
-            rid=req.rid, prompt_len=req.prompt_len, tokens=st.tokens,
-            finish_reason=reason, ttft_s=st.t_first - st.t_ready,
-            finish_s=now - st.t_ready, admitted_step=st.admitted_step,
-            finished_step=step)
-        return True
+    # ---- paged admission + chunked prefill -------------------------------
 
-    # ---- main loop -------------------------------------------------------
+    def _admit_paged(self, batch: BatchState, admits, step: int,
+                     t_ready: Dict[int, float]):
+        cow_pairs = []
+        slots = []
+        for slot, req in admits:
+            need = self._pages_needed(req)
+            hit_len, shared, cow_src = (
+                self.pool_mgr.match(req.prompt) if self.prefix_cache
+                else (0, [], None))
+            pages = shared + self.pool_mgr.alloc(need - len(shared))
+            if cow_src is not None:
+                cow_pairs.append((cow_src, pages[len(shared)]))
+            batch.start_prefill(slot, req, pages, hit_len,
+                                t_ready=t_ready[id(req)], step=step)
+            if self.cfg.frontend:
+                row = self._frontend_row(req)
+                if self._fe_buf is None:
+                    self._fe_buf = jnp.zeros(
+                        (self.max_batch, *row.shape), jnp.bfloat16)
+                self._fe_buf = self._fe_buf.at[slot].set(row)
+            slots.append(slot)
+        batch.caches = self._reset(batch.caches,
+                                   np.asarray(slots, np.int32))
+        if cow_pairs:
+            src = np.asarray([s for s, _ in cow_pairs], np.int32)
+            dst = np.asarray([d for _, d in cow_pairs], np.int32)
+            batch.caches = self._copy_pages(batch.caches, src, dst)
+            for s, _ in cow_pairs:
+                self.pool_mgr.release_cow(s)
+
+    def _register_prompt(self, batch: BatchState, slot: int):
+        """Publish a fully prefilled prompt's pages for prefix sharing."""
+        if not self.prefix_cache:
+            return
+        prompt = batch.pending[slot].request.prompt
+        pages = batch.slot_pages[slot]
+        for key, end in self.pool_mgr.prompt_keys(prompt):
+            self.pool_mgr.register(pages[(end - 1) // self.page_size], key)
+
+    def _chunk_step(self, batch: BatchState, step: int,
+                    results: Dict[int, RequestResult]):
+        """Stream the next ``prefill_chunk`` tokens of EVERY prefilling
+        slot in one fixed-shape jitted call; slots whose prompt completes
+        get their first token from this chunk's logits and join decode."""
+        B, C = self.max_batch, self.prefill_chunk
+        sel = np.nonzero(batch.prefilling)[0]
+        tokens = np.zeros((B, C), np.int32)
+        valid = np.zeros(B, np.int32)
+        for b in sel:
+            req = batch.pending[b].request
+            pos = int(batch.fill_pos[b])
+            n = min(C, req.prompt_len - pos)
+            tokens[b, :n] = req.prompt[pos:pos + n]
+            valid[b] = n
+        t0 = time.monotonic()
+        tok, batch.caches = self._chunk(
+            self.params, tokens, batch.caches, batch.fill_pos.copy(), valid,
+            batch.page_table.copy(), self._fe_buf)
+        tok = np.asarray(tok)             # sync
+        t1 = time.monotonic()
+        self.stats["prefill_s"] += t1 - t0
+        self.stats["prefill_calls"] += 1
+        batch.fill_pos[sel] += valid[sel]
+        batch.lengths[sel] = batch.fill_pos[sel]
+        for b in sel:
+            pend = batch.pending[b]
+            if batch.fill_pos[b] >= pend.request.prompt_len:
+                self._register_prompt(batch, b)
+                batch.assign(b, pend.request, int(tok[b]),
+                             t_ready=pend.t_ready, t_first=t1,
+                             step=pend.admitted_step)
+                self._maybe_retire(batch, int(b), t1, step, results)
+
+    # ---- main loops ------------------------------------------------------
 
     def run(self, requests: Sequence[Request]) -> List[RequestResult]:
         """Serve ``requests`` to completion; returns one `RequestResult` per
         request, in submission order.  Timing aggregates land in
         ``self.stats``."""
-        for r in requests:
-            if r.prompt_len >= self.max_len:
-                raise ValueError(
-                    f"request {r.rid!r}: prompt_len {r.prompt_len} does not "
-                    f"fit the engine's max_len {self.max_len} (needs "
-                    f"prompt_len < max_len)")
+        self._validate(requests)
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "decode_steps": 0,
+                      "prefill_calls": 0, "wall_s": 0.0}
         queue = RequestQueue()
         for r in requests:
             queue.push(r)
+        results: Dict[int, RequestResult] = {}
+        t0 = time.monotonic()
+        if self.kv_layout == "paged":
+            self._run_paged(queue, results)
+        else:
+            self._run_dense(queue, results)
+        self.stats["wall_s"] = time.monotonic() - t0
+        self.stats["kv_capacity_bytes"] = self._kv_capacity_bytes
+        if self.kv_layout == "paged":
+            ps = self.pool_mgr.stats
+            self.stats["kv_peak_pages"] = ps["peak_pages"]
+            self.stats["kv_page_bytes"] = self._kv_page_bytes
+            self.stats["kv_peak_bytes"] = ps["peak_pages"] * \
+                self._kv_page_bytes
+            self.stats["prefix_lookups"] = ps["lookups"]
+            self.stats["prefix_hit_requests"] = ps["hit_requests"]
+            self.stats["prefix_hit_tokens"] = ps["hit_tokens"]
+            self.stats["cow_copies"] = ps["cow_copies"]
+            self.stats["page_evictions"] = ps["evictions"]
+        else:
+            # dense pools are fully allocated up front: peak == capacity
+            self.stats["kv_peak_bytes"] = self._kv_capacity_bytes
+        return [results[id(r)] for r in requests]
+
+    def _run_dense(self, queue: RequestQueue,
+                   results: Dict[int, RequestResult]):
         batch = BatchState(self.max_batch,
                            T.init_cache(self.cfg, self.max_batch,
                                         self.max_len))
-        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "decode_steps": 0,
-                      "prefill_calls": 0, "wall_s": 0.0}
-        results: Dict[int, RequestResult] = {}
         t_ready: Dict[int, float] = {}
-        t0 = time.monotonic()
         step = 0
         with self._ctx():
             while len(queue) or batch.any_active():
@@ -194,7 +512,8 @@ class Engine:
                 admits = self.scheduler.admissions(
                     queue, batch.free_slots(), batch.n_active, step)
                 if admits:
-                    for slot in self._admit(batch, admits, step, t_ready):
+                    for slot in self._admit_dense(batch, admits, step,
+                                                  t_ready):
                         self._maybe_retire(batch, slot, time.monotonic(),
                                            step, results)
                 if not batch.any_active():
@@ -207,13 +526,56 @@ class Engine:
                 now = time.monotonic()
                 self.stats["decode_s"] += now - t
                 self.stats["decode_steps"] += 1
-                for b in range(self.max_batch):
-                    if not batch.active[b]:
-                        continue
-                    batch.slots[b].tokens.append(int(tok[b]))
-                    batch.last_tok[b] = tok[b]
-                    batch.lengths[b] += 1
-                    self._maybe_retire(batch, b, now, step, results)
+                self._postdecode(batch, tok, now, step, results)
                 step += 1
-        self.stats["wall_s"] = time.monotonic() - t0
-        return [results[id(r)] for r in requests]
+
+    def _run_paged(self, queue: RequestQueue,
+                   results: Dict[int, RequestResult]):
+        if self._paged_caches is None:
+            rows = self.num_pages + 1                  # + trash page 0
+            self._paged_caches = T.init_paged_cache(
+                self.cfg, self.max_batch, rows, self.page_size)
+        batch = BatchState(self.max_batch, self._paged_caches,
+                           pages_per_slot=self.pages_per_slot)
+        self._fe_buf = None
+        t_ready: Dict[int, float] = {}
+        step = 0
+        with self._ctx():
+            while len(queue) or batch.any_busy():
+                if not batch.any_busy() and queue.ready(step) == 0:
+                    step = max(step, queue.next_arrival())
+                now = time.monotonic()
+                for r in queue:
+                    if r.arrival_step <= step and id(r) not in t_ready:
+                        t_ready[id(r)] = now
+                reserved = [0]
+
+                def fits(req):
+                    # running reservation: one admission round may pop
+                    # several requests before any pages are allocated
+                    need = self._pages_needed(req)
+                    if reserved[0] + need <= self.pool_mgr.available():
+                        reserved[0] += need
+                        return True
+                    return False
+
+                admits = self.scheduler.admissions(
+                    queue, batch.free_slots(), batch.n_busy, step,
+                    fits=fits)
+                if admits:
+                    self._admit_paged(batch, admits, step, t_ready)
+                if batch.prefilling.any():
+                    self._chunk_step(batch, step, results)
+                if batch.any_active():
+                    t = time.monotonic()
+                    tok, batch.caches = self._decode_paged(
+                        self.params, batch.last_tok, batch.caches,
+                        batch.lengths, batch.active,
+                        batch.page_table.copy())
+                    tok = np.asarray(tok)           # sync
+                    now = time.monotonic()
+                    self.stats["decode_s"] += now - t
+                    self.stats["decode_steps"] += 1
+                    self._postdecode(batch, tok, now, step, results)
+                step += 1
+        self._paged_caches = batch.caches       # keep cached pages resident

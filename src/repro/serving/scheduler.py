@@ -16,8 +16,12 @@ queued requests enter which free slots between decode steps:
     until EVERY slot has retired.  `benchmarks/bench_runtime.py` runs both
     policies over the same trace to measure what continuous batching buys.
 
-Both policies are FCFS; a request whose prompt cannot fit the engine's
-``max_len`` (prompt_len + 1 > max_len) is rejected at submission time.
+Both policies are FCFS.  Admission capacity is layout-dependent: the dense
+engine rejects ``prompt_len >= max_len`` at submission time, while the paged
+engine admits anything that FITS IN FREE PAGES — `admissions` takes an
+optional ``fits(request)`` callback (the engine's page-reservation check)
+and blocks head-of-line when the oldest visible request does not fit, so
+FCFS order is preserved instead of starving large requests.
 """
 from __future__ import annotations
 
@@ -83,14 +87,23 @@ class RequestQueue:
         """Earliest arrival_step still queued (None when empty)."""
         return min((r.arrival_step for r in self._q), default=None)
 
-    def pop_ready(self, step: int, k: int) -> List[Request]:
+    def pop_ready(self, step: int, k: int, fits=None) -> List[Request]:
         """Up to ``k`` visible requests, FCFS (non-visible ones keep their
-        relative order)."""
+        relative order).  ``fits(request) -> bool`` gates admission on
+        resources (free KV pages); the first visible request that does NOT
+        fit blocks everything behind it — head-of-line blocking keeps FCFS
+        fairness instead of starving large requests."""
         out: List[Request] = []
         rest: deque[Request] = deque()
+        blocked = False
         while self._q and len(out) < k:
             r = self._q.popleft()
-            (out if r.arrival_step <= step else rest).append(r)
+            if r.arrival_step <= step and not blocked:
+                if fits is None or fits(r):
+                    out.append(r)
+                    continue
+                blocked = True
+            rest.append(r)
         rest.extend(self._q)
         self._q = rest
         return out
@@ -106,11 +119,14 @@ class Scheduler:
         self.policy = policy
 
     def admissions(self, queue: RequestQueue, free_slots: List[int],
-                   n_active: int, step: int) -> List[Tuple[int, Request]]:
-        """``[(slot, request), ...]`` to admit before the next decode step."""
+                   n_active: int, step: int,
+                   fits=None) -> List[Tuple[int, Request]]:
+        """``[(slot, request), ...]`` to admit before the next decode step.
+        ``fits`` is forwarded to `RequestQueue.pop_ready` (page-aware
+        admission, head-of-line blocking)."""
         if not free_slots:
             return []
         if self.policy == "static" and n_active > 0:
             return []  # gang scheduling: wait for the whole batch to drain
-        reqs = queue.pop_ready(step, len(free_slots))
+        reqs = queue.pop_ready(step, len(free_slots), fits=fits)
         return list(zip(free_slots, reqs))

@@ -25,19 +25,41 @@ from repro.serving.scheduler import Request
 def synthetic_trace(n: int, *, vocab: int, min_prompt: int = 4,
                     max_prompt: int = 32, min_new: int = 4,
                     max_new: int = 16, seed: int = 0,
-                    arrival_every: int = 0) -> List[Request]:
+                    arrival_every: int = 0, shared_prefix: int = 0,
+                    long_every: int = 0,
+                    long_prompt: Optional[int] = None) -> List[Request]:
     """``n`` mixed-length requests with deterministic prompts.  With
     ``arrival_every`` > 0, request i only becomes visible at decode step
     ``i * arrival_every`` (a paced open-loop trace); 0 means everything is
-    queued up front (closed-loop, the worst case for static batching)."""
+    queued up front (closed-loop, the worst case for static batching).
+
+    ``shared_prefix`` > 0 prepends the SAME deterministic
+    ``shared_prefix``-token system prefix to every prompt (the prefix-cache
+    workload).  ``long_every`` k > 0 makes every k-th request draw a
+    ``long_prompt``-token prompt (default ``4 * max_prompt``) — the
+    skewed-length workload where a dense B x max_len pool pays the long
+    tail for every slot.  Defaults leave the token stream byte-identical to
+    traces generated before these knobs existed."""
     rng = np.random.default_rng(seed)
+    prefix = None
+    if shared_prefix > 0:
+        # separate stream: the main rng draws are unchanged by the prefix
+        prefix = np.random.default_rng(seed + 1_000_003).integers(
+            0, vocab, size=shared_prefix).astype(np.int32)
     reqs = []
     for i in range(n):
         plen = int(rng.integers(min_prompt, max_prompt + 1))
         gen = int(rng.integers(min_new, max_new + 1))
+        prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
+        if long_every and i % long_every == 0:
+            lp = long_prompt if long_prompt is not None else 4 * max_prompt
+            prompt = np.random.default_rng(seed + 7 * i + 13).integers(
+                0, vocab, size=int(lp)).astype(np.int32)
+        if prefix is not None:
+            prompt = np.concatenate([prefix, prompt])
         reqs.append(Request(
             rid=f"r{i}",
-            prompt=rng.integers(0, vocab, size=plen).astype(np.int32),
+            prompt=prompt,
             max_new_tokens=gen,
             arrival_step=i * arrival_every))
     return reqs

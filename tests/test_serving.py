@@ -269,12 +269,28 @@ def test_engine_retirement_and_admission():
 
 
 def test_engine_rejects_oversized_prompt():
+    """Dense keeps the old hard max_len bound; paged admits anything that
+    fits in ``pages_per_slot * page_size`` tokens and only refuses (with a
+    warning naming the request and its page requirement) beyond that."""
     cfg = _reduced("yi-9b")
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, params, max_batch=1, max_len=8)
+    eng = Engine(cfg, params, max_batch=1, max_len=8, kv_layout="dense")
     with pytest.raises(ValueError, match="max_len"):
         eng.run([Request(rid=0, prompt=np.zeros(8, np.int32),
                          max_new_tokens=2)])
+    # paged: the same prompt fits (slot capacity = ceil(8/4)*4 = 8 tokens
+    # of pages, prompt 8 needs all of them and decode budget spills past —
+    # still admitted, generation just stops at the slot capacity)
+    eng = Engine(cfg, params, max_batch=1, max_len=8, kv_layout="paged",
+                 page_size=4)
+    res = eng.run([Request(rid=0, prompt=np.zeros(6, np.int32),
+                           max_new_tokens=2)])
+    assert len(res[0].tokens) == 2
+    # ... but a prompt beyond the whole slot's page capacity is unservable
+    with pytest.warns(UserWarning, match="unservable request 'big'"):
+        with pytest.raises(ValueError, match="pages"):
+            eng.run([Request(rid="big", prompt=np.zeros(9, np.int32),
+                             max_new_tokens=2)])
 
 
 def test_engine_static_policy_same_tokens_more_steps():

@@ -21,6 +21,15 @@ This is the repo's perf baseline for the mapping-execution hot path.  Legs:
                          policies: total token throughput ratio + per-policy
                          p50/p95 TTFT (warmed jit caches; same greedy
                          tokens under both policies by construction)
+  * ``engine:yi9b_spec`` self-speculative decoding over a two-variant
+                         `repro.runtime.PlanSet` precision bank (ternary-
+                         tinted draft + all-int8 target of the SAME
+                         weights): acceptance rate, tokens per round, and
+                         decode throughput vs target-only serving of the
+                         identical trace — with token IDENTITY between the
+                         two asserted (the speculative loop is an exact
+                         rewrite of greedy target decoding), plus the
+                         bank's prepared-weight dedup accounting
   * ``engine:yi9b_paged`` paged vs dense KV layout on the SAME engine:
                          (a) a skewed-length trace (one long prompt among
                          short ones) where the paged pool's peak in-use KV
@@ -401,18 +410,115 @@ def _bench_engine_paged(leg: str, *, quick: bool) -> dict:
     return rec
 
 
+def _bench_engine_spec(leg: str, *, quick: bool) -> dict:
+    """Self-speculative decoding vs target-only serving on ONE PlanSet
+    precision bank (yi-9b reduced, diana).
+
+    The bank binds two variants of the same weights: an all-int8 "target"
+    and a 5%-ternary "draft" (`emit_static_mapping` ``bias``).  The
+    speculative engine drafts ``draft_k`` tokens per round under the draft
+    variant and verifies them in one target-variant chunk; the target-only
+    engine decodes the same trace sequentially under the same bank.  Token
+    identity between the two is ASSERTED every run (speculation is an
+    exact rewrite of greedy target decoding, not an approximation);
+    recorded: acceptance rate, committed tokens per round, per-engine
+    decode throughput and their ratio, and the bank's prepared-weight
+    dedup accounting."""
+    from repro.configs import base as cfgbase
+    from repro.launch.train import emit_static_mapping
+    from repro.models import transformer as T
+    from repro.runtime import PlanSet, lower
+    from repro.serving import Engine, summarize, synthetic_trace
+
+    cfgbase.load_all()
+    cfg = cfgbase.reduce_for_smoke(cfgbase.get("yi-9b"))
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    with tempfile.TemporaryDirectory() as td:
+        target = emit_static_mapping(params, cfg, "diana",
+                                     Path(td) / "target.json",
+                                     act_log_scale=2.0,
+                                     bias=("digital", 1.0))
+    # draft: the target mapping with 5% of every FFN layer's channels
+    # pushed to the ternary aimc domain — attention stacks and the head
+    # stay byte-identical, so the bank dedups their prepared buffers
+    draft = target.to_dict()
+    for layer in draft["layers"]:
+        if "/ffn/" not in layer["name"]:
+            continue
+        a = list(layer["assignment"])
+        k = max(1, round(0.05 * len(a)))
+        layer["assignment"] = [1] * k + a[k:]
+        layer["counts"] = [len(a) - k, k]
+    bank = PlanSet({"target": lower(target, params=params),
+                    "draft": lower(draft, params=params)},
+                   params, default="target")
+    mem = bank.memory_report()
+
+    n, B = (4, 2) if quick else (8, 4)
+    draft_k = 4
+    trace = synthetic_trace(n, vocab=cfg.vocab, min_prompt=4, max_prompt=8,
+                            min_new=4, max_new=(8 if quick else 16), seed=23)
+    max_len = max(r.prompt_len + r.max_new_tokens for r in trace)
+    rec = {"leg": leg, "model": cfg.name, "requests": n, "max_batch": B,
+           "max_len": max_len, "draft_k": draft_k,
+           "planset_memory": {k: mem[k] for k in
+                              ("prepared_bytes", "sum_variant_bytes",
+                               "dedup_saved_bytes")},
+           "modes": {}}
+    rec["planset_memory"]["shared_layers"] = len(mem["shared_layers"])
+
+    mk = {
+        "target_only": lambda: Engine(cfg, params, max_batch=B,
+                                      max_len=max_len, backend=bank,
+                                      kv_layout="paged"),
+        "speculative": lambda: Engine(cfg, params, max_batch=B,
+                                      max_len=max_len, backend=bank,
+                                      kv_layout="paged",
+                                      speculate=("draft", "target"),
+                                      draft_k=draft_k),
+    }
+    token_sets = {}
+    for mode, make in mk.items():
+        eng = make()
+        eng.run(trace)                        # warm the jitted steps
+        results = eng.run(trace)              # timed pass
+        summ = summarize(results, eng.stats["wall_s"])
+        if mode == "speculative":
+            for k in ("spec_rounds", "spec_acceptance",
+                      "spec_tokens_per_round"):
+                summ[k] = eng.stats[k]
+        rec["modes"][mode] = summ
+        token_sets[mode] = [r.tokens for r in results]
+        print(f"[bench] {leg}[{mode}]: {summ['total_tok_s']} tok/s")
+    assert token_sets["speculative"] == token_sets["target_only"], \
+        "speculative decoding changed greedy tokens vs target-only"
+    rec["spec_token_parity"] = True
+    sp = rec["modes"]["speculative"]
+    rec["spec_vs_target_total"] = round(
+        sp["total_tok_s"]
+        / max(rec["modes"]["target_only"]["total_tok_s"], 1e-9), 3)
+    assert sp["spec_acceptance"] > 0, "draft never agreed with target"
+    print(f"[bench] {leg}: token parity ok, acceptance="
+          f"{sp['spec_acceptance']} tokens/round="
+          f"{sp['spec_tokens_per_round']} "
+          f"(x{rec['spec_vs_target_total']} vs target-only), bank saved "
+          f"{rec['planset_memory']['dedup_saved_bytes']} prepared bytes "
+          f"({rec['planset_memory']['shared_layers']} shared layers)")
+    return rec
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true",
                     help="smaller batch/seq/gen (the ci_smoke.sh leg)")
     ap.add_argument("--out", default="BENCH_runtime.json")
     ap.add_argument("--legs", default="all",
-                    help="comma list: zamba2,yi9b,cnn,engine,paged "
+                    help="comma list: zamba2,yi9b,cnn,engine,paged,spec "
                          "(default all)")
     args = ap.parse_args(argv)
 
     requests, prompt_len, gen_len = (2, 8, 4) if args.quick else (4, 16, 12)
-    legs = (["zamba2", "yi9b", "cnn", "engine", "paged"]
+    legs = (["zamba2", "yi9b", "cnn", "engine", "paged", "spec"]
             if args.legs == "all" else args.legs.split(","))
     results = []
 
@@ -443,6 +549,9 @@ def main(argv=None):
     if "paged" in legs:
         results.append(_bench_engine_paged("engine:yi9b_paged",
                                            quick=args.quick))
+    if "spec" in legs:
+        results.append(_bench_engine_spec("engine:yi9b_spec",
+                                          quick=args.quick))
 
     doc = {
         "bench": "runtime_planned_serving",

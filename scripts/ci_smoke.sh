@@ -80,6 +80,31 @@ python -m repro.launch.serve --arch yi-9b --reduce --engine \
 grep -q "paged kv:" "$MAPDIR/prefix.log"
 grep -Eq "prefix_hit_tokens=[1-9]" "$MAPDIR/prefix.log"
 
+echo "== self-speculative serving (zamba2 diana draft+target precision bank) =="
+# two mapping artifacts of the SAME weights: an all-int8 "target" and a
+# 5%-ternary "draft" (train --mapping-bias), bound as one PlanSet bank and
+# served with speculative decoding — the gates are (a) the engine's own
+# token-identity replay vs target-only serving and (b) a NONZERO
+# acceptance rate (the draft must actually agree with the target sometimes)
+python -m repro.launch.train --arch zamba2-1.2b --reduce --steps 2 \
+    --batch 2 --seq 32 --platform diana \
+    --emit-mapping "$MAPDIR/spec_target.json" \
+    --mapping-bias digital --mapping-act-scale 2.0
+python -m repro.launch.train --arch zamba2-1.2b --reduce --steps 2 \
+    --batch 2 --seq 32 --platform diana \
+    --emit-mapping "$MAPDIR/spec_draft.json" \
+    --mapping-bias aimc:0.05 --mapping-act-scale 2.0
+python -m repro.launch.serve --arch zamba2-1.2b --reduce --engine \
+    --requests 4 --prompt-len 12 --gen-len 8 --max-batch 2 \
+    --mapping "$MAPDIR/spec_target.json" \
+    --speculate "$MAPDIR/spec_draft.json" --draft-k 4 \
+    --check-spec-parity --require-full-coverage | tee "$MAPDIR/spec.log"
+grep -q "planset bank:" "$MAPDIR/spec.log"
+grep -q "spec tokens identical to target-only: True" "$MAPDIR/spec.log"
+# nonzero acceptance: the rate prints as acceptance=0.xxxx — require a
+# nonzero digit after the point
+grep -Eq "acceptance=0\.[0-9]*[1-9]" "$MAPDIR/spec.log"
+
 echo "== CNN mapping runtime loop (train cnn: -> lower -> serve cnn:) =="
 python -m repro.launch.train --arch cnn:resnet20_tiny --steps 2 --batch 8 \
     --platform tpu_v5e --emit-mapping "$MAPDIR/cnn_mapping.json"
@@ -93,7 +118,8 @@ grep -q "per-layer planned execution" "$MAPDIR/cnn_serve.log"
 grep -q ", 0 unbound" "$MAPDIR/cnn_serve.log"
 
 echo "== runtime bench (quick) =="
-python benchmarks/bench_runtime.py --quick --legs zamba2,cnn,engine,paged \
+python benchmarks/bench_runtime.py --quick \
+    --legs zamba2,cnn,engine,paged,spec \
     --out "$MAPDIR/BENCH_runtime.json"
 test -s "$MAPDIR/BENCH_runtime.json"
 python - "$MAPDIR/BENCH_runtime.json" <<'EOF'
@@ -111,6 +137,12 @@ assert eng["continuous_vs_static_total"] >= 0.9, eng  # machine-drift slack
 pg = legs["engine:yi9b_paged"]
 assert pg["paged_token_parity"] is True, pg
 assert pg["prefix"]["cold"]["prefix_hit_tokens"] > 0, pg["prefix"]
+# speculative leg: token identity + nonzero acceptance are asserted INSIDE
+# the bench; re-check both landed in the doc, plus the bank's dedup
+sp = legs["engine:yi9b_spec"]
+assert sp["spec_token_parity"] is True, sp
+assert sp["modes"]["speculative"]["spec_acceptance"] > 0, sp
+assert sp["planset_memory"]["dedup_saved_bytes"] > 0, sp["planset_memory"]
 print("[ci] BENCH_runtime.json ok:",
       {k: v.get("kernel_histogram") for k, v in legs.items()},
       "engine x%s vs static" % eng["continuous_vs_static_total"],

@@ -111,6 +111,26 @@ Serving engine (repro.serving)
     `repro.serving` package docstring for the engine architecture and the
     request lifecycle.
 
+Multi-plan precision bank (repro.runtime.PlanSet)
+    Several mapping artifacts of the SAME weights — e.g. a ternary-heavy
+    "draft" and an int8-heavy "target" emitted via ``emit_static_mapping(
+    ..., bias=("aimc", 0.05))`` / ``bias=("digital", 1.0)`` — lower to
+    independent plans and bind as ONE `repro.runtime.PlanSet`: prepared
+    weight buffers deduplicate wherever a layer's (plan, weight, domain
+    bit-widths, block size) coincide, so a two-variant bank costs strictly
+    less memory than two independent binds whenever any layer agrees
+    (``memory_report()`` shows the accounting, ``coverage_diff()`` the
+    per-variant unbound layer NAMES).  The active variant is a
+    trace-static key (`repro.models._backend.plan_variant`, or the
+    ``variant=`` kwarg on the transformer entry points), which the serving
+    engine exploits for SELF-SPECULATIVE DECODING (draft k tokens cheaply,
+    verify in one target-variant chunk — token-identical to target-only
+    greedy serving) and per-request SLO ROUTING (each request's class
+    routed to a variant, per-class latency tails in ``summarize``).
+    ``launch/serve.py --engine --speculate DRAFT.json`` /
+    ``--slo-variant CLASS=MAPPING.json`` are the CLI clients; see the
+    `repro.serving` docstring for the exactness argument.
+
     Migration (v1 -> v2): v1 artifacts (no per-layer ``scales``) still load
     and lower — executors then derive weight scales from max-abs statistics
     of the weights they bind to and quantize activations dynamically.

@@ -29,6 +29,26 @@ majority-dtype path (`apply_mapping_artifact`);
 ``--require-full-coverage`` turns partial binding into a nonzero exit
 instead.
 
+MULTI-PLAN SERVING — a second mapping artifact of the SAME weights turns
+the backend into a `repro.runtime.PlanSet` precision bank (prepared
+buffers deduplicated wherever layers coincide across artifacts):
+
+  * ``--speculate draft.json`` binds ``{"draft", "target"}`` variants
+    (``--mapping`` is the target) and serves with SELF-SPECULATIVE
+    decoding: ``--draft-k`` tokens drafted per round with the draft
+    variant, verified in one target-variant chunk — token-identical to
+    target-only greedy serving (``--check-spec-parity`` replays the trace
+    target-only and asserts it).  Emit the pair with ``train
+    --emit-mapping --mapping-bias aimc ...`` / ``--mapping-bias digital``
+    and a static ``--mapping-act-scale``.
+  * ``--slo-variant CLASS=alt.json`` (repeatable) binds one variant per
+    SLO class and routes each request's class to its variant (synthetic
+    traces are tagged round-robin with the route classes); ``summarize``
+    then reports per-class TTFT/decode-rate.
+  * ``--require-full-coverage`` checks EVERY variant of the bank and exits
+    2 naming the first offending variant; the per-variant coverage diff
+    prints layer NAMES, not counts.
+
 CNN artifacts serve through the same flag with the ``cnn:<config>`` arch
 convention — the conv layers execute through the im2col'd planned kernels:
 
@@ -98,6 +118,42 @@ def plan_mapping_execution(params, artifact, interpret=None):
     return plan, backend
 
 
+def build_planset(params, artifacts, default, interpret=None):
+    """Lower several mapping artifacts of the SAME weights and bind them as
+    one `repro.runtime.PlanSet` precision bank.
+
+    ``artifacts``: {variant_name: MappingArtifact}.  Returns
+    (plans, planset) with ``plans`` the per-variant `ExecutionPlan`s.
+    Raises `LoweringError` / `ExecutionError` — multi-plan serving has no
+    majority-dtype fallback (a bank that cannot bind is an error, not a
+    degraded mode)."""
+    from repro.runtime import PlanSet, lower
+    plans = {v: lower(art, params=params) for v, art in artifacts.items()}
+    planset = PlanSet(plans, params, default=default, interpret=interpret)
+    return plans, planset
+
+
+def print_planset_report(tag, plans, planset):
+    """Per-variant coverage + the dedup memory accounting of the bank."""
+    for v in planset.variant_names:
+        hist = " ".join(f"{k}:{n}" for k, n in
+                        sorted(plans[v].kernel_histogram().items()))
+        bp = planset.variant(v)
+        print(f"[{tag}] variant {v!r}: {hist}; {len(bp.bound)}/"
+              f"{len(bp.plan.layers)} planned layers bound to weights, "
+              f"{len(bp.unbound)} unbound")
+    rep = planset.memory_report()
+    shared = rep["shared_layers"]
+    print(f"[{tag}] planset memory: prepared_bytes={rep['prepared_bytes']} "
+          f"sum_variant_bytes={rep['sum_variant_bytes']} "
+          f"dedup_saved_bytes={rep['dedup_saved_bytes']} "
+          f"shared_layers={len(shared)}")
+    diff = planset.coverage_diff()
+    for v, missing in sorted(diff.items()):
+        print(f"[{tag}] coverage diff: variant {v!r} leaves unbound: "
+              f"{missing}")
+
+
 def print_plan_coverage(tag, plan, backend):
     """Per-layer kernel/coverage report + the greppable summary line.
 
@@ -119,12 +175,28 @@ def print_plan_coverage(tag, plan, backend):
 
 def check_coverage(tag, backend, require_full: bool):
     """Enforce ``--require-full-coverage``: exit 2 when any planned layer is
-    unbound or declined at trace time."""
-    for name, reason in sorted((backend.runtime_declines or {}).items()):
+    unbound or declined at trace time.  Multi-variant `PlanSet` banks are
+    checked variant by variant — the exit names the offending variant and
+    its unplanned layer NAMES."""
+    declines = backend.runtime_declines or {}
+    for name, reason in sorted(declines.items()):
         print(f"[{tag}] declined at trace time: {name}: {reason}")
     if not require_full:
         return
-    problems = list(backend.unbound) + sorted(backend.runtime_declines)
+    variants = list(getattr(backend, "variant_names", ()) or ())
+    if len(variants) > 1:
+        diff = backend.coverage_diff()
+        for v in variants:
+            problems = list(diff.get(v, [])) + \
+                [k.split(":", 1)[1] for k in sorted(declines)
+                 if k.startswith(f"{v}:")]
+            if problems:
+                print(f"[{tag}] ERROR: --require-full-coverage but variant "
+                      f"{v!r}: {len(problems)} planned layers did not "
+                      f"execute as mapped: {problems}", file=sys.stderr)
+                sys.exit(2)
+        return
+    problems = list(backend.unbound) + sorted(declines)
     if problems:
         print(f"[{tag}] ERROR: --require-full-coverage but "
               f"{len(problems)} planned layers did not execute as mapped: "
@@ -166,9 +238,21 @@ def serve_engine(args, cfg, params, backend=None):
     continuous-batching engine and report per-request latency (TTFT,
     decode tok/s) + the run summary.  The trace comes from ``--trace``
     (JSONL, see `repro.serving.trace`) or a seeded synthetic trace sized by
-    ``--requests/--prompt-len/--gen-len``."""
-    from repro.serving import (Engine, Scheduler, load_trace, summarize,
-                               synthetic_trace)
+    ``--requests/--prompt-len/--gen-len``.  With ``--speculate`` the run is
+    self-speculative (and ``--check-spec-parity`` replays it target-only to
+    assert token identity); with ``--slo-variant`` routes each request's
+    SLO class to its plan variant."""
+    from repro.serving import (Engine, SamplingParams, Scheduler, load_trace,
+                               summarize, synthetic_trace)
+    speculate = ("draft", "target") if args.speculate else None
+    slo_routes = ({cls: cls for cls in args.slo_classes}
+                  if getattr(args, "slo_classes", None) else None)
+    sampling = None
+    if args.temperature is not None or args.top_p < 1.0:
+        sampling = SamplingParams(
+            temperature=(args.temperature if args.temperature is not None
+                         else 1.0),
+            top_p=args.top_p, seed=args.seed)
     if args.trace:
         trace = load_trace(args.trace, vocab=cfg.vocab)
         print(f"[serve] trace {args.trace}: {len(trace)} requests")
@@ -178,7 +262,8 @@ def serve_engine(args, cfg, params, backend=None):
             min_prompt=max(2, args.prompt_len // 4),
             max_prompt=args.prompt_len,
             min_new=max(2, args.gen_len // 4), max_new=args.gen_len,
-            seed=args.seed, shared_prefix=args.shared_prefix)
+            seed=args.seed, shared_prefix=args.shared_prefix,
+            slo_classes=(sorted(slo_routes) if slo_routes else None))
         print(f"[serve] synthetic trace: {len(trace)} mixed-length requests "
               f"(prompts <= {args.prompt_len}, gen <= {args.gen_len}, "
               f"shared prefix {args.shared_prefix})")
@@ -194,7 +279,9 @@ def serve_engine(args, cfg, params, backend=None):
                     backend=backend, scheduler=Scheduler(args.policy),
                     kv_layout=args.kv_layout, page_size=args.page_size,
                     num_pages=args.num_pages,
-                    prefill_chunk=args.prefill_chunk)
+                    prefill_chunk=args.prefill_chunk,
+                    speculate=speculate, draft_k=args.draft_k,
+                    slo_routes=slo_routes, sampling=sampling)
     results = engine.run(trace)
     for r in results:
         print(f"[serve]  {r.rid}: prompt={r.prompt_len} "
@@ -220,6 +307,40 @@ def serve_engine(args, cfg, params, backend=None):
               f"(lookups {st['prefix_lookups']}) "
               f"cow_copies={st['cow_copies']} "
               f"evictions={st['page_evictions']}")
+    if "by_slo" in summ:
+        for cls, rec in sorted(summ["by_slo"].items()):
+            variant = (slo_routes or {}).get(cls, "default")
+            print(f"[serve] slo {cls!r} -> variant {variant!r}: "
+                  f"{rec['requests']} requests "
+                  f"ttft p50 {rec['ttft_p50_s'] * 1e3:.0f}ms / "
+                  f"p95 {rec['ttft_p95_s'] * 1e3:.0f}ms, "
+                  f"decode p50 {rec['decode_tok_s_p50']} tok/s")
+    if speculate is not None:
+        st = engine.stats
+        print(f"[serve] speculative(draft_k={args.draft_k}): "
+              f"rounds={st['spec_rounds']} drafted={st['spec_drafted']} "
+              f"accepted={st['spec_accepted']} "
+              f"acceptance={st['spec_acceptance']} "
+              f"tokens_per_round={st['spec_tokens_per_round']}")
+        if args.check_spec_parity:
+            # replay the SAME trace target-only (the PlanSet default is the
+            # target variant) and compare every request's token stream
+            ref_engine = Engine(
+                cfg, params, max_batch=args.max_batch, max_len=max_len,
+                backend=backend, scheduler=Scheduler(args.policy),
+                kv_layout=args.kv_layout, page_size=args.page_size,
+                num_pages=args.num_pages, prefill_chunk=args.prefill_chunk)
+            ref = ref_engine.run(trace)
+            identical = all(a.tokens == b.tokens
+                            for a, b in zip(results, ref))
+            print(f"[serve] spec tokens identical to target-only: "
+                  f"{identical}")
+            if not identical:
+                bad = [a.rid for a, b in zip(results, ref)
+                       if a.tokens != b.tokens]
+                print(f"[serve] ERROR: speculative decode diverged from "
+                      f"target-only on requests {bad}", file=sys.stderr)
+                sys.exit(2)
     return results, summ
 
 
@@ -314,6 +435,28 @@ def main(argv=None):
                     help="synthetic --engine trace: prepend the same "
                          "N-token system prefix to every prompt (exercises "
                          "prefix caching)")
+    ap.add_argument("--speculate", default=None, metavar="DRAFT_MAPPING",
+                    help="second mapping artifact of the SAME weights bound "
+                         "as the 'draft' variant of a PlanSet bank "
+                         "(--mapping is the 'target'): self-speculative "
+                         "decoding, token-identical to target-only greedy")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="tokens drafted per speculative round")
+    ap.add_argument("--check-spec-parity", action="store_true",
+                    help="after the speculative run, replay the trace "
+                         "target-only and exit nonzero unless every "
+                         "request's tokens are identical")
+    ap.add_argument("--slo-variant", action="append", default=[],
+                    metavar="CLASS=MAPPING",
+                    help="route SLO class CLASS to a variant bound from "
+                         "this mapping artifact (repeatable; --mapping is "
+                         "the default variant for unrouted requests)")
+    ap.add_argument("--temperature", type=float, default=None,
+                    help="enable non-greedy sampling at this temperature "
+                         "(default: greedy argmax)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (enables sampling when "
+                         "< 1.0)")
     ap.add_argument("--mapping", default=None,
                     help="mapping artifact JSON (repro.api schema); lowered "
                          "to per-layer ExecutionPlans, with the global "
@@ -331,6 +474,23 @@ def main(argv=None):
         # without an artifact nothing executes as mapped — passing the gate
         # green would be exactly the silent fallback it exists to catch
         ap.error("--require-full-coverage needs --mapping")
+
+    args.slo_classes = []
+    if args.speculate or args.slo_variant:
+        if not args.engine:
+            ap.error("--speculate/--slo-variant need --engine")
+        if not args.mapping:
+            ap.error("--speculate/--slo-variant need --mapping (the "
+                     "target/default plan of the bank)")
+        if args.mapping_fallback:
+            ap.error("--mapping-fallback cannot serve a multi-plan bank")
+        if args.speculate and args.slo_variant:
+            ap.error("--speculate and --slo-variant are mutually exclusive")
+    for spec_arg in args.slo_variant:
+        cls, sep, path = spec_arg.partition("=")
+        if not cls or not sep or not path:
+            ap.error(f"--slo-variant wants CLASS=MAPPING, got {spec_arg!r}")
+        args.slo_classes.append(cls)
 
     if args.arch.startswith("cnn:"):
         if args.engine:
@@ -352,7 +512,37 @@ def main(argv=None):
     params = T.init_lm(key, cfg)
 
     backend = None
-    if art is not None:
+    if art is not None and (args.speculate or args.slo_variant):
+        from repro.api import MappingArtifact
+        from repro.runtime import ExecutionError, LoweringError
+        if args.speculate:
+            arts = {"target": art,
+                    "draft": MappingArtifact.load(args.speculate)}
+            default = "target"
+        else:
+            arts = {"default": art}
+            for spec_arg in args.slo_variant:
+                cls, _, path = spec_arg.partition("=")
+                arts[cls] = MappingArtifact.load(path)
+            default = "default"
+        try:
+            plans, backend = build_planset(params, arts, default)
+        except (LoweringError, ExecutionError) as e:
+            print(f"[serve] multi-plan bank failed to lower/bind ({e})",
+                  file=sys.stderr)
+            sys.exit(2)
+        # KV-cache precision follows the default/target artifact's
+        # activation majority, as on the single-plan path
+        fractions = art.domain_channel_fractions(searchable_only=True)
+        dom = art.domains[int(np.argmax(fractions))]
+        if dom.get("act_bits", 16) <= 8:
+            cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        print(f"[serve] planset bank: model={art.model} "
+              f"platform={art.platform} "
+              f"variants={list(backend.variant_names)} default={default!r} "
+              f"kv={cfg.kv_cache_dtype} (jit: prefill+decode)")
+        print_planset_report("serve", plans, backend)
+    elif art is not None:
         from repro.runtime import ExecutionError, LoweringError
         plan = None
         if not args.mapping_fallback:

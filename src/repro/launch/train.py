@@ -34,7 +34,7 @@ from repro.optim import adamw, compression
 
 def emit_static_mapping(params, cfg, platform, out_path, max_cout=512,
                         stacked_prefixes=("units", "enc_units"),
-                        plan_hints=None, act_log_scale=None):
+                        plan_hints=None, act_log_scale=None, bias=None):
     """Write a schema-v2 `repro.api` mapping artifact for the trained
     model's projection weights: per-layer min-cost static channel split
     (paper Sec. IV baselines) under the named platform's cost model, with
@@ -69,6 +69,15 @@ def emit_static_mapping(params, cfg, platform, out_path, max_cout=512,
     change with its batch neighbours).  Layers wider than ``max_cout``
     output channels are pinned to domain 0 — the exhaustive per-layer split
     search is O(C_out) cost evaluations.
+
+    ``bias``: optional ``(domain_name, fraction)`` overriding the min-cost
+    split on every SEARCHABLE layer: ``fraction`` of each layer's output
+    channels are forced into the named domain (the rest stay digital, or
+    domain 1 when the biased domain IS digital).  This is how a precision
+    BANK is produced from one set of weights — e.g. on diana,
+    ``bias=("aimc", 1.0)`` emits a ternary-heavy "draft" artifact and
+    ``bias=("digital", 1.0)`` an int8 "target" artifact; both lower against
+    the same params and bind as variants of one `repro.runtime.PlanSet`.
     """
     from repro.api import MappingArtifact, Platform
     from repro.core import baselines, quant
@@ -123,6 +132,23 @@ def emit_static_mapping(params, cfg, platform, out_path, max_cout=512,
                               co <= max_cout)
             scales.append(w_scale(leaf))
     assigns = baselines.min_cost(cm, geoms, "latency", searchable)
+    if bias is not None:
+        dom_name, frac = bias
+        dom_names = [d.name for d in spec.domains]
+        if dom_name not in dom_names:
+            raise ValueError(f"bias domain {dom_name!r} is not on platform "
+                             f"{plat.name} (domains: {dom_names})")
+        if not (0.0 <= frac <= 1.0):
+            raise ValueError(f"bias fraction must be in [0, 1], got {frac}")
+        di = dom_names.index(dom_name)
+        other = 0 if di != 0 else min(1, spec.n_domains - 1)
+        for li, a in enumerate(assigns):
+            if not searchable[li]:
+                continue
+            k = int(round(frac * a.size))
+            forced = np.full(a.size, other, dtype=np.int64)
+            forced[:k] = di
+            assigns[li] = forced
     counts = baselines.counts_from_assignments(assigns, spec.n_domains)
     plan = [(n, g, s) for n, g, s in zip(names, geoms, searchable)]
     art = MappingArtifact.from_search(cfg.name, spec, plan, assigns, counts,
@@ -178,7 +204,8 @@ def train_cnn(args, cnn_name: str):
     if args.emit_mapping:
         hints = {n: (g, s) for (n, g, s) in plan_fn(cfg)}
         emit_static_mapping(params, cfg, args.platform, args.emit_mapping,
-                            plan_hints=hints)
+                            plan_hints=hints, act_log_scale=args.mapping_act_scale,
+                            bias=args.bias)
     print(f"[train] done. first loss={losses[0]:.4f} last={losses[-1]:.4f}")
     return losses
 
@@ -219,8 +246,27 @@ def main(argv=None):
     ap.add_argument("--emit-mapping", default=None,
                     help="write a static min-cost mapping artifact (JSON) "
                          "for the trained weights to this path")
+    ap.add_argument("--mapping-bias", default=None,
+                    help="bias the emitted mapping toward a platform domain:"
+                         " 'DOMAIN[:FRACTION]' forces that fraction "
+                         "(default 1.0) of every searchable layer's output "
+                         "channels into DOMAIN — emit a draft/target "
+                         "precision bank from one set of weights (e.g. "
+                         "'aimc' then 'digital' on diana)")
+    ap.add_argument("--mapping-act-scale", type=float, default=None,
+                    help="pin this STATIC activation log-scale on every "
+                         "emitted layer (instead of dynamic per-batch "
+                         "max-abs) — required for the serving engine's "
+                         "per-request reproducibility and the speculative "
+                         "decoder's token-identity guarantee")
     args = ap.parse_args(argv)
 
+    args.bias = None
+    if args.mapping_bias:
+        if not args.emit_mapping:
+            ap.error("--mapping-bias needs --emit-mapping")
+        name, _, frac = args.mapping_bias.partition(":")
+        args.bias = (name, float(frac) if frac else 1.0)
     if args.emit_mapping:
         from repro.api import Platform
         Platform.get(args.platform)   # unknown name fails before training
@@ -290,7 +336,9 @@ def main(argv=None):
         saver.save(args.steps, (params, opt_state), {"step": args.steps})
         saver.wait()
     if args.emit_mapping:
-        emit_static_mapping(params, cfg, args.platform, args.emit_mapping)
+        emit_static_mapping(params, cfg, args.platform, args.emit_mapping,
+                            act_log_scale=args.mapping_act_scale,
+                            bias=args.bias)
     print(f"[train] done. first loss={losses[0]:.4f} last={losses[-1]:.4f}")
     return losses
 

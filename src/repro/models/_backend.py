@@ -45,6 +45,7 @@ MatmulBackend = Callable[..., object]
 
 _ACTIVE: Optional[MatmulBackend] = None
 _SCAN_INDEX = None
+_PLAN_VARIANT: Optional[str] = None
 
 
 def current() -> Optional[MatmulBackend]:
@@ -83,6 +84,45 @@ def current_scan_index():
     """The repeat index published by the innermost ``scan_slot`` (None when
     not inside a scan body)."""
     return _SCAN_INDEX
+
+
+@contextlib.contextmanager
+def plan_variant(name: Optional[str]):
+    """Publish the active plan-variant key for the duration of the context.
+
+    Multi-plan backends (`repro.runtime.PlanSet`) bind several
+    ``ExecutionPlan`` variants against one params pytree and select among
+    them by this key.  ``name`` must be a STATIC Python string (never a
+    tracer): the variant decides which prepared kernels are traced into the
+    computation, so callers that jit must make it a static argument
+    (``jax.jit(f, static_argnames=("variant",))``) — otherwise jax would
+    reuse a trace cached for a different variant.
+
+    ``plan_variant(None)`` is a no-op that keeps any surrounding selection,
+    so call sites can thread an optional ``variant=None`` kwarg without
+    clobbering an outer context.  Single-plan backends ignore the key.
+    """
+    global _PLAN_VARIANT
+    if name is None:
+        yield None
+        return
+    if not isinstance(name, str):
+        raise TypeError(
+            f"plan variant must be a static str, got {type(name).__name__} "
+            "(a traced variant would silently reuse another variant's trace)"
+        )
+    prev = _PLAN_VARIANT
+    _PLAN_VARIANT = name
+    try:
+        yield name
+    finally:
+        _PLAN_VARIANT = prev
+
+
+def current_plan_variant() -> Optional[str]:
+    """The variant key published by the innermost ``plan_variant`` (None =
+    let the backend use its default variant)."""
+    return _PLAN_VARIANT
 
 
 def join(prefix: Optional[str], leaf: str) -> Optional[str]:

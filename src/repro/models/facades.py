@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cost_models import LayerGeometry
+from repro.models import _backend
 from repro.models import managed as mg
 
 _null_ctx = contextlib.nullcontext
@@ -55,14 +56,15 @@ def mlp_init(key, cfg: MLPConfig, spec):
 
 
 def mlp_apply(p, x, cfg: MLPConfig, spec=None, mode="fp", tau=1.0,
-              backend=None):
+              backend=None, variant=None):
     with mg.matmul_backend(backend) if backend is not None else \
             _null_ctx():
-        h = x.reshape(x.shape[0], -1)
-        for i, lp in enumerate(p["layers"]):
-            h = jax.nn.relu(mg.dense(lp, h, spec, mode, tau,
-                                     name=f"layers/{i}"))
-        return mg.dense(p["head"], h, spec, mode, tau, name="head")
+        with _backend.plan_variant(variant):
+            h = x.reshape(x.shape[0], -1)
+            for i, lp in enumerate(p["layers"]):
+                h = jax.nn.relu(mg.dense(lp, h, spec, mode, tau,
+                                         name=f"layers/{i}"))
+            return mg.dense(p["head"], h, spec, mode, tau, name="head")
 
 
 def mlp_plan(cfg: MLPConfig) -> List[Tuple[str, LayerGeometry, bool]]:
@@ -127,22 +129,23 @@ def _tokens(x, cfg: EncoderConfig):
 
 
 def encoder_apply(p, x, cfg: EncoderConfig, spec=None, mode="fp", tau=1.0,
-                  backend=None):
+                  backend=None, variant=None):
     with mg.matmul_backend(backend) if backend is not None else \
             _null_ctx():
-        h = mg.dense(p["embed"], _tokens(x, cfg), spec, mode, tau,
-                     name="embed")
-        for i, blk in enumerate(p["blocks"]):
-            a = _attention(h, mg.dense(blk["qkv"], h, spec, mode, tau,
-                                       name=f"blocks/{i}/qkv"), cfg)
-            h = h + mg.dense(blk["proj"], a, spec, mode, tau,
-                             name=f"blocks/{i}/proj")
-            f = jax.nn.relu(mg.dense(blk["ffn1"], h, spec, mode, tau,
-                                     name=f"blocks/{i}/ffn1"))
-            h = h + mg.dense(blk["ffn2"], f, spec, mode, tau,
-                             name=f"blocks/{i}/ffn2")
-        return mg.dense(p["head"], jnp.mean(h, axis=1), spec, mode, tau,
-                        name="head")
+        with _backend.plan_variant(variant):
+            h = mg.dense(p["embed"], _tokens(x, cfg), spec, mode, tau,
+                         name="embed")
+            for i, blk in enumerate(p["blocks"]):
+                a = _attention(h, mg.dense(blk["qkv"], h, spec, mode, tau,
+                                           name=f"blocks/{i}/qkv"), cfg)
+                h = h + mg.dense(blk["proj"], a, spec, mode, tau,
+                                 name=f"blocks/{i}/proj")
+                f = jax.nn.relu(mg.dense(blk["ffn1"], h, spec, mode, tau,
+                                         name=f"blocks/{i}/ffn1"))
+                h = h + mg.dense(blk["ffn2"], f, spec, mode, tau,
+                                 name=f"blocks/{i}/ffn2")
+            return mg.dense(p["head"], jnp.mean(h, axis=1), spec, mode, tau,
+                            name="head")
 
 
 def encoder_plan(cfg: EncoderConfig) -> List[Tuple[str, LayerGeometry, bool]]:

@@ -668,7 +668,7 @@ def scatter_cache(caches, sub, slots):
 
 
 def prefill(params, cfg: ArchConfig, tokens, caches, cross_source=None,
-            lengths=None):
+            lengths=None, variant=None):
     """Process the prompt, fill caches, return (last_logits, caches).
 
     ``lengths`` (B,) enables RAGGED prefill of right-padded prompts: valid
@@ -677,7 +677,18 @@ def prefill(params, cfg: ArchConfig, tokens, caches, cross_source=None,
     attention KV written at padded positions is garbage by contract — every
     subsequent read masks the cache by per-slot length (`decode_step` with
     a (B,) index).  The returned logits are taken at each slot's LAST VALID
-    position (``lengths - 1``), not at the padded row end."""
+    position (``lengths - 1``), not at the padded row end.
+
+    ``variant`` selects the plan variant of a multi-plan backend
+    (`repro.runtime.PlanSet`) for this call — a STATIC string (make it a
+    ``static_argnames`` entry when jitting); None keeps any surrounding
+    ``plan_variant`` selection / the backend default."""
+    with _backend.plan_variant(variant):
+        return _prefill_body(params, cfg, tokens, caches, cross_source,
+                             lengths)
+
+
+def _prefill_body(params, cfg, tokens, caches, cross_source, lengths):
     B, Sq = tokens.shape
     x = params["emb"][tokens]
     positions = jnp.arange(Sq)[None, :]
@@ -697,7 +708,8 @@ def prefill(params, cfg: ArchConfig, tokens, caches, cross_source=None,
 
 
 def prefill_chunk(params, cfg: ArchConfig, tokens, caches, index, valid,
-                  pages, cross_source=None):
+                  pages, cross_source=None, variant=None,
+                  full_logits: bool = False):
     """One fixed-size chunk of a paged CHUNKED prefill.
 
     ``tokens`` (B, C) holds the next (up to C) prompt tokens of every
@@ -710,26 +722,36 @@ def prefill_chunk(params, cfg: ArchConfig, tokens, caches, index, valid,
     perturb other slots.  Recurrent state accumulated in ``caches`` across
     calls IS the carried chunk boundary state.  Returns (logits at each
     slot's last valid token — the slot's first generated token once its
-    whole prompt is in, garbage before that — and the updated caches)."""
-    B, C = tokens.shape
-    index = jnp.asarray(index)
-    valid = jnp.asarray(valid)
-    x = params["emb"][tokens]
-    positions = index[:, None] + jnp.arange(C)[None, :]
-    length_mask = jnp.arange(C)[None, :] < valid[:, None]
-    if cfg.frontend == "audio" and cross_source is not None:
-        cross_source = encode(params, cfg, cross_source)
-    h, caches, _ = backbone(params, cfg, x, positions, caches=caches,
-                            cache_index=index, cross_source=cross_source,
-                            length_mask=length_mask, pages=pages)
-    last = jnp.clip(valid - 1, 0, C - 1)
-    h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
-    logits = _project_logits(params, cfg, h_last)
-    return logits, caches
+    whole prompt is in, garbage before that — and the updated caches).
+
+    ``variant`` selects the plan variant of a multi-plan backend (STATIC —
+    see `prefill`).  ``full_logits=True`` returns logits at EVERY chunk
+    position ``(B, C, V)`` instead of the last valid one — the speculative
+    verify step reads the target model's prediction after each drafted
+    token from one chunk call (rows past ``valid`` are garbage by the same
+    masking contract)."""
+    with _backend.plan_variant(variant):
+        B, C = tokens.shape
+        index = jnp.asarray(index)
+        valid = jnp.asarray(valid)
+        x = params["emb"][tokens]
+        positions = index[:, None] + jnp.arange(C)[None, :]
+        length_mask = jnp.arange(C)[None, :] < valid[:, None]
+        if cfg.frontend == "audio" and cross_source is not None:
+            cross_source = encode(params, cfg, cross_source)
+        h, caches, _ = backbone(params, cfg, x, positions, caches=caches,
+                                cache_index=index, cross_source=cross_source,
+                                length_mask=length_mask, pages=pages)
+        if full_logits:
+            return _project_logits(params, cfg, h), caches
+        last = jnp.clip(valid - 1, 0, C - 1)
+        h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+        logits = _project_logits(params, cfg, h_last)
+        return logits, caches
 
 
 def decode_step(params, cfg: ArchConfig, token, caches, index,
-                cross_source=None, active=None, pages=None):
+                cross_source=None, active=None, pages=None, variant=None):
     """One decode step. token (B,), index: position of the new token — a
     scalar (classic same-length batch) or a ``(B,)`` array of PER-SLOT cache
     lengths (continuous batching: each slot's token lands at that slot's own
@@ -739,17 +761,19 @@ def decode_step(params, cfg: ArchConfig, token, caches, index,
     unchanged — their logits are garbage by contract.  ``pages`` (B, W)
     switches attention KV to the paged pool layout (see `block_apply`).
     Cross-attention KV (frontend/encoder memory) is read from the cache
-    written at prefill — cross_source is ignored here."""
-    x = params["emb"][token][:, None, :]
-    B = x.shape[0]
-    positions = (jnp.asarray(index)[:, None] if jnp.ndim(index) == 1
-                 else jnp.full((B, 1), index))
-    length_mask = None if active is None else jnp.asarray(active)[:, None]
-    h, caches, _ = backbone(params, cfg, x, positions, caches=caches,
-                            cache_index=index, cross_source=None,
-                            length_mask=length_mask, pages=pages)
-    logits = _project_logits(params, cfg, h[:, -1])
-    return logits, caches
+    written at prefill — cross_source is ignored here.  ``variant`` selects
+    the plan variant of a multi-plan backend (STATIC — see `prefill`)."""
+    with _backend.plan_variant(variant):
+        x = params["emb"][token][:, None, :]
+        B = x.shape[0]
+        positions = (jnp.asarray(index)[:, None] if jnp.ndim(index) == 1
+                     else jnp.full((B, 1), index))
+        length_mask = None if active is None else jnp.asarray(active)[:, None]
+        h, caches, _ = backbone(params, cfg, x, positions, caches=caches,
+                                cache_index=index, cross_source=None,
+                                length_mask=length_mask, pages=pages)
+        logits = _project_logits(params, cfg, h[:, -1])
+        return logits, caches
 
 
 # ------------------------------------------------- serve-time quantization

@@ -38,17 +38,17 @@ from repro.runtime.registry import (KernelCapability, capability_matrix,
                                     kernel_for, register_kernel,
                                     unregister_kernel)
 from repro.runtime.lower import lower, resolve_layer_params
-from repro.runtime.execute import (ExecutionError, PlannedBackend,
+from repro.runtime.execute import (ExecutionError, PlannedBackend, PlanSet,
                                    PreparedLayer, execute_conv_layer,
                                    execute_layer, im2col, prepare_layer,
-                                   reference_layer)
+                                   prepared_nbytes, reference_layer)
 
 __all__ = [
     "ExecutionError", "ExecutionPlan", "KernelCapability", "LayerPlan",
-    "LoweringError", "PlannedBackend", "PreparedLayer", "KERNELS",
+    "LoweringError", "PlanSet", "PlannedBackend", "PreparedLayer", "KERNELS",
     "KERNEL_FP", "KERNEL_QUANT", "KERNEL_SPLIT", "KERNEL_SPLIT_TERNARY",
     "KERNEL_TERNARY", "capability_matrix", "execute_conv_layer",
     "execute_layer", "im2col", "kernel_for", "lower", "prepare_layer",
-    "reference_layer", "register_kernel", "resolve_layer_params",
-    "unregister_kernel",
+    "prepared_nbytes", "reference_layer", "register_kernel",
+    "resolve_layer_params", "unregister_kernel",
 ]

@@ -23,18 +23,26 @@ order (the inverse permutation is applied, mirroring
 `kernels.ops.odimo_deployed_dense`; the full Fig. 3 reorg removes it by
 rewriting the next layer's input channels).
 
-`PlannedBackend` binds a whole plan to a params pytree and implements the
-NAME-KEYED matmul-backend protocol of `repro.models`
+`PlanSet` binds a BANK of plans — N `ExecutionPlan` variants of the same
+weights (e.g. a ternary-heavy "draft" and an int8-heavy "target" mapping)
+— to one params pytree and implements the NAME-KEYED matmul-backend
+protocol of `repro.models`
 (``backend(name, p, x, conv=...) -> y | None``): plans are resolved by the
 layer's pytree path — a static string — so planned execution traces cleanly
 under ``jax.jit`` (weights may be tracers; the prepared arrays are baked
-into the trace as constants).  Scan-stacked plans (``base@r`` layer names)
-are GROUPED by their static stack key: repeats whose kernels/boundaries/
-blocks agree stack on a leading axis and execute as one gather indexed by
-the scan index published by ``repro.models._backend.scan_slot``; a
-heterogeneous stack dispatches ``jax.lax.switch`` over its GROUPS (G <= R
-branches) rather than over every repeat — ``stack_mode="switch"`` restores
-the one-branch-per-repeat dispatch as a benchmark baseline.  Install the
+into the trace as constants).  The active variant is the trace-static key
+published via ``repro.models._backend.plan_variant`` (default variant
+outside any context), and prepared weight buffers are DEDUPLICATED across
+variants wherever a layer's (plan, weight, domain-bits, block) tuple
+coincides — ``prepared_bytes()``/``memory_report()`` account for the
+sharing.  `PlannedBackend` is the single-variant special case (the
+original API).  Scan-stacked plans (``base@r`` layer names) are GROUPED by
+their static stack key: repeats whose kernels/boundaries/blocks agree
+stack on a leading axis and execute as one gather indexed by the scan
+index published by ``repro.models._backend.scan_slot``; a heterogeneous
+stack dispatches ``jax.lax.switch`` over its GROUPS (G <= R branches)
+rather than over every repeat — ``stack_mode="switch"`` restores the
+one-branch-per-repeat dispatch as a benchmark baseline.  Install the
 backend with ``repro.models.managed.matmul_backend(backend)`` and every
 managed/LM dense or conv whose layer the plan covers executes through its
 planned kernel, bias included — no model code forks.
@@ -42,6 +50,7 @@ planned kernel, bias included — no model code forks.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Any, Dict, List, Tuple
 
 import jax
@@ -570,71 +579,113 @@ _STACKED_TYPES = (_SingleRepeat, _StackedPrepared, _GroupedPrepared,
 
 
 # --------------------------------------------------------------------------
-# Pluggable matmul backend over a whole plan
+# Prepared-buffer accounting
 # --------------------------------------------------------------------------
 
-class PlannedBackend:
-    """Binds an `ExecutionPlan` to a params pytree and serves the NAME-KEYED
-    `repro.models` matmul-backend protocol: ``backend(name, p, x, conv=...)``
-    resolves the layer's plan by ``name`` — the layer's pytree path, a
-    static string — at TRACE time, so ``serve.py --mapping`` jits prefill/
-    decode with planned kernels executing inside the trace (the prepared
-    weights are baked in as constants; the traced ``p`` is ignored).
+#: PreparedLayer fields that hold device arrays (the bind-time weight
+#: memory a plan keeps alive)
+_PREP_ARRAY_FIELDS = ("inv", "w_perm", "b", "w_q", "sw", "w_bf16",
+                      "w_t_packed", "act_scale", "act_sx")
 
-    Layers resolve exactly like `lower()` resolves them (handle plan order,
-    or artifact layer names as params paths).  ``base@r`` names (scan-
-    stacked weights) are grouped per base: repeats sharing their static
-    stack key stack into one `_StackedPrepared` indexed by the scan index
-    published via ``repro.models._backend.scan_slot``; heterogeneous
-    repeats dispatch through ``lax.switch`` over their GROUPS
-    (`_GroupedPrepared`).  ``stack_mode="switch"`` forces one branch per
-    repeat instead (the benchmark baseline).  ``bound``/``unbound`` record
-    the bind-time coverage split (per artifact layer name, ``@r``
-    included); ``runtime_declines`` records trace-time declines (e.g.
-    grouped convs).  Calls that name-match a plan but cannot execute it
-    raise `ExecutionError` — never a silent fp fallback.
-    """
 
-    def __init__(self, plan: ExecutionPlan, params, handle=None, *,
-                 interpret=None, reference: bool = False,
-                 stack_mode: str = "grouped"):
-        if stack_mode not in ("grouped", "switch"):
-            raise ValueError(f"stack_mode must be 'grouped' or 'switch', "
-                             f"got {stack_mode!r}")
+def _entry_arrays(entry):
+    """Every device array a bound entry (plain or stacked) keeps alive."""
+    if isinstance(entry, PreparedLayer):
+        for f in _PREP_ARRAY_FIELDS:
+            a = getattr(entry, f)
+            if a is not None:
+                yield a
+    elif isinstance(entry, _SingleRepeat):
+        yield from _entry_arrays(entry.prep)
+    elif isinstance(entry, _StackedPrepared):
+        for a in (entry._inv, entry._w_perm, entry._w_bf16,
+                  entry._w_t_packed, entry._b, entry._w_q, entry._sw,
+                  entry._act_scale, entry._act_sx):
+            if a is not None:
+                yield a
+    elif isinstance(entry, _GroupedPrepared):
+        for g in entry.groups:
+            yield from _entry_arrays(g)
+    elif isinstance(entry, _SwitchPrepared):
+        for p in entry.preps:
+            yield from _entry_arrays(p)
+
+
+def prepared_nbytes(entries) -> int:
+    """Total bytes of the UNIQUE arrays held by ``entries`` — arrays shared
+    between entries (the PlanSet dedup) are counted once."""
+    seen, total = set(), 0
+    for e in entries:
+        for a in _entry_arrays(e):
+            if id(a) not in seen:
+                seen.add(id(a))
+                total += int(a.nbytes)
+    return total
+
+
+# --------------------------------------------------------------------------
+# Pluggable matmul backend over a bank of plans
+# --------------------------------------------------------------------------
+
+def _node_weight_ok(node):
+    w = _layer_weight(node)
+    return (isinstance(node, dict) and getattr(w, "ndim", 0) in (2, 4)
+            and not isinstance(w, jax.ShapeDtypeStruct))
+
+
+class _BoundPlan:
+    """One `ExecutionPlan` variant bound to the owning `PlanSet`'s params:
+    resolves layers exactly like the single-plan `PlannedBackend` always
+    did (handle plan order, or artifact layer names as params paths) but
+    routes every prepare through the owner's shared prep cache, so
+    identical (layer plan, weight, domain-bits, block) tuples across
+    variants bind to ONE set of prepared arrays."""
+
+    def __init__(self, variant: str, plan: ExecutionPlan, params, handle,
+                 owner: "PlanSet"):
+        self.variant = variant
         self.plan = plan
-        self.interpret = interpret
-        self.reference = reference
-        self.stack_mode = stack_mode
         domain_bits = [int(d["weight_bits"]) for d in plan.domains]
+        dsig = tuple(domain_bits)
         if handle is not None:
             dicts = handle.layers(params)
             if len(dicts) != len(plan.layers):
                 raise ExecutionError(
                     f"handle resolves {len(dicts)} managed layers but the "
                     f"plan has {len(plan.layers)}")
-            resolved = list(zip(plan.layers, dicts))
+            # node identity for the shared prep cache: handle position
+            resolved = [(lp, node, ("h", i))
+                        for i, (lp, node) in enumerate(zip(plan.layers,
+                                                           dicts))]
         else:
-            resolved = [(lp, _walk_path(params, lp.name))
+            resolved = [(lp, _walk_path(params, lp.name), ("p", lp.name))
                         for lp in plan.layers]
-        self._by_name: Dict[str, Any] = {}
+        self.by_name: Dict[str, Any] = {}
         self.bound: List[str] = []
         self.unbound: List[str] = []
-        self.runtime_declines: Dict[str, str] = {}
-        stacked: Dict[str, List[Tuple[int, LayerPlan, Any]]] = {}
-        for lp, node in resolved:
+        stacked: Dict[str, List[Tuple[int, LayerPlan, Any, Any]]] = {}
+        for lp, node, nkey in resolved:
             base, _, rep = lp.name.partition("@")
             if rep:
-                stacked.setdefault(base, []).append((int(rep), lp, node))
+                stacked.setdefault(base, []).append((int(rep), lp, node,
+                                                     nkey))
                 continue
-            prep = self._try_prepare(lp, node, domain_bits)
-            if prep is None:
+            if not _node_weight_ok(node):
                 self.unbound.append(lp.name)
-            else:
-                self._by_name[lp.name] = prep
-                self.bound.append(lp.name)
+                continue
+            key = ("layer", nkey, owner._plan_sig(lp), dsig,
+                   int(plan.block_n))
+            prep = owner._memo(
+                key, variant, lp.name,
+                lambda: prepare_layer(lp, _layer_weight(node),
+                                      b=node.get("b"),
+                                      domain_bits=domain_bits,
+                                      block_n=plan.block_n))
+            self.by_name[lp.name] = prep
+            self.bound.append(lp.name)
         for base, entries in sorted(stacked.items()):
             entries.sort(key=lambda e: e[0])
-            reps = [r for r, _, _ in entries]
+            reps = [r for r, _, _, _ in entries]
             if reps != list(range(len(reps))):
                 raise ExecutionError(
                     f"{base}: stacked plan repeats {reps} are not the "
@@ -651,13 +702,99 @@ class PlannedBackend:
                         f"stacked weight carries {int(stack_w.shape[0])} — "
                         f"the artifact does not match this model's layer "
                         f"stack")
-            preps = [self._try_prepare(lp, node, domain_bits)
-                     for _, lp, node in entries]
-            if any(p is None for p in preps):
-                self.unbound.extend(lp.name for _, lp, _ in entries)
+            if not all(_node_weight_ok(node) for _, _, node, _ in entries):
+                self.unbound.extend(lp.name for _, lp, _, _ in entries)
                 continue
-            self._by_name[base] = self._stack_entry(preps)
-            self.bound.extend(lp.name for _, lp, _ in entries)
+            # stack entries dedup at WHOLE-STACK granularity: the stacked
+            # containers jnp.stack fresh arrays, so per-repeat sharing
+            # cannot alias device buffers — one divergent repeat forks the
+            # whole stack for that base
+            key = ("stack", entries[0][3][0], base,
+                   tuple(owner._plan_sig(lp) for _, lp, _, _ in entries),
+                   dsig, int(plan.block_n), owner.stack_mode)
+            entry = owner._memo(
+                key, variant, base,
+                lambda: owner._stack_entry(
+                    [prepare_layer(lp, _layer_weight(node),
+                                   b=node.get("b"),
+                                   domain_bits=domain_bits,
+                                   block_n=plan.block_n)
+                     for _, lp, node, _ in entries]))
+            self.by_name[base] = entry
+            self.bound.extend(lp.name for _, lp, _, _ in entries)
+
+
+class PlanSet:
+    """A precision bank: N `ExecutionPlan` variants of the SAME weights
+    bound against one params pytree, serving the NAME-KEYED `repro.models`
+    matmul-backend protocol (``backend(name, p, x, conv=...)``).
+
+    The active variant is selected by the trace-static key published via
+    ``repro.models._backend.plan_variant`` (threaded through the
+    transformer/façade ``variant=`` kwargs); calls outside any variant
+    context execute ``default``.  Because the key is static, each variant
+    traces its own kernels — jitted callers must make it a static argument
+    (``static_argnames=("variant",)``).
+
+    Prepared weight buffers DEDUPLICATE across variants: wherever a
+    layer's (layer plan, resolved weight, domain bit-widths, block size)
+    tuple coincides — same kernel, same domain boundary, same scales — the
+    variants share one set of prepared arrays (per plain layer; per whole
+    stack for scan-stacked ``base@r`` entries, whose containers stack
+    fresh arrays).  ``prepared_bytes()`` / ``memory_report()`` measure the
+    dedup: a two-variant bank stays strictly below two independent binds
+    whenever any layer coincides.
+
+    Layer resolution, scan-stack grouping (``stack_mode``), coverage
+    bookkeeping and the fail-loud `ExecutionError` semantics are exactly
+    the single-plan `PlannedBackend`'s — which is now the one-variant
+    special case of this class.
+    """
+
+    def __init__(self, variants: Dict[str, ExecutionPlan], params,
+                 handle=None, *, default: str | None = None,
+                 interpret=None, reference: bool = False,
+                 stack_mode: str = "grouped"):
+        if stack_mode not in ("grouped", "switch"):
+            raise ValueError(f"stack_mode must be 'grouped' or 'switch', "
+                             f"got {stack_mode!r}")
+        if not variants:
+            raise ValueError("PlanSet needs at least one plan variant")
+        for v in variants:
+            if not isinstance(v, str) or not v:
+                raise ValueError(f"variant names must be non-empty strings, "
+                                 f"got {v!r}")
+        self.interpret = interpret
+        self.reference = reference
+        self.stack_mode = stack_mode
+        self.variant_names: Tuple[str, ...] = tuple(variants)
+        self.default = self.variant_names[0] if default is None else default
+        if self.default not in variants:
+            raise ValueError(f"default variant {self.default!r} is not one "
+                             f"of {list(self.variant_names)}")
+        self.runtime_declines: Dict[str, str] = {}
+        self._prep_cache: Dict[Any, Any] = {}
+        self._share: Dict[Any, List[Tuple[str, str]]] = {}
+        self._sig_cache: Dict[int, str] = {}
+        self._variants: Dict[str, _BoundPlan] = {}
+        for vname, plan in variants.items():
+            self._variants[vname] = _BoundPlan(vname, plan, params, handle,
+                                               self)
+
+    # ---- shared prepare cache -------------------------------------------
+
+    def _plan_sig(self, lp: LayerPlan) -> str:
+        sig = self._sig_cache.get(id(lp))
+        if sig is None:
+            sig = json.dumps(lp.to_dict(), sort_keys=True)
+            self._sig_cache[id(lp)] = sig
+        return sig
+
+    def _memo(self, key, variant: str, display_name: str, build):
+        if key not in self._prep_cache:
+            self._prep_cache[key] = build()
+        self._share.setdefault(key, []).append((variant, display_name))
+        return self._prep_cache[key]
 
     def _stack_entry(self, preps: List[PreparedLayer]):
         if self.stack_mode == "switch":
@@ -666,22 +803,29 @@ class PlannedBackend:
             return _stack_group(preps)
         return _GroupedPrepared(preps)
 
-    def _try_prepare(self, lp: LayerPlan, node, domain_bits):
-        w = _layer_weight(node)
-        if not isinstance(node, dict) or getattr(w, "ndim", 0) not in (2, 4) \
-                or isinstance(w, jax.ShapeDtypeStruct):
-            return None
-        return prepare_layer(lp, w, b=node.get("b"), domain_bits=domain_bits,
-                             block_n=self.plan.block_n)
+    # ---- backend protocol -----------------------------------------------
+
+    def _resolve_variant(self) -> _BoundPlan:
+        v = _backend.current_plan_variant()
+        if v is None:
+            v = self.default
+        bp = self._variants.get(v)
+        if bp is None:
+            raise ExecutionError(
+                f"unknown plan variant {v!r}: this PlanSet binds "
+                f"{list(self.variant_names)}")
+        return bp
 
     def __call__(self, name, p, x, *, conv=None):
-        """Matmul-backend hook: resolve ``name`` to a prepared plan; returns
-        the planned output (bias applied) or None to decline (unknown /
+        """Matmul-backend hook: resolve ``name`` against the ACTIVE variant
+        (``_backend.current_plan_variant()`` or ``default``); returns the
+        planned output (bias applied) or None to decline (unknown /
         unnamed layer, or an unsupported conv).  ``conv`` carries the call
         site's ``{"stride", "padding", "groups"}`` for conv layers."""
         if name is None:
             return None
-        entry = self._by_name.get(name)
+        bp = self._resolve_variant()
+        entry = bp.by_name.get(name)
         if entry is None:
             return None
         conv_shape = entry.conv_shape
@@ -702,7 +846,7 @@ class PlannedBackend:
                     # artifact): loud trace-time decline, surfaced via
                     # runtime_declines — re-emit the artifact to get the
                     # block-diagonal grouped lowering
-                    self.runtime_declines[name] = (
+                    self.runtime_declines[self._decline_key(bp, name)] = (
                         f"grouped conv (groups={cg}) but the plan was "
                         f"lowered without groups; executed on the default "
                         f"path")
@@ -728,10 +872,97 @@ class PlannedBackend:
         return execute_layer(entry, x, interpret=self.interpret,
                              reference=self.reference)
 
+    def _decline_key(self, bp: _BoundPlan, name: str) -> str:
+        # single-variant banks keep the bare-name key (the PlannedBackend
+        # contract); multi-variant banks qualify it so variants don't alias
+        return name if len(self._variants) == 1 else f"{bp.variant}:{name}"
+
+    # ---- coverage -------------------------------------------------------
+
+    def variant(self, name: str) -> _BoundPlan:
+        """The bound state of one variant (plan / bound / unbound)."""
+        return self._variants[name]
+
     @property
     def fully_covered(self) -> bool:
-        return not self.unbound
+        """True when EVERY variant bound every planned layer."""
+        return all(not bp.unbound for bp in self._variants.values())
 
     def coverage(self) -> str:
-        return (f"{len(self.bound)}/{len(self.plan.layers)} planned layers "
-                f"bound to weights, {len(self.unbound)} unbound")
+        parts = []
+        for v, bp in self._variants.items():
+            s = (f"{len(bp.bound)}/{len(bp.plan.layers)} planned layers "
+                 f"bound to weights, {len(bp.unbound)} unbound")
+            parts.append(s if len(self._variants) == 1 else f"{v}: {s}")
+        return "; ".join(parts)
+
+    def coverage_diff(self) -> Dict[str, List[str]]:
+        """Per-variant UNBOUND layer names (only variants with gaps): the
+        actionable diff when one variant binds fewer layers than another —
+        names, not counts."""
+        return {v: list(bp.unbound) for v, bp in self._variants.items()
+                if bp.unbound}
+
+    # ---- memory accounting ----------------------------------------------
+
+    def prepared_bytes(self, variant: str | None = None) -> int:
+        """Bytes of unique prepared device arrays held by ``variant`` (or
+        by the whole bank when None) — buffers shared across variants count
+        once, which is the point of the bank."""
+        if variant is None:
+            entries = [e for bp in self._variants.values()
+                       for e in bp.by_name.values()]
+        else:
+            entries = list(self._variants[variant].by_name.values())
+        return prepared_nbytes(entries)
+
+    def shared_layers(self) -> Dict[str, Tuple[str, ...]]:
+        """Display name -> variants whose prepared buffers coincide (>= 2
+        variants sharing one prep-cache entry)."""
+        out: Dict[str, Tuple[str, ...]] = {}
+        for users in self._share.values():
+            vs = tuple(dict.fromkeys(v for v, _ in users))
+            if len(vs) > 1:
+                out[users[0][1]] = vs
+        return out
+
+    def memory_report(self) -> Dict[str, Any]:
+        per_variant = {v: self.prepared_bytes(v) for v in self.variant_names}
+        total = self.prepared_bytes()
+        return {
+            "variants": per_variant,
+            "prepared_bytes": total,
+            "sum_variant_bytes": sum(per_variant.values()),
+            "dedup_saved_bytes": sum(per_variant.values()) - total,
+            "shared_layers": self.shared_layers(),
+        }
+
+
+class PlannedBackend(PlanSet):
+    """A one-plan `PlanSet` — the original single-mapping binding, kept as
+    the common case and the backward-compatible API: ``plan`` / ``bound`` /
+    ``unbound`` / ``coverage()`` address the single variant directly, and
+    ``runtime_declines`` keys stay bare layer names."""
+
+    def __init__(self, plan: ExecutionPlan, params, handle=None, *,
+                 interpret=None, reference: bool = False,
+                 stack_mode: str = "grouped"):
+        super().__init__({"default": plan}, params, handle=handle,
+                         interpret=interpret, reference=reference,
+                         stack_mode=stack_mode)
+
+    @property
+    def plan(self) -> ExecutionPlan:
+        return self._variants["default"].plan
+
+    @property
+    def bound(self) -> List[str]:
+        return self._variants["default"].bound
+
+    @property
+    def unbound(self) -> List[str]:
+        return self._variants["default"].unbound
+
+    @property
+    def _by_name(self) -> Dict[str, Any]:
+        return self._variants["default"].by_name

@@ -47,10 +47,43 @@ Architecture
                                 pool.
     `RequestResult` / `summarize` (metrics.py)
                                 per-request TTFT + decode tok/s, p50/p95
-                                aggregation.
+                                aggregation (per-SLO-class breakdown when
+                                requests carry class tags).
+    `SamplingParams` (sampling.py)
+                                jit-safe temperature / top-p sampling as
+                                per-slot PRNG state; OFF by default.
     traces (trace.py)           JSONL request traces + seeded synthetic
                                 mixed-length / skewed-length /
-                                shared-prefix traffic.
+                                shared-prefix / SLO-tagged traffic.
+
+Multi-plan serving (PlanSet precision bank)
+    Binding a `repro.runtime.PlanSet` — several precision variants of ONE
+    params pytree, prepared buffers deduplicated where layers coincide —
+    as the engine ``backend`` unlocks serving-time precision choices:
+
+    * SELF-SPECULATIVE DECODING: ``Engine(..., speculate=("draft",
+      "target"), draft_k=4)`` drafts ``draft_k`` greedy tokens per slot
+      per round under the cheap draft variant (a `lax.scan` over the paged
+      decode step), verifies all of them in ONE fixed-shape target-variant
+      `prefill_chunk` (full logits recover the per-position argmax), and
+      commits the longest agreeing prefix plus one bonus target token.
+      The verify chunk overwrites every draft-written KV position with
+      target numerics, and hybrid archs get a replay chunk that rewinds
+      partially-accepting slots' recurrent state to the round snapshot and
+      re-advances it over the committed tokens — output is TOKEN-IDENTICAL
+      to target-only greedy serving (pinned in tests, asserted in the
+      bench leg; requires static activation scales).  Acceptance /
+      tokens-per-round land in ``engine.stats``.
+    * SLO ROUTING: ``Engine(..., slo_routes={"interactive": "draft"})``
+      routes each request's SLO class to a plan variant; decode and
+      chunked prefill run once per ACTIVE variant group with other groups
+      masked (paged masked writes land in the trash page, so groups cannot
+      corrupt each other), keeping every request's numerics identical to
+      serving it alone under its variant.  `summarize` reports per-class
+      TTFT / decode-rate tails.
+    Both are PAGED-ONLY: the dense layout writes garbage KV at masked
+    slots' live positions, so variant-grouped masked stepping would
+    corrupt co-batched requests there.
 
 Request lifecycle (paged)
     submitted -> (arrival_step reached) ready -> fits in free pages ->
@@ -98,12 +131,14 @@ from repro.serving.batch import BatchState, SlotState
 from repro.serving.engine import KV_LAYOUTS, Engine
 from repro.serving.metrics import RequestResult, percentile, summarize
 from repro.serving.paged import PagePool
+from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (POLICIES, Request, RequestQueue,
                                      Scheduler)
 from repro.serving.trace import load_trace, save_trace, synthetic_trace
 
 __all__ = [
     "BatchState", "Engine", "KV_LAYOUTS", "PagePool", "POLICIES", "Request",
-    "RequestQueue", "RequestResult", "Scheduler", "SlotState", "load_trace",
-    "percentile", "save_trace", "summarize", "synthetic_trace",
+    "RequestQueue", "RequestResult", "SamplingParams", "Scheduler",
+    "SlotState", "load_trace", "percentile", "save_trace", "summarize",
+    "synthetic_trace",
 ]

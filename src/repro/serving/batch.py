@@ -64,6 +64,12 @@ class BatchState:
         self.eos_id = np.full(self.max_batch, -1, np.int64)
         self.max_new = np.zeros(self.max_batch, np.int64)
         self.n_gen = np.zeros(self.max_batch, np.int64)
+        # per-slot plan-variant key (SLO routing over a PlanSet; None =
+        # backend default) and per-slot PRNG key rows (non-greedy sampling;
+        # zeros when the engine is greedy — the keys still ride through the
+        # jitted calls so the trace shape is sampling-independent)
+        self.variant: List[Optional[str]] = [None] * self.max_batch
+        self.rng = np.zeros((self.max_batch, 2), np.uint32)
         # paged layout: page tables + chunked-prefill progress
         self.pages_per_slot = pages_per_slot
         if pages_per_slot is not None:
@@ -148,4 +154,5 @@ class BatchState:
         self.slots[slot] = None
         self.eos_id[slot] = -1
         self.n_gen[slot] = 0
+        self.variant[slot] = None
         return st

@@ -26,7 +26,9 @@ Two KV layouts back the slots:
     page) and prefills only its unique suffix.  Enabled automatically for
     attention-only, non-MoE, frontend-free archs — recurrent state is not
     page-resident and MoE dispatch is batch-dependent, so sharing would be
-    unsound there.
+    unsound there.  SLO routing disables it too: routed variants write
+    variant-specific KV numerics, so pages could not be shared across
+    classes.
 
 ``kv_layout="dense"`` — the PR-5 layout kept as the parity oracle: B slots
 of ``max_len`` dense KV, one-shot ragged prefill per admission group
@@ -40,12 +42,42 @@ their planned split-precision kernels (the name-keyed matmul-backend
 protocol resolves statically inside jit), so engine latency IS mapped
 latency.
 
+MULTI-PLAN SERVING — with a `repro.runtime.PlanSet` bound as ``backend``
+(N precision variants over ONE shared params pytree), the engine can
+exploit the variants at serving time:
+
+  * SELF-SPECULATIVE DECODING (``speculate=(draft, target)``): every
+    decode round drafts ``draft_k`` greedy tokens per slot with the cheap
+    ``draft`` variant (a `lax.scan` over the paged decode step), then
+    verifies all of them in ONE fixed-shape `prefill_chunk` call under the
+    ``target`` variant (``full_logits=True`` recovers the per-position
+    argmax), accepting the longest prefix where draft and target agree
+    plus one bonus target token.  Verify overwrites every draft-written
+    KV position with target numerics, so the committed cache is exactly
+    the target-only cache; for hybrid (recurrent) archs a replay chunk
+    restores the pre-round recurrent state of partially-accepting slots
+    and re-advances it over the committed tokens only.  Output is
+    TOKEN-IDENTICAL to target-only greedy decoding (requires static
+    activation scales — see Exactness notes).  Paged-only, greedy-only,
+    non-MoE, frontend-free.
+  * SLO ROUTING (``slo_routes={"interactive": "draft", ...}``): each
+    request's SLO class picks the plan variant serving it.  Decode and
+    chunked prefill run once per ACTIVE variant group with the other
+    slots masked (masked paged writes land in the trash page, so groups
+    cannot corrupt each other's KV); a request's entire KV is written
+    under its own variant, keeping per-request numerics identical to
+    serving it alone under that variant.  Paged-only.
+  * NON-GREEDY SAMPLING (``sampling=SamplingParams(...)``): temperature /
+    top-p sampling as jit-safe per-slot state — see `repro.serving
+    .sampling`.  OFF by default (argmax, bit-identical to before).
+
 Exactness notes: outputs are token-identical to per-request serving for
 every non-MoE arch (padding/masking is exact — see the `repro.serving`
 package docstring for the MoE capacity caveat), provided the bound plan
 uses STATIC activation scales; dynamic max-abs activation quantization is
 computed over the whole pooled batch and therefore depends on batch
-composition.
+composition (this is also why speculative verify, whose batch rows differ
+from sequential decode's, requires static scales for token identity).
 """
 from __future__ import annotations
 
@@ -53,7 +85,7 @@ import contextlib
 import math
 import time
 import warnings
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +96,7 @@ from repro.models.managed import matmul_backend
 from repro.serving.batch import BatchState
 from repro.serving.metrics import RequestResult
 from repro.serving.paged import PagePool
+from repro.serving.sampling import SamplingParams, request_key, sample_tokens
 from repro.serving.scheduler import Request, RequestQueue, Scheduler
 
 KV_LAYOUTS = ("paged", "dense")
@@ -83,8 +116,8 @@ class Engine:
                       ``max_len`` tokens; paged slots hold ``W * page_size``
                       with W = ceil(max_len / page_size) (requests beyond
                       that retire as "length_cap").
-      backend       — optional matmul backend (e.g. `PlannedBackend`)
-                      installed around every jitted call.
+      backend       — optional matmul backend (e.g. `PlannedBackend` /
+                      `PlanSet`) installed around every jitted call.
       scheduler     — a `Scheduler` (default: continuous policy).
       prefill_bucket— dense layout: minimum prompt padding; group prompt
                       lengths round up to the next power-of-two multiple of
@@ -100,6 +133,13 @@ class Engine:
                       (default 2 * page_size).
       prefix_cache  — paged: hash-share prompt pages across requests
                       (auto-disabled for archs where sharing is unsound).
+      speculate     — optional ``(draft_variant, target_variant)`` pair of
+                      variant names on the bound `PlanSet`: enables
+                      self-speculative decoding (see module docstring).
+      draft_k       — tokens drafted per speculative round (default 4).
+      slo_routes    — optional ``{slo_class: variant_name}`` map routing
+                      each request's SLO class to a plan variant.
+      sampling      — optional `SamplingParams`; None = greedy (default).
     """
 
     def __init__(self, cfg, params, *, max_batch: int = 8, max_len: int = 64,
@@ -107,7 +147,11 @@ class Engine:
                  prefill_bucket: int = 8, kv_layout: str = "paged",
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 speculate: Optional[Tuple[str, str]] = None,
+                 draft_k: int = 4,
+                 slo_routes: Optional[Dict[str, str]] = None,
+                 sampling: Optional[SamplingParams] = None):
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}, "
                              f"got {kv_layout!r}")
@@ -119,10 +163,77 @@ class Engine:
         self.scheduler = scheduler or Scheduler()
         self.prefill_bucket = max(1, int(prefill_bucket))
         self.kv_layout = kv_layout
+        self.sampling = sampling
+        self.draft_k = int(draft_k)
+        self._spec = tuple(speculate) if speculate is not None else None
+        self.slo_routes = dict(slo_routes) if slo_routes else None
         self.stats: Dict[str, float] = {}
         # python-side counters bumped inside the traced function bodies:
         # they count TRACES, not calls (tests pin the retrace bound)
-        self.trace_counts = {"prefill": 0, "decode": 0, "chunk": 0}
+        self.trace_counts = {"prefill": 0, "decode": 0, "chunk": 0,
+                             "draft": 0, "verify": 0, "replay": 0}
+
+        variant_names = getattr(backend, "variant_names", None)
+        if self._spec is not None:
+            if len(self._spec) != 2 or not all(
+                    isinstance(v, str) for v in self._spec):
+                raise ValueError(
+                    f"speculate must be a (draft_variant, target_variant) "
+                    f"pair of variant names, got {speculate!r}")
+            if kv_layout != "paged":
+                raise ValueError(
+                    "speculative decoding requires kv_layout='paged': the "
+                    "dense layout writes garbage KV at masked slots' live "
+                    "positions, so draft/verify masking would corrupt "
+                    "co-batched state (paged masked writes hit the trash "
+                    "page)")
+            if cfg.moe is not None:
+                raise ValueError(
+                    "speculative decoding is unsupported for MoE archs: "
+                    "expert dispatch is batch-composition-dependent, so "
+                    "verify logits would not match sequential decoding")
+            if cfg.frontend:
+                raise ValueError(
+                    "speculative decoding is unsupported for frontend "
+                    "(cross-attention) archs")
+            if sampling is not None:
+                raise ValueError(
+                    "speculative decoding is greedy-only (its token-"
+                    "identity guarantee is an argmax property); drop "
+                    "`sampling` or `speculate`")
+            if slo_routes:
+                raise ValueError(
+                    "speculate and slo_routes are mutually exclusive: "
+                    "speculation pins every slot to the draft/target pair")
+            if self.draft_k < 1:
+                raise ValueError(f"draft_k must be >= 1, got {draft_k}")
+            if variant_names is None:
+                raise ValueError(
+                    "speculate needs a multi-variant PlanSet backend "
+                    "(`repro.runtime.PlanSet`); got "
+                    f"{type(backend).__name__ if backend is not None else None}")
+            for v in self._spec:
+                if v not in variant_names:
+                    raise ValueError(
+                        f"speculate variant {v!r} is not bound: this "
+                        f"PlanSet has {list(variant_names)}")
+        if self.slo_routes:
+            if kv_layout != "paged":
+                raise ValueError(
+                    "SLO routing requires kv_layout='paged': variant-"
+                    "grouped decode masks the other groups' slots, and "
+                    "only the paged layout routes masked KV writes to the "
+                    "trash page instead of live positions")
+            if variant_names is None:
+                raise ValueError(
+                    "slo_routes needs a multi-variant PlanSet backend "
+                    "(`repro.runtime.PlanSet`); got "
+                    f"{type(backend).__name__ if backend is not None else None}")
+            for cls, v in self.slo_routes.items():
+                if v not in variant_names:
+                    raise ValueError(
+                        f"slo_routes[{cls!r}] -> {v!r} is not bound: this "
+                        f"PlanSet has {list(variant_names)}")
 
         if kv_layout == "paged":
             self.page_size = int(page_size)
@@ -134,7 +245,8 @@ class Engine:
                                   else 2 * self.page_size)
             self.prefix_cache = bool(prefix_cache) and \
                 cfg.moe is None and not cfg.frontend and \
-                set(cfg.pattern) <= _PREFIX_SAFE_KINDS
+                set(cfg.pattern) <= _PREFIX_SAFE_KINDS and \
+                not self.slo_routes
             self.pool_mgr = PagePool(self.num_pages, self.page_size)
             # the DEVICE page pool persists across run() calls: the
             # allocator's hash index outlives a run, so the pages it can
@@ -146,34 +258,56 @@ class Engine:
             self.prefix_cache = False
 
         self._kv_axes = T.cache_kv_axes(cfg)
+        self._has_recurrent = any(
+            ax.startswith("slot") for ax in jax.tree.leaves(self._kv_axes))
         self._kv_capacity_bytes, self._kv_page_bytes = self._kv_footprint()
+        if sampling is not None:
+            self._base_key = jax.random.PRNGKey(int(sampling.seed))
+        self._req_counter = 0
 
-        def decode_fn(params, tok, caches, lengths, active):
+        def pick(logits, keys):
+            # greedy argmax, or per-slot sampling advancing the PRNG keys
+            # (keys ride through unchanged when greedy so trace signatures
+            # are sampling-independent)
+            if sampling is None:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
+            tok, keys = sample_tokens(logits, keys, sampling)
+            return tok, keys
+
+        def decode_fn(params, tok, caches, lengths, active, keys):
             self.trace_counts["decode"] += 1
             logits, caches = T.decode_step(params, cfg, tok, caches, lengths,
                                            active=active)
-            return jnp.argmax(logits, axis=-1), caches
+            tok, keys = pick(logits, keys)
+            return tok, keys, caches
 
-        def decode_paged_fn(params, tok, caches, lengths, active, pages):
+        def decode_paged_fn(params, tok, caches, lengths, active, pages,
+                            keys, *, variant=None):
             self.trace_counts["decode"] += 1
             logits, caches = T.decode_step(params, cfg, tok, caches, lengths,
-                                           active=active, pages=pages)
-            return jnp.argmax(logits, axis=-1), caches
+                                           active=active, pages=pages,
+                                           variant=variant)
+            tok, keys = pick(logits, keys)
+            return tok, keys, caches
 
-        def prefill_fn(params, prompts, lengths, pool, slots, frontend):
+        def prefill_fn(params, prompts, lengths, pool, slots, frontend,
+                       keys):
             self.trace_counts["prefill"] += 1
             fresh = T.init_cache(cfg, prompts.shape[0], self.max_len)
             logits, fresh = T.prefill(params, cfg, prompts, fresh,
                                       cross_source=frontend, lengths=lengths)
-            tok0 = jnp.argmax(logits, axis=-1)
-            return tok0, T.scatter_cache(pool, fresh, slots)
+            tok0, keys = pick(logits, keys)
+            return tok0, keys, T.scatter_cache(pool, fresh, slots)
 
-        def chunk_fn(params, tokens, caches, fill, valid, pages, frontend):
+        def chunk_fn(params, tokens, caches, fill, valid, pages, frontend,
+                     keys, *, variant=None):
             self.trace_counts["chunk"] += 1
             logits, caches = T.prefill_chunk(params, cfg, tokens, caches,
                                              fill, valid, pages,
-                                             cross_source=frontend)
-            return jnp.argmax(logits, axis=-1), caches
+                                             cross_source=frontend,
+                                             variant=variant)
+            tok, keys = pick(logits, keys)
+            return tok, keys, caches
 
         def reset_fn(caches, slots):
             # zero the per-slot (non-page) state of freshly admitted slots:
@@ -200,11 +334,89 @@ class Engine:
             return jax.tree.map(f, caches, self._kv_axes)
 
         self._decode = jax.jit(decode_fn)
-        self._decode_paged = jax.jit(decode_paged_fn)
+        self._decode_paged = jax.jit(decode_paged_fn,
+                                     static_argnames=("variant",))
         self._prefill = jax.jit(prefill_fn)
-        self._chunk = jax.jit(chunk_fn)
+        self._chunk = jax.jit(chunk_fn, static_argnames=("variant",))
         self._reset = jax.jit(reset_fn)
         self._copy_pages = jax.jit(copy_pages_fn)
+
+        if self._spec is not None:
+            draft_v, target_v = self._spec
+            k = self.draft_k
+            cap = self.slot_cap
+
+            def restore_slots(caches, snap, mask=None):
+                # put recurrent (slot-resident) state back to its pre-draft
+                # snapshot; page pools keep the draft writes (verify
+                # overwrites every draft-written position).  ``mask`` (B,)
+                # limits the restore to selected slots.
+                def f(leaf, s, ax):
+                    if not ax.startswith("slot"):
+                        return leaf
+                    if mask is None:
+                        return s
+                    shape = ((-1,) + (1,) * (leaf.ndim - 1) if ax == "slot0"
+                             else (1, -1) + (1,) * (leaf.ndim - 2))
+                    return jnp.where(mask.reshape(shape), s, leaf)
+                return jax.tree.map(f, caches, snap, self._kv_axes)
+
+            def draft_fn(params, tok, caches, lengths, active, pages):
+                # k greedy decode steps under the DRAFT variant; slots at
+                # capacity stop advancing (their rows repeat the carry
+                # token — verify's per-slot valid count ignores them)
+                self.trace_counts["draft"] += 1
+                def body(carry, _):
+                    tok, caches, pos = carry
+                    live = active & (pos < cap)
+                    logits, caches = T.decode_step(
+                        params, cfg, tok, caches, pos, active=live,
+                        pages=pages, variant=draft_v)
+                    nxt = jnp.where(
+                        live, jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                        tok)
+                    return (nxt, caches, pos + live.astype(jnp.int32)), nxt
+                init = (tok.astype(jnp.int32), caches,
+                        lengths.astype(jnp.int32))
+                (_, caches, _), toks = jax.lax.scan(body, init, None,
+                                                    length=k)
+                return jnp.swapaxes(toks, 0, 1), caches        # (B, k)
+
+            def verify_fn(params, tok0, drafted, caches, snap, fill, valid,
+                          pages):
+                # one fixed-shape chunk of [t0, d1..dk] under the TARGET
+                # variant: full logits give the target argmax at every
+                # drafted position, and the chunk's KV writes replace all
+                # draft-written positions with target numerics
+                self.trace_counts["verify"] += 1
+                if self._has_recurrent:
+                    caches = restore_slots(caches, snap)
+                tokens = jnp.concatenate(
+                    [tok0[:, None].astype(jnp.int32), drafted], axis=1)
+                logits, caches = T.prefill_chunk(
+                    params, cfg, tokens, caches, fill, valid, pages,
+                    variant=target_v, full_logits=True)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+            def replay_fn(params, tok0, drafted, caches, snap, fill, valid,
+                          pages):
+                # hybrid archs, partial accepts only: rewind the slot's
+                # recurrent state to the round snapshot and re-advance it
+                # over exactly the committed tokens (valid = c); the KV
+                # rewrite is value-identical, recurrent state ends at the
+                # sequential S_{L+c}
+                self.trace_counts["replay"] += 1
+                caches = restore_slots(caches, snap, mask=valid > 0)
+                tokens = jnp.concatenate(
+                    [tok0[:, None].astype(jnp.int32), drafted], axis=1)
+                _, caches = T.prefill_chunk(params, cfg, tokens, caches,
+                                            fill, valid, pages,
+                                            variant=target_v)
+                return caches
+
+            self._draft = jax.jit(draft_fn)
+            self._verify = jax.jit(verify_fn)
+            self._replay = jax.jit(replay_fn)
 
     # ---- helpers ---------------------------------------------------------
 
@@ -268,8 +480,30 @@ class Engine:
                 f"`frontend`, missing on: [{req.rid!r}]")
         return jnp.asarray(req.frontend, jnp.bfloat16)
 
+    def _route(self, req: Request) -> Optional[str]:
+        """The plan variant serving ``req``: the speculative target (all
+        slots), the request's routed SLO class, or the backend default."""
+        if self._spec is not None:
+            return self._spec[1]
+        if self.slo_routes and req.slo is not None:
+            return self.slo_routes[req.slo]
+        return None
+
+    def _next_key(self) -> np.ndarray:
+        """Per-request PRNG key row (zeros when the engine is greedy)."""
+        if self.sampling is None:
+            return np.zeros(2, np.uint32)
+        key = request_key(self._base_key, self._req_counter)
+        self._req_counter += 1
+        return np.asarray(key, np.uint32)
+
     def _validate(self, requests: Sequence[Request]):
         for r in requests:
+            if self.slo_routes and r.slo is not None \
+                    and r.slo not in self.slo_routes:
+                raise ValueError(
+                    f"request {r.rid!r}: SLO class {r.slo!r} has no route "
+                    f"(routes cover {sorted(self.slo_routes)})")
             if self.kv_layout == "dense":
                 if r.prompt_len >= self.max_len:
                     raise ValueError(
@@ -305,7 +539,7 @@ class Engine:
             rid=req.rid, prompt_len=req.prompt_len, tokens=st.tokens,
             finish_reason=reason, ttft_s=st.t_first - st.t_ready,
             finish_s=now - st.t_ready, admitted_step=st.admitted_step,
-            finished_step=step)
+            finished_step=step, slo=req.slo)
 
     def _slot_reason(self, batch: BatchState, slot: int) -> Optional[str]:
         st = batch.slots[slot]
@@ -357,9 +591,11 @@ class Engine:
         P = self._bucket(max(r.prompt_len for r in reqs))
         prompts = np.zeros((kp, P), np.int32)
         lengths = np.zeros(kp, np.int32)
+        keys = np.zeros((kp, 2), np.uint32)
         for i, r in enumerate(reqs):
             prompts[i, :r.prompt_len] = r.prompt
             lengths[i] = r.prompt_len
+            keys[i] = self._next_key()
         # pad rows repeat the last real request (identical rows compute
         # identical caches, so the duplicate scatter writes are no-ops)
         prompts[k:] = prompts[k - 1]
@@ -371,15 +607,20 @@ class Engine:
             rows = [self._frontend_row(r) for r in reqs]
             frontend = jnp.stack(rows + [rows[-1]] * (kp - k))
         t0 = time.monotonic()
-        tok0, batch.caches = self._prefill(self.params, prompts, lengths,
-                                           batch.caches, slots_p, frontend)
+        tok0, keys_out, batch.caches = self._prefill(
+            self.params, prompts, lengths, batch.caches, slots_p, frontend,
+            keys)
         tok0 = np.asarray(tok0)           # sync: first tokens materialized
+        if self.sampling is not None:
+            keys_out = np.asarray(keys_out)
         t1 = time.monotonic()
         self.stats["prefill_s"] += t1 - t0
         self.stats["prefill_calls"] += 1
         for i, (slot, req) in enumerate(admits):
             batch.assign(slot, req, int(tok0[i]),
                          t_ready=t_ready[id(req)], t_first=t1, step=step)
+            if self.sampling is not None:
+                batch.rng[slot] = keys_out[i]
         return [s for s, _ in admits]
 
     # ---- paged admission + chunked prefill -------------------------------
@@ -398,6 +639,8 @@ class Engine:
                 cow_pairs.append((cow_src, pages[len(shared)]))
             batch.start_prefill(slot, req, pages, hit_len,
                                 t_ready=t_ready[id(req)], step=step)
+            batch.variant[slot] = self._route(req)
+            batch.rng[slot] = self._next_key()
             if self.cfg.frontend:
                 row = self._frontend_row(req)
                 if self._fe_buf is None:
@@ -423,39 +666,162 @@ class Engine:
         for key, end in self.pool_mgr.prompt_keys(prompt):
             self.pool_mgr.register(pages[(end - 1) // self.page_size], key)
 
+    def _variant_groups(self, batch: BatchState, sel: np.ndarray):
+        """``[(variant, [slots...]), ...]`` grouping ``sel`` by per-slot
+        plan variant (deterministic order: default group first)."""
+        groups: Dict[Optional[str], List[int]] = {}
+        for b in sel:
+            groups.setdefault(batch.variant[b], []).append(int(b))
+        return sorted(groups.items(),
+                      key=lambda kv: (kv[0] is not None, kv[0] or ""))
+
     def _chunk_step(self, batch: BatchState, step: int,
                     results: Dict[int, RequestResult]):
         """Stream the next ``prefill_chunk`` tokens of EVERY prefilling
-        slot in one fixed-shape jitted call; slots whose prompt completes
+        slot in one fixed-shape jitted call per plan-variant group (one
+        call total when nothing is routed); slots whose prompt completes
         get their first token from this chunk's logits and join decode."""
         B, C = self.max_batch, self.prefill_chunk
         sel = np.nonzero(batch.prefilling)[0]
         tokens = np.zeros((B, C), np.int32)
-        valid = np.zeros(B, np.int32)
+        valid_all = np.zeros(B, np.int32)
         for b in sel:
             req = batch.pending[b].request
             pos = int(batch.fill_pos[b])
             n = min(C, req.prompt_len - pos)
             tokens[b, :n] = req.prompt[pos:pos + n]
-            valid[b] = n
+            valid_all[b] = n
         t0 = time.monotonic()
-        tok, batch.caches = self._chunk(
-            self.params, tokens, batch.caches, batch.fill_pos.copy(), valid,
-            batch.page_table.copy(), self._fe_buf)
-        tok = np.asarray(tok)             # sync
+        outs = []
+        for var, group in self._variant_groups(batch, sel):
+            valid = np.zeros(B, np.int32)
+            valid[group] = valid_all[group]
+            tok, keys, batch.caches = self._chunk(
+                self.params, tokens, batch.caches, batch.fill_pos.copy(),
+                valid, batch.page_table.copy(), self._fe_buf, batch.rng,
+                variant=var)
+            outs.append((group, tok, keys))
+            self.stats["prefill_calls"] += 1
+        tok_all = np.zeros(B, np.int32)
+        keys_all = None
+        for group, tok, keys in outs:
+            tok_all[group] = np.asarray(tok)[group]     # sync
+            if self.sampling is not None:
+                if keys_all is None:
+                    keys_all = np.zeros((B, 2), np.uint32)
+                keys_all[group] = np.asarray(keys)[group]
         t1 = time.monotonic()
         self.stats["prefill_s"] += t1 - t0
-        self.stats["prefill_calls"] += 1
-        batch.fill_pos[sel] += valid[sel]
+        batch.fill_pos[sel] += valid_all[sel]
         batch.lengths[sel] = batch.fill_pos[sel]
         for b in sel:
             pend = batch.pending[b]
             if batch.fill_pos[b] >= pend.request.prompt_len:
                 self._register_prompt(batch, b)
-                batch.assign(b, pend.request, int(tok[b]),
+                batch.assign(b, pend.request, int(tok_all[b]),
                              t_ready=pend.t_ready, t_first=t1,
                              step=pend.admitted_step)
+                if self.sampling is not None:
+                    # only completing slots consumed their sample; mid-
+                    # prompt slots keep their key untouched
+                    batch.rng[b] = keys_all[b]
                 self._maybe_retire(batch, int(b), t1, step, results)
+
+    # ---- decode: per-variant groups --------------------------------------
+
+    def _decode_groups(self, batch: BatchState, step: int,
+                       results: Dict[int, RequestResult]):
+        """One decode step: a single jitted call per active plan-variant
+        group (exactly one call when nothing is routed), the other groups'
+        slots masked inactive — their paged KV writes land in the trash
+        page, so groups cannot corrupt each other."""
+        t = time.monotonic()
+        outs = []
+        for var, group in self._variant_groups(
+                batch, np.nonzero(batch.active)[0]):
+            mask = np.zeros(self.max_batch, bool)
+            mask[group] = True
+            tok, keys, batch.caches = self._decode_paged(
+                self.params, batch.last_tok, batch.caches, batch.lengths,
+                mask, batch.page_table.copy(), batch.rng, variant=var)
+            outs.append((group, tok, keys))
+        tok_all = batch.last_tok.copy()
+        for group, tok, keys in outs:
+            tok_all[group] = np.asarray(tok)[group]     # sync
+            if self.sampling is not None:
+                batch.rng[group] = np.asarray(keys)[group]
+        now = time.monotonic()
+        self.stats["decode_s"] += now - t
+        self.stats["decode_steps"] += 1
+        self._postdecode(batch, tok_all, now, step, results)
+
+    # ---- self-speculative decoding ---------------------------------------
+
+    def _spec_round(self, batch: BatchState, step: int,
+                    results: Dict[int, RequestResult]):
+        """One speculative round: draft ``k`` tokens per active slot with
+        the draft variant, verify all of them in one target-variant chunk,
+        commit the longest agreeing prefix plus the bonus target token
+        (applying the per-token retire predicates exactly as sequential
+        decoding would), and replay partially-accepting slots' recurrent
+        state when the arch has any."""
+        k = self.draft_k
+        sel = np.nonzero(batch.active)[0]
+        tok0 = batch.last_tok.copy()
+        fill0 = batch.lengths.copy()
+        snap = batch.caches                  # pre-draft arrays (immutable)
+        t = time.monotonic()
+        drafted, batch.caches = self._draft(
+            self.params, tok0, batch.caches, fill0, batch.active.copy(),
+            batch.page_table.copy())
+        vcount = np.zeros(self.max_batch, np.int32)
+        vcount[sel] = np.minimum(k + 1, self.slot_cap - fill0[sel])
+        vtok, batch.caches = self._verify(
+            self.params, tok0, drafted, batch.caches, snap, fill0, vcount,
+            batch.page_table.copy())
+        d = np.asarray(drafted)              # sync (both calls dispatched)
+        v = np.asarray(vtok)
+        now = time.monotonic()
+        self.stats["decode_s"] += now - t
+        self.stats["decode_steps"] += 1
+        self.stats["spec_rounds"] += 1
+        replay_valid = np.zeros(self.max_batch, np.int32)
+        for b in sel:
+            vc = int(vcount[b])
+            # drafts that could actually commit: the slot's remaining token
+            # budget caps the round, so over-drafting past it is not a
+            # draft-quality failure and must not dilute the acceptance rate
+            budget_left = int(batch.max_new[b] - batch.n_gen[b])
+            m = 0                            # agreeing draft prefix
+            while m < vc - 1 and d[b, m] == v[b, m]:
+                m += 1
+            st = batch.slots[b]
+            committed = 0
+            retired = False
+            for j in range(m + 1):           # m matches + 1 bonus token
+                tokj = int(v[b, j])
+                st.tokens.append(tokj)
+                batch.last_tok[b] = tokj
+                batch.lengths[b] += 1
+                batch.n_gen[b] += 1
+                committed += 1
+                reason = self._slot_reason(batch, int(b))
+                if reason is not None:
+                    self._retire_slot(batch, int(b), reason, now, step,
+                                      results)
+                    retired = True
+                    break
+            self.stats["spec_drafted"] += min(vc - 1, budget_left)
+            self.stats["spec_accepted"] += min(committed, m)
+            self.stats["spec_committed"] += committed
+            if not retired and committed < vc:
+                replay_valid[b] = committed
+        if self._has_recurrent and replay_valid.any():
+            t = time.monotonic()
+            batch.caches = self._replay(
+                self.params, tok0, drafted, batch.caches, snap, fill0,
+                replay_valid, batch.page_table.copy())
+            self.stats["decode_s"] += time.monotonic() - t
 
     # ---- main loops ------------------------------------------------------
 
@@ -466,6 +832,10 @@ class Engine:
         self._validate(requests)
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "decode_steps": 0,
                       "prefill_calls": 0, "wall_s": 0.0}
+        if self._spec is not None:
+            self.stats.update({"spec_rounds": 0, "spec_drafted": 0,
+                               "spec_accepted": 0, "spec_committed": 0})
+        self._req_counter = 0
         queue = RequestQueue()
         for r in requests:
             queue.push(r)
@@ -477,6 +847,15 @@ class Engine:
             self._run_dense(queue, results)
         self.stats["wall_s"] = time.monotonic() - t0
         self.stats["kv_capacity_bytes"] = self._kv_capacity_bytes
+        if self._spec is not None:
+            drafted = self.stats["spec_drafted"]
+            self.stats["spec_acceptance"] = (
+                round(self.stats["spec_accepted"] / drafted, 4)
+                if drafted else 0.0)
+            rounds = self.stats["spec_rounds"]
+            self.stats["spec_tokens_per_round"] = (
+                round(self.stats["spec_committed"] / rounds, 4)
+                if rounds else 0.0)
         if self.kv_layout == "paged":
             ps = self.pool_mgr.stats
             self.stats["kv_peak_pages"] = ps["peak_pages"]
@@ -519,10 +898,13 @@ class Engine:
                 if not batch.any_active():
                     continue
                 t = time.monotonic()
-                tok, batch.caches = self._decode(
+                tok, keys, batch.caches = self._decode(
                     self.params, batch.last_tok, batch.caches,
-                    batch.lengths, batch.active)
+                    batch.lengths, batch.active, batch.rng)
                 tok = np.asarray(tok)               # sync
+                act = np.nonzero(batch.active)[0]
+                if self.sampling is not None:
+                    batch.rng[act] = np.asarray(keys)[act]
                 now = time.monotonic()
                 self.stats["decode_s"] += now - t
                 self.stats["decode_steps"] += 1
@@ -567,15 +949,9 @@ class Engine:
                 if batch.prefilling.any():
                     self._chunk_step(batch, step, results)
                 if batch.any_active():
-                    t = time.monotonic()
-                    tok, batch.caches = self._decode_paged(
-                        self.params, batch.last_tok, batch.caches,
-                        batch.lengths, batch.active,
-                        batch.page_table.copy())
-                    tok = np.asarray(tok)           # sync
-                    now = time.monotonic()
-                    self.stats["decode_s"] += now - t
-                    self.stats["decode_steps"] += 1
-                    self._postdecode(batch, tok, now, step, results)
+                    if self._spec is not None:
+                        self._spec_round(batch, step, results)
+                    else:
+                        self._decode_groups(batch, step, results)
                 step += 1
         self._paged_caches = batch.caches       # keep cached pages resident

@@ -23,6 +23,7 @@ class RequestResult:
     finish_s: float                   # became-schedulable -> last token
     admitted_step: int
     finished_step: int
+    slo: Any = None                   # SLO class tag (None = unrouted)
 
     @property
     def n_tokens(self) -> int:
@@ -45,10 +46,14 @@ def percentile(xs: Sequence[float], p: float) -> float:
 
 
 def summarize(results: List[RequestResult], wall_s: float) -> Dict[str, Any]:
-    """Aggregate a run: total token throughput + TTFT/decode-rate tails."""
+    """Aggregate a run: total token throughput + TTFT/decode-rate tails.
+
+    When any result carries an SLO class tag, a ``by_slo`` breakdown is
+    added: per-class request count, TTFT p50/p95 and decode-rate p50 — the
+    per-class latency record SLO routing is judged by."""
     ttfts = [r.ttft_s for r in results]
     toks = sum(r.n_tokens for r in results)
-    return {
+    out = {
         "requests": len(results),
         "total_tokens": toks,
         "wall_s": round(wall_s, 4),
@@ -61,3 +66,18 @@ def summarize(results: List[RequestResult], wall_s: float) -> Dict[str, Any]:
             reason: sum(1 for r in results if r.finish_reason == reason)
             for reason in sorted({r.finish_reason for r in results})},
     }
+    classes = sorted({r.slo for r in results if r.slo is not None})
+    if classes:
+        out["by_slo"] = {}
+        for cls in classes:
+            rs = [r for r in results if r.slo == cls]
+            cls_ttfts = [r.ttft_s for r in rs]
+            out["by_slo"][cls] = {
+                "requests": len(rs),
+                "total_tokens": sum(r.n_tokens for r in rs),
+                "ttft_p50_s": round(percentile(cls_ttfts, 50), 4),
+                "ttft_p95_s": round(percentile(cls_ttfts, 95), 4),
+                "decode_tok_s_p50": round(
+                    percentile([r.decode_tok_s for r in rs], 50), 2),
+            }
+    return out

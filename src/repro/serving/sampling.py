@@ -1,0 +1,83 @@
+"""Jit-safe non-greedy sampling for the serving engine.
+
+OFF BY DEFAULT: an engine without a `SamplingParams` takes ``argmax``
+exactly as before, so every greedy parity oracle in the test suite (and
+the speculative-decoding token-identity guarantee) stays valid.
+
+With sampling enabled, randomness is PER-SLOT STATE threaded through the
+jitted step functions: `repro.serving.batch.BatchState` carries a
+``(B, 2)`` uint32 PRNG-key row per slot, each request gets its own
+independent key at admission (``fold_in(base_key, request_counter)``), and
+`sample_tokens` splits each slot's key inside the trace — consuming one
+split per sampled token — and returns the advanced keys alongside the
+tokens.  The engine merges advanced keys back ONLY for slots that actually
+consumed a sample, so a request's token stream depends on nothing but its
+own key and its own logits: co-batched traffic, admission order of OTHER
+requests, and chunked-prefill interleaving cannot perturb it (the same
+per-slot exactness contract the greedy engine pins in tests).
+
+Temperature scales the logits (``logits / max(temperature, 1e-6)``);
+``top_p`` < 1 applies nucleus filtering BEFORE sampling: tokens are ranked
+by logit and kept while the cumulative probability of strictly
+higher-ranked tokens is below ``top_p`` (the top-1 token always survives,
+so ``top_p -> 0`` degenerates to greedy).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Engine-level sampling configuration (one policy per engine run).
+
+    ``temperature`` > 0 softens/sharpens the distribution; ``top_p`` in
+    (0, 1] keeps the smallest logit-ranked nucleus with cumulative
+    probability >= top_p; ``seed`` derives every request's per-slot key —
+    two runs with the same seed over the same trace sample identical
+    tokens."""
+    temperature: float = 1.0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (self.temperature > 0.0):
+            raise ValueError(f"temperature must be > 0 (greedy decoding is "
+                             f"sampling=None), got {self.temperature}")
+        if not (0.0 < self.top_p <= 1.0):
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+
+def request_key(base: jax.Array, counter: int) -> jax.Array:
+    """The per-request PRNG key: independent stream per admission index."""
+    return jax.random.fold_in(base, counter)
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array,
+                  params: SamplingParams):
+    """Sample one token per slot.  ``logits`` (B, V), ``keys`` (B, 2)
+    uint32 per-slot PRNG keys.  Returns ``(tokens (B,) int32, advanced
+    keys (B, 2))`` — jit-safe, one key split per slot per call.
+
+    Slots whose logits are garbage (inactive/masked rows) still consume a
+    split here; the engine discards those keys by merging back only the
+    rows that actually sampled, so inactive slots' streams are untouched."""
+    keys = jnp.asarray(keys, jnp.uint32)
+    nxt = jax.vmap(lambda k: jax.random.split(k))(keys)     # (B, 2, 2)
+    carry, use = nxt[:, 0], nxt[:, 1]
+    l = logits.astype(jnp.float32) / jnp.maximum(params.temperature, 1e-6)
+    if params.top_p < 1.0:
+        sort = jnp.sort(l, axis=-1)[:, ::-1]                # descending
+        probs = jax.nn.softmax(sort, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep while the mass STRICTLY above this rank is < top_p: the
+        # top-1 token is always kept (cum - probs == 0 at rank 0)
+        keep = (cum - probs) < params.top_p
+        kth = jnp.min(jnp.where(keep, sort, jnp.inf), axis=-1,
+                      keepdims=True)
+        l = jnp.where(l >= kth, l, -jnp.inf)
+    tok = jax.vmap(jax.random.categorical)(use, l)
+    return tok.astype(jnp.int32), carry

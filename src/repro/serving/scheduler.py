@@ -43,13 +43,18 @@ class Request:
     ``eos_id`` retires the request early when sampled.  ``arrival_step``
     hides the request from the scheduler until the engine's decode-step
     clock reaches it (trace replay).  ``frontend`` optionally carries a
-    per-request cross-attention source row (vision/audio archs)."""
+    per-request cross-attention source row (vision/audio archs).  ``slo``
+    optionally names the request's SLO class — engines built on a
+    multi-plan `repro.runtime.PlanSet` route each class to a bound plan
+    variant (``Engine(slo_routes=...)``), making the paper's
+    accuracy/latency trade-off per-request instead of per-deployment."""
     rid: Any
     prompt: np.ndarray
     max_new_tokens: int
     eos_id: Optional[int] = None
     arrival_step: int = 0
     frontend: Optional[np.ndarray] = None
+    slo: Optional[str] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, dtype=np.int32).reshape(-1)

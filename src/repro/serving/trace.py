@@ -27,7 +27,8 @@ def synthetic_trace(n: int, *, vocab: int, min_prompt: int = 4,
                     max_new: int = 16, seed: int = 0,
                     arrival_every: int = 0, shared_prefix: int = 0,
                     long_every: int = 0,
-                    long_prompt: Optional[int] = None) -> List[Request]:
+                    long_prompt: Optional[int] = None,
+                    slo_classes: Optional[List[str]] = None) -> List[Request]:
     """``n`` mixed-length requests with deterministic prompts.  With
     ``arrival_every`` > 0, request i only becomes visible at decode step
     ``i * arrival_every`` (a paced open-loop trace); 0 means everything is
@@ -38,8 +39,10 @@ def synthetic_trace(n: int, *, vocab: int, min_prompt: int = 4,
     workload).  ``long_every`` k > 0 makes every k-th request draw a
     ``long_prompt``-token prompt (default ``4 * max_prompt``) — the
     skewed-length workload where a dense B x max_len pool pays the long
-    tail for every slot.  Defaults leave the token stream byte-identical to
-    traces generated before these knobs existed."""
+    tail for every slot.  ``slo_classes`` tags request i with class
+    ``slo_classes[i % len(slo_classes)]`` (round-robin — the SLO-routing
+    workload; tags don't consume rng draws).  Defaults leave the token
+    stream byte-identical to traces generated before these knobs existed."""
     rng = np.random.default_rng(seed)
     prefix = None
     if shared_prefix > 0:
@@ -61,7 +64,9 @@ def synthetic_trace(n: int, *, vocab: int, min_prompt: int = 4,
             rid=f"r{i}",
             prompt=prompt,
             max_new_tokens=gen,
-            arrival_step=i * arrival_every))
+            arrival_step=i * arrival_every,
+            slo=(slo_classes[i % len(slo_classes)] if slo_classes
+                 else None)))
     return reqs
 
 
@@ -92,7 +97,8 @@ def load_trace(path, vocab: Optional[int] = None) -> List[Request]:
             rid=rid, prompt=prompt,
             max_new_tokens=int(doc.get("max_new_tokens", 16)),
             eos_id=doc.get("eos_id"),
-            arrival_step=int(doc.get("arrival_step", 0))))
+            arrival_step=int(doc.get("arrival_step", 0)),
+            slo=doc.get("slo")))
     return reqs
 
 
@@ -101,9 +107,11 @@ def save_trace(path, requests: List[Request]) -> Path:
     p.parent.mkdir(parents=True, exist_ok=True)
     lines = []
     for r in requests:
-        lines.append(json.dumps({
-            "id": r.rid, "prompt": [int(t) for t in r.prompt],
-            "max_new_tokens": r.max_new_tokens, "eos_id": r.eos_id,
-            "arrival_step": r.arrival_step}))
+        doc = {"id": r.rid, "prompt": [int(t) for t in r.prompt],
+               "max_new_tokens": r.max_new_tokens, "eos_id": r.eos_id,
+               "arrival_step": r.arrival_step}
+        if r.slo is not None:
+            doc["slo"] = r.slo
+        lines.append(json.dumps(doc))
     p.write_text("\n".join(lines) + "\n")
     return p

@@ -49,6 +49,29 @@ buffers deduplicated wherever layers coincide across artifacts):
     2 naming the first offending variant; the per-variant coverage diff
     prints layer NAMES, not counts.
 
+ROBUSTNESS — the engine's deadline scheduling, overload handling and fault
+containment are driven from the same CLI:
+
+  * ``--policy deadline`` orders admission by priority/slack and preempts
+    a running slot for a more urgent arrival (``--priorities`` /
+    ``--deadlines-ms`` tag synthetic requests round-robin);
+    ``--check-preempt-parity`` replays the trace FCFS-without-preemption
+    and exits nonzero unless every completed request's tokens match.
+  * ``--poisson RATE`` restamps arrivals as a seeded open-loop Poisson
+    process at RATE requests/step; ``--max-queue-depth`` /
+    ``--page-watermark`` / ``--request-timeout`` shed overload as
+    structured `ShedResult`s instead of queueing forever.
+  * ``--fault-spec`` injects seeded faults
+    (``kind@step:slot[xN]`` / ``kind~rate``; kinds: nonfinite_logits,
+    corrupt_page, stuck) that the engine detects, quarantines and
+    requeues — the summary line reports detections/requeues/sheds.
+  * ``--degrade-to CLASS --ttft-target-s S`` routes NEW requests to the
+    CLASS variant of the ``--slo-variant`` bank while the sliding p95
+    TTFT exceeds S, and back once it recovers.
+
+A ``--trace`` path that is missing or malformed exits 2 with a message
+naming the file (and line) instead of a traceback.
+
 CNN artifacts serve through the same flag with the ``cnn:<config>`` arch
 convention — the conv layers execute through the im2col'd planned kernels:
 
@@ -242,11 +265,16 @@ def serve_engine(args, cfg, params, backend=None):
     self-speculative (and ``--check-spec-parity`` replays it target-only to
     assert token identity); with ``--slo-variant`` routes each request's
     SLO class to its plan variant."""
-    from repro.serving import (Engine, SamplingParams, Scheduler, load_trace,
-                               summarize, synthetic_trace)
+    from repro.serving import (Engine, FaultInjector, SamplingParams,
+                               Scheduler, ShedResult, load_trace,
+                               poisson_arrivals, summarize, synthetic_trace)
     speculate = ("draft", "target") if args.speculate else None
-    slo_routes = ({cls: cls for cls in args.slo_classes}
-                  if getattr(args, "slo_classes", None) else None)
+    # the --degrade-to class is bound in the bank but is NOT an SLO route:
+    # requests reach it only while the engine is degraded, never by tag
+    route_classes = [c for c in getattr(args, "slo_classes", [])
+                     if c != args.degrade_to]
+    slo_routes = ({cls: cls for cls in route_classes}
+                  if route_classes else None)
     sampling = None
     if args.temperature is not None or args.top_p < 1.0:
         sampling = SamplingParams(
@@ -254,19 +282,38 @@ def serve_engine(args, cfg, params, backend=None):
                          else 1.0),
             top_p=args.top_p, seed=args.seed)
     if args.trace:
-        trace = load_trace(args.trace, vocab=cfg.vocab)
+        try:
+            trace = load_trace(args.trace, vocab=cfg.vocab)
+        except FileNotFoundError:
+            print(f"[serve] ERROR: trace file not found: {args.trace}",
+                  file=sys.stderr)
+            sys.exit(2)
+        except (ValueError, OSError) as e:
+            print(f"[serve] ERROR: bad trace: {e}", file=sys.stderr)
+            sys.exit(2)
         print(f"[serve] trace {args.trace}: {len(trace)} requests")
     else:
+        priorities = ([int(p) for p in args.priorities.split(",")]
+                      if args.priorities else None)
+        deadlines = ([None if d in ("", "none") else float(d)
+                      for d in args.deadlines_ms.split(",")]
+                     if args.deadlines_ms else None)
         trace = synthetic_trace(
             args.requests, vocab=cfg.vocab,
             min_prompt=max(2, args.prompt_len // 4),
             max_prompt=args.prompt_len,
             min_new=max(2, args.gen_len // 4), max_new=args.gen_len,
             seed=args.seed, shared_prefix=args.shared_prefix,
-            slo_classes=(sorted(slo_routes) if slo_routes else None))
+            slo_classes=(sorted(slo_routes) if slo_routes else None),
+            priorities=priorities, deadlines_ms=deadlines)
         print(f"[serve] synthetic trace: {len(trace)} mixed-length requests "
               f"(prompts <= {args.prompt_len}, gen <= {args.gen_len}, "
               f"shared prefix {args.shared_prefix})")
+    if args.poisson:
+        trace = poisson_arrivals(trace, args.poisson, seed=args.seed)
+        print(f"[serve] open-loop arrivals: Poisson at {args.poisson} "
+              f"req/step (last arrival step "
+              f"{max(r.arrival_step for r in trace)})")
     if cfg.frontend:
         key = jax.random.PRNGKey(args.seed)
         for i, r in enumerate(trace):
@@ -275,15 +322,27 @@ def serve_engine(args, cfg, params, backend=None):
                 (cfg.frontend_tokens, cfg.d_model), jnp.bfloat16))
     max_len = args.max_len or max(r.prompt_len + r.max_new_tokens
                                   for r in trace)
+    injector = (FaultInjector.parse(args.fault_spec, seed=args.seed)
+                if args.fault_spec else None)
     engine = Engine(cfg, params, max_batch=args.max_batch, max_len=max_len,
                     backend=backend, scheduler=Scheduler(args.policy),
                     kv_layout=args.kv_layout, page_size=args.page_size,
                     num_pages=args.num_pages,
                     prefill_chunk=args.prefill_chunk,
                     speculate=speculate, draft_k=args.draft_k,
-                    slo_routes=slo_routes, sampling=sampling)
+                    slo_routes=slo_routes, sampling=sampling,
+                    max_queue_depth=args.max_queue_depth,
+                    page_watermark=args.page_watermark,
+                    request_timeout_s=args.request_timeout,
+                    degrade_to=args.degrade_to,
+                    ttft_target_s=args.ttft_target_s,
+                    injector=injector)
     results = engine.run(trace)
     for r in results:
+        if isinstance(r, ShedResult):
+            print(f"[serve]  {r.rid}: SHED ({r.reason}) at step "
+                  f"{r.shed_step} after {r.waited_s * 1e3:.0f}ms")
+            continue
         print(f"[serve]  {r.rid}: prompt={r.prompt_len} "
               f"gen={r.n_tokens} ({r.finish_reason}) "
               f"ttft={r.ttft_s * 1e3:.0f}ms "
@@ -295,6 +354,50 @@ def serve_engine(args, cfg, params, backend=None):
           f"ttft p50 {summ['ttft_p50_s'] * 1e3:.0f}ms / "
           f"p95 {summ['ttft_p95_s'] * 1e3:.0f}ms, "
           f"{engine.stats['decode_steps']} decode steps)")
+    st = engine.stats
+    if (st["preemptions"] or st["shed_requests"] or st["timeouts"]
+            or st["faults_injected"] or st["degrade_transitions"]
+            or args.policy == "deadline" or injector is not None
+            or args.max_queue_depth or args.page_watermark
+            or args.request_timeout):
+        print(f"[serve] robustness: preemptions={st['preemptions']} "
+              f"resumes={st['resumes']} sheds={st['shed_requests']} "
+              f"shed_rate={summ['shed_rate']} timeouts={st['timeouts']} "
+              f"faults_injected={st['faults_injected']} "
+              f"faults_detected={st['faults_detected']} "
+              f"heartbeat_trips={st['heartbeat_trips']} "
+              f"degrade_transitions={st['degrade_transitions']} "
+              f"degrade_rate={summ['degrade_rate']}")
+        if "shed_reasons" in summ:
+            print(f"[serve] shed reasons: "
+                  + " ".join(f"{k}:{v}" for k, v in
+                             sorted(summ["shed_reasons"].items())))
+        for step_t, kind, p95 in engine.degrade_log:
+            print(f"[serve] degrade transition @step {step_t}: {kind} "
+                  f"(window p95 ttft {p95 * 1e3:.0f}ms)")
+    if args.check_preempt_parity:
+        # replay the SAME trace FCFS without preemption/faults/sheds and
+        # compare every COMPLETED request's token stream — preemption must
+        # be a pure scheduling decision, invisible in the tokens
+        ref_engine = Engine(
+            cfg, params, max_batch=args.max_batch, max_len=max_len,
+            backend=backend, scheduler=Scheduler("continuous"),
+            kv_layout=args.kv_layout, page_size=args.page_size,
+            num_pages=args.num_pages, prefill_chunk=args.prefill_chunk,
+            slo_routes=slo_routes, sampling=sampling)
+        ref = {r.rid: r for r in ref_engine.run(trace)}
+        # timed-out requests carry a clean PREFIX of the full stream, so
+        # every non-shed result must prefix-match its FCFS replay
+        done = [r for r in results if not isinstance(r, ShedResult)]
+        bad = [r.rid for r in done
+               if isinstance(ref.get(r.rid), ShedResult)
+               or r.tokens != ref[r.rid].tokens[:len(r.tokens)]]
+        print(f"[serve] preemption token parity "
+              f"({len(done)} completed requests): {not bad}")
+        if bad:
+            print(f"[serve] ERROR: preempted serving diverged from FCFS "
+                  f"replay on requests {bad}", file=sys.stderr)
+            sys.exit(2)
     if args.kv_layout == "paged":
         st = engine.stats
         print(f"[serve] paged kv: page_size={engine.page_size} "
@@ -415,9 +518,47 @@ def main(argv=None):
                     help="engine per-slot sequence capacity (default: "
                          "longest prompt+gen in the trace)")
     ap.add_argument("--policy", default="continuous",
-                    choices=["continuous", "static"],
+                    choices=["continuous", "static", "deadline"],
                     help="engine admission policy (static = gang batching "
-                         "baseline)")
+                         "baseline; deadline = priority/slack ordering "
+                         "with mid-decode preemption)")
+    ap.add_argument("--priorities", default=None,
+                    help="synthetic trace: comma-separated ints assigned "
+                         "round-robin as request priorities (higher = more "
+                         "urgent, used by --policy deadline)")
+    ap.add_argument("--deadlines-ms", default=None,
+                    help="synthetic trace: comma-separated per-request "
+                         "deadlines in ms assigned round-robin ('none' "
+                         "for no deadline)")
+    ap.add_argument("--poisson", type=float, default=None, metavar="RATE",
+                    help="restamp arrivals as a seeded open-loop Poisson "
+                         "process at RATE requests per engine step")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="shed the newest waiting requests once the "
+                         "admission queue exceeds this depth")
+    ap.add_argument("--page-watermark", type=float, default=None,
+                    help="paged layout: shed waiting requests when the "
+                         "free-page fraction drops below this watermark")
+    ap.add_argument("--request-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="per-request wall-clock budget: queued requests "
+                         "shed, running requests retire with their partial "
+                         "tokens (finish_reason='timeout')")
+    ap.add_argument("--fault-spec", default=None,
+                    help="inject seeded faults: comma-separated "
+                         "kind@step:slot[xN] events and/or kind~rate "
+                         "Bernoulli rates (kinds: nonfinite_logits, "
+                         "corrupt_page, stuck)")
+    ap.add_argument("--degrade-to", default=None, metavar="CLASS",
+                    help="graceful degradation: route NEW requests to this "
+                         "--slo-variant class while the sliding p95 TTFT "
+                         "exceeds --ttft-target-s")
+    ap.add_argument("--ttft-target-s", type=float, default=None,
+                    help="p95 TTFT target (seconds) driving --degrade-to")
+    ap.add_argument("--check-preempt-parity", action="store_true",
+                    help="after a --policy deadline run, replay the trace "
+                         "FCFS without preemption and exit nonzero unless "
+                         "every completed request's tokens prefix-match")
     ap.add_argument("--kv-layout", default="paged",
                     choices=["paged", "dense"],
                     help="KV-cache layout: paged (block-table pool with "
@@ -474,6 +615,28 @@ def main(argv=None):
         # without an artifact nothing executes as mapped — passing the gate
         # green would be exactly the silent fallback it exists to catch
         ap.error("--require-full-coverage needs --mapping")
+
+    robust_flags = (args.policy == "deadline" or args.poisson
+                    or args.max_queue_depth or args.page_watermark
+                    or args.request_timeout or args.fault_spec
+                    or args.degrade_to or args.check_preempt_parity
+                    or args.priorities or args.deadlines_ms)
+    if robust_flags and not args.engine:
+        ap.error("robustness flags (--policy deadline / --poisson / "
+                 "--max-queue-depth / --page-watermark / --request-timeout "
+                 "/ --fault-spec / --degrade-to / --check-preempt-parity / "
+                 "--priorities / --deadlines-ms) need --engine")
+    if args.degrade_to:
+        if args.ttft_target_s is None:
+            ap.error("--degrade-to needs --ttft-target-s")
+        if not any(s.startswith(f"{args.degrade_to}=")
+                   for s in args.slo_variant):
+            ap.error(f"--degrade-to {args.degrade_to!r} must name a "
+                     f"--slo-variant class of the bank")
+    elif args.ttft_target_s is not None:
+        ap.error("--ttft-target-s needs --degrade-to")
+    if args.check_preempt_parity and args.policy != "deadline":
+        ap.error("--check-preempt-parity needs --policy deadline")
 
     args.slo_classes = []
     if args.speculate or args.slo_variant:

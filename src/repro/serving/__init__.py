@@ -85,6 +85,29 @@ Multi-plan serving (PlanSet precision bank)
     slots' live positions, so variant-grouped masked stepping would
     corrupt co-batched requests there.
 
+Robustness (deadline scheduling, overload, faults)
+    `Scheduler("deadline")` orders admission by ``(priority, slack)`` —
+    slack is time-to-deadline — and PREEMPTS a running slot for a more
+    urgent arrival: the victim's committed tokens are recorded, its hashed
+    pages PARK in the `PagePool` LRU (still matchable), and it re-enters
+    the queue front; resumption prefills ``original prompt + committed
+    tokens``, which the prefix cache serves mostly from the parked pages,
+    and the token stream is IDENTICAL to an unpreempted run (pinned in
+    tests — preemption is a scheduling decision, invisible in the output).
+    Overload never blocks forever: queued requests past
+    ``max_queue_depth`` / below the free-page ``page_watermark`` /
+    over the ``request_timeout_s`` wall-clock budget are SHED with a
+    structured `ShedResult` (running requests time out with their partial
+    tokens).  A breached p95-TTFT target (``ttft_target_s``) degrades NEW
+    admissions to a cheaper PlanSet variant (``degrade_to``) and recovers
+    with hysteresis; transitions land in ``engine.degrade_log``.  A seeded
+    `FaultInjector` (faults.py) drives the containment machinery: a
+    ``jnp.isfinite`` screen over committed logits, slot quarantine,
+    corrupted-page purge from the prefix cache, requeue-once recovery
+    (token-identical — committed tokens are always clean), and a
+    `repro.distributed.fault_tolerance.HeartbeatMonitor` on the engine's
+    step clock that catches silently stuck slots.
+
 Request lifecycle (paged)
     submitted -> (arrival_step reached) ready -> fits in free pages ->
     pages reserved (prefix-cache hits map shared pages; only the unique
@@ -128,17 +151,22 @@ Exactness
     identical batches.
 """
 from repro.serving.batch import BatchState, SlotState
-from repro.serving.engine import KV_LAYOUTS, Engine
-from repro.serving.metrics import RequestResult, percentile, summarize
+from repro.serving.engine import KV_LAYOUTS, Engine, EngineResult
+from repro.serving.faults import FAULT_KINDS, FaultEvent, FaultInjector
+from repro.serving.metrics import (RequestResult, Result, ShedResult,
+                                   percentile, summarize)
 from repro.serving.paged import PagePool
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import (POLICIES, Request, RequestQueue,
-                                     Scheduler)
-from repro.serving.trace import load_trace, save_trace, synthetic_trace
+                                     Scheduler, urgency)
+from repro.serving.trace import (load_trace, poisson_arrivals, save_trace,
+                                 synthetic_trace)
 
 __all__ = [
-    "BatchState", "Engine", "KV_LAYOUTS", "PagePool", "POLICIES", "Request",
-    "RequestQueue", "RequestResult", "SamplingParams", "Scheduler",
-    "SlotState", "load_trace", "percentile", "save_trace", "summarize",
-    "synthetic_trace",
+    "BatchState", "Engine", "EngineResult", "FAULT_KINDS", "FaultEvent",
+    "FaultInjector", "KV_LAYOUTS", "PagePool", "POLICIES", "Request",
+    "RequestQueue", "RequestResult", "Result", "SamplingParams",
+    "Scheduler", "ShedResult", "SlotState", "load_trace",
+    "percentile", "poisson_arrivals", "save_trace", "summarize",
+    "synthetic_trace", "urgency",
 ]

@@ -41,10 +41,21 @@ class SlotState:
 
 @dataclasses.dataclass
 class PendingPrefill:
-    """A request whose prompt is still streaming into its pages."""
+    """A request whose prompt is still streaming into its pages.
+
+    ``prompt`` is the EFFECTIVE prompt being prefilled — for a fresh
+    request it is ``request.prompt``; for a request resuming after
+    preemption/fault-requeue it is the original prompt plus every token
+    already committed (``prior_tokens``), whose prefill reproduces the
+    exact decode state the slot held when it was retired.  ``t_first``
+    preserves the original first-token timestamp across a resume (TTFT is
+    a property of the first admission, not the resume)."""
     request: Request
     t_ready: float = 0.0
     admitted_step: int = 0
+    prompt: Optional[np.ndarray] = None
+    prior_tokens: List[int] = dataclasses.field(default_factory=list)
+    t_first: Optional[float] = None
 
 
 class BatchState:
@@ -107,11 +118,16 @@ class BatchState:
     # ---- transitions -----------------------------------------------------
 
     def start_prefill(self, slot: int, req: Request, pages: List[int],
-                      hit_len: int, t_ready: float, step: int) -> None:
+                      hit_len: int, t_ready: float, step: int,
+                      prompt: Optional[np.ndarray] = None,
+                      prior_tokens: Optional[List[int]] = None,
+                      t_first: Optional[float] = None) -> None:
         """Begin chunked prefill of ``req`` in ``slot``: map its ``pages``
         into the slot's page table and start streaming the prompt at
         position ``hit_len`` (>0 when a cached prefix was matched — those
-        tokens' KV is already resident in the shared pages)."""
+        tokens' KV is already resident in the shared pages).  ``prompt``
+        overrides the prefilled token stream for preemption/fault resumes
+        (original prompt + committed ``prior_tokens``)."""
         if self.active[slot] or self.prefilling[slot]:
             raise RuntimeError(f"slot {slot} is busy")
         self.prefilling[slot] = True
@@ -120,27 +136,37 @@ class BatchState:
         self.slot_pages[slot] = list(pages)
         self.page_table[slot, :] = 0
         self.page_table[slot, :len(pages)] = pages
-        self.pending[slot] = PendingPrefill(request=req, t_ready=t_ready,
-                                            admitted_step=step)
+        self.pending[slot] = PendingPrefill(
+            request=req, t_ready=t_ready, admitted_step=step,
+            prompt=req.prompt if prompt is None else prompt,
+            prior_tokens=list(prior_tokens or []), t_first=t_first)
 
     def assign(self, slot: int, req: Request, first_token: int,
-               t_ready: float, t_first: float, step: int) -> SlotState:
+               t_ready: float, t_first: float, step: int,
+               prompt_len: Optional[int] = None,
+               prior_tokens: Optional[List[int]] = None) -> SlotState:
         """Occupy ``slot`` with ``req`` whose prefill produced
         ``first_token``; the slot's cache length is the prompt length (the
-        first generated token is not in the cache yet)."""
+        first generated token is not in the cache yet).  Resumes pass the
+        EFFECTIVE ``prompt_len`` (original + committed tokens already in
+        the cache) and ``prior_tokens`` so the slot picks up mid-stream:
+        the token count, cache position, eos/max-new accounting all
+        continue exactly where the preempted slot left off."""
         if self.active[slot]:
             raise RuntimeError(f"slot {slot} is still active")
-        st = SlotState(request=req, tokens=[int(first_token)],
+        toks = list(prior_tokens or []) + [int(first_token)]
+        st = SlotState(request=req, tokens=toks,
                        t_ready=t_ready, t_first=t_first, admitted_step=step)
         self.slots[slot] = st
-        self.lengths[slot] = req.prompt_len
+        self.lengths[slot] = (req.prompt_len if prompt_len is None
+                              else int(prompt_len))
         self.active[slot] = True
         self.prefilling[slot] = False
         self.pending[slot] = None
         self.last_tok[slot] = int(first_token)
         self.eos_id[slot] = -1 if req.eos_id is None else int(req.eos_id)
         self.max_new[slot] = int(req.max_new_tokens)
-        self.n_gen[slot] = 1
+        self.n_gen[slot] = len(toks)
         return st
 
     def retire(self, slot: int) -> SlotState:

@@ -78,6 +78,51 @@ uses STATIC activation scales; dynamic max-abs activation quantization is
 computed over the whole pooled batch and therefore depends on batch
 composition (this is also why speculative verify, whose batch rows differ
 from sequential decode's, requires static scales for token identity).
+
+ROBUSTNESS LAYER (paged layout) — the engine stays on its SLO under
+overload and numerical faults instead of degrading unboundedly:
+
+  * DEADLINE SCHEDULING + PREEMPTION (``Scheduler(policy="deadline")``):
+    admission is ordered by `repro.serving.scheduler.urgency` (priority,
+    then deadline slack) instead of FCFS, and when a waiting request is
+    strictly more urgent than the least-urgent running one (and no free
+    slot/pages can serve it) the victim slot is RETIRE-AND-REQUEUED: its
+    committed tokens are recorded, its pages are released — hashed prefix
+    pages park in the `PagePool` LRU, still matchable — and the request
+    resumes later by prefilling ``original prompt + committed tokens``,
+    which by the prefill/decode logit-equality invariant reproduces the
+    exact decode state, so the final token stream is IDENTICAL to an
+    unpreempted run (greedy + static scales, like all parity guarantees
+    here).  With the prefix cache on, resumption re-prefills only the
+    unhashed tail.  At most one preemption fires per step and each
+    request is preempted at most ``max_preemptions`` times.
+  * LOAD SHEDDING (``max_queue_depth`` / ``page_watermark`` /
+    ``request_timeout_s``): instead of queueing without bound, excess
+    visible requests are rejected with a structured
+    `repro.serving.metrics.ShedResult` — newest-first beyond the queue
+    depth, everything behind the head of line when the free-page
+    fraction drops below the watermark, and any request (queued OR
+    running) that outlives the timeout (running requests retire with
+    their partial tokens and ``finish_reason="timeout"``).
+  * PRECISION DEGRADATION (``degrade_to=variant, ttft_target_s=...``):
+    a sliding p95 over observed TTFTs; on breach, NEW admissions route to
+    the cheaper `PlanSet` variant (the paper's accuracy axis spent to buy
+    back latency), and route back once p95 recovers below a hysteresis
+    fraction of the target.  Every transition is recorded
+    (``degrade_log`` / ``stats["degrade_transitions"]``); requests served
+    degraded carry ``RequestResult.degraded=True``.
+  * FAULT CONTAINMENT (``injector=FaultInjector(...)``): every decode /
+    chunk step returns a ``jnp.isfinite`` screen over its logits; a slot
+    whose logits go non-finite commits NOTHING that step — its pages are
+    purged from the prefix cache (corruption must never be re-matched),
+    the slot is quarantined for ``quarantine_steps``, and the request is
+    requeued ONCE with its (clean) committed tokens; a second fault sheds
+    it with ``ShedResult(reason="fault")``.  Stuck slots — which commit
+    nothing, so the logit screen cannot see them — are caught by the
+    `repro.distributed.fault_tolerance.HeartbeatMonitor` running on the
+    engine's step clock (slots beat on token commit / chunk progress); a
+    `StragglerPolicy` EMA over decode-step wall times records outlier
+    steps in ``stats["straggler_events"]``.
 """
 from __future__ import annotations
 
@@ -85,19 +130,25 @@ import contextlib
 import math
 import time
 import warnings
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.fault_tolerance import HeartbeatMonitor, \
+    StragglerPolicy
 from repro.models import transformer as T
 from repro.models.managed import matmul_backend
 from repro.serving.batch import BatchState
-from repro.serving.metrics import RequestResult
+from repro.serving.faults import FaultInjector
+from repro.serving.metrics import RequestResult, ShedResult, percentile
 from repro.serving.paged import PagePool
 from repro.serving.sampling import SamplingParams, request_key, sample_tokens
-from repro.serving.scheduler import Request, RequestQueue, Scheduler
+from repro.serving.scheduler import Request, RequestQueue, Scheduler, urgency
+
+EngineResult = Union[RequestResult, ShedResult]
 
 KV_LAYOUTS = ("paged", "dense")
 
@@ -140,6 +191,27 @@ class Engine:
       slo_routes    — optional ``{slo_class: variant_name}`` map routing
                       each request's SLO class to a plan variant.
       sampling      — optional `SamplingParams`; None = greedy (default).
+
+    Robustness (see the ROBUSTNESS LAYER section of the module docstring;
+    all of these are paged-only except the queue-level sheds/timeouts):
+      max_queue_depth  — shed (``ShedResult(reason="queue_depth")``) the
+                         newest visible queued requests beyond this depth.
+      page_watermark   — fraction in (0, 1]: when free pages drop below it,
+                         shed every visible queued request behind the head
+                         of line (``reason="page_watermark"``).
+      request_timeout_s— wall-clock budget per request measured from when
+                         it became schedulable: queued requests shed
+                         (``reason="timeout"``), running requests retire
+                         with partial tokens (``finish_reason="timeout"``).
+      max_preemptions  — per-request retire-and-requeue cap under the
+                         deadline policy (bounds preemption thrash).
+      degrade_to       — `PlanSet` variant name new admissions route to
+                         while the TTFT p95 estimate breaches
+                         ``ttft_target_s`` (required together; hysteresis
+                         recovery at ``degrade_recover_frac * target``).
+      injector         — optional `repro.serving.faults.FaultInjector`.
+      quarantine_steps — steps a slot sits out after a detected fault.
+      heartbeat_steps  — step-clock deadline for the stuck-slot monitor.
     """
 
     def __init__(self, cfg, params, *, max_batch: int = 8, max_len: int = 64,
@@ -151,7 +223,18 @@ class Engine:
                  speculate: Optional[Tuple[str, str]] = None,
                  draft_k: int = 4,
                  slo_routes: Optional[Dict[str, str]] = None,
-                 sampling: Optional[SamplingParams] = None):
+                 sampling: Optional[SamplingParams] = None,
+                 max_queue_depth: Optional[int] = None,
+                 page_watermark: Optional[float] = None,
+                 request_timeout_s: Optional[float] = None,
+                 max_preemptions: int = 2,
+                 degrade_to: Optional[str] = None,
+                 ttft_target_s: Optional[float] = None,
+                 degrade_window: int = 8,
+                 degrade_recover_frac: float = 0.7,
+                 injector: Optional[FaultInjector] = None,
+                 quarantine_steps: int = 2,
+                 heartbeat_steps: int = 32):
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(f"kv_layout must be one of {KV_LAYOUTS}, "
                              f"got {kv_layout!r}")
@@ -167,6 +250,32 @@ class Engine:
         self.draft_k = int(draft_k)
         self._spec = tuple(speculate) if speculate is not None else None
         self.slo_routes = dict(slo_routes) if slo_routes else None
+        self.max_queue_depth = max_queue_depth
+        self.page_watermark = page_watermark
+        self.request_timeout_s = request_timeout_s
+        self.max_preemptions = int(max_preemptions)
+        self.degrade_to = degrade_to
+        self.injector = injector
+        self.quarantine_steps = int(quarantine_steps)
+        self.heartbeat_steps = int(heartbeat_steps)
+        if max_queue_depth is not None and max_queue_depth < 1:
+            raise ValueError(f"max_queue_depth must be >= 1, "
+                             f"got {max_queue_depth}")
+        if page_watermark is not None and not 0.0 < page_watermark <= 1.0:
+            raise ValueError(f"page_watermark must be in (0, 1], "
+                             f"got {page_watermark}")
+        if request_timeout_s is not None and request_timeout_s < 0:
+            raise ValueError(f"request_timeout_s must be >= 0, "
+                             f"got {request_timeout_s}")
+        if (degrade_to is None) != (ttft_target_s is None):
+            raise ValueError("degrade_to and ttft_target_s come together: "
+                             "the degraded variant needs a TTFT target to "
+                             "defend (and vice versa)")
+        self._degrade = (_DegradeController(ttft_target_s,
+                                            window=degrade_window,
+                                            recover_frac=degrade_recover_frac)
+                         if degrade_to is not None else None)
+        self.degrade_log = self._degrade.transitions if self._degrade else []
         self.stats: Dict[str, float] = {}
         # python-side counters bumped inside the traced function bodies:
         # they count TRACES, not calls (tests pin the retrace bound)
@@ -234,6 +343,33 @@ class Engine:
                     raise ValueError(
                         f"slo_routes[{cls!r}] -> {v!r} is not bound: this "
                         f"PlanSet has {list(variant_names)}")
+        if self.degrade_to is not None:
+            if kv_layout != "paged":
+                raise ValueError(
+                    "precision degradation requires kv_layout='paged' "
+                    "(variant-grouped execution masks into the trash page)")
+            if variant_names is None:
+                raise ValueError(
+                    "degrade_to needs a multi-variant PlanSet backend "
+                    "(`repro.runtime.PlanSet`); got "
+                    f"{type(backend).__name__ if backend is not None else None}")
+            if self.degrade_to not in variant_names:
+                raise ValueError(
+                    f"degrade_to={self.degrade_to!r} is not bound: this "
+                    f"PlanSet has {list(variant_names)}")
+        if self.injector is not None and kv_layout != "paged":
+            raise ValueError(
+                "fault injection requires kv_layout='paged' (containment "
+                "releases/purges pages and requeues via chunked prefill)")
+        if self._spec is not None and (
+                self.injector is not None or self.degrade_to is not None
+                or (scheduler is not None and scheduler.preempts)):
+            raise ValueError(
+                "speculate is incompatible with fault injection, precision "
+                "degradation, and deadline preemption: a speculative round "
+                "commits multiple tokens under a pinned draft/target pair, "
+                "which the per-step containment/routing machinery does not "
+                "cover")
 
         if kv_layout == "paged":
             self.page_size = int(page_size)
@@ -243,10 +379,12 @@ class Engine:
                               else self.max_batch * self.pages_per_slot)
             self.prefill_chunk = (int(prefill_chunk) if prefill_chunk
                                   else 2 * self.page_size)
+            # degrade_to joins slo_routes here: both make KV numerics
+            # variant-dependent, so pages cannot be shared across requests
             self.prefix_cache = bool(prefix_cache) and \
                 cfg.moe is None and not cfg.frontend and \
                 set(cfg.pattern) <= _PREFIX_SAFE_KINDS and \
-                not self.slo_routes
+                not self.slo_routes and self.degrade_to is None
             self.pool_mgr = PagePool(self.num_pages, self.page_size)
             # the DEVICE page pool persists across run() calls: the
             # allocator's hash index outlives a run, so the pages it can
@@ -264,6 +402,14 @@ class Engine:
         if sampling is not None:
             self._base_key = jax.random.PRNGKey(int(sampling.seed))
         self._req_counter = 0
+        # robustness bookkeeping (cleared per run): per-request resume/
+        # serving metadata, quarantined-slot release steps, stuck-until
+        # markers from the injector
+        self._req_meta: Dict[int, dict] = {}
+        self._quarantine: Dict[int, int] = {}
+        self._stuck: Dict[int, int] = {}
+        self._inject_slots: List[int] = []
+        self._monitor: Optional[HeartbeatMonitor] = None
 
         def pick(logits, keys):
             # greedy argmax, or per-slot sampling advancing the PRNG keys
@@ -282,13 +428,19 @@ class Engine:
             return tok, keys, caches
 
         def decode_paged_fn(params, tok, caches, lengths, active, pages,
-                            keys, *, variant=None):
+                            keys, inject, *, variant=None):
+            # ``inject`` (B,) float32 is the fault-injection vector (zeros
+            # in normal operation; NaN at a targeted slot) — a traced
+            # argument, so injecting never retraces.  ``ok`` is the
+            # containment screen: True iff the slot's logits are finite.
             self.trace_counts["decode"] += 1
             logits, caches = T.decode_step(params, cfg, tok, caches, lengths,
                                            active=active, pages=pages,
                                            variant=variant)
+            logits = logits + inject[:, None]
+            ok = jnp.isfinite(logits).all(axis=-1)
             tok, keys = pick(logits, keys)
-            return tok, keys, caches
+            return tok, keys, ok, caches
 
         def prefill_fn(params, prompts, lengths, pool, slots, frontend,
                        keys):
@@ -306,8 +458,11 @@ class Engine:
                                              fill, valid, pages,
                                              cross_source=frontend,
                                              variant=variant)
+            # the isfinite screen only means anything for slots completing
+            # their prompt this chunk (other rows' logits are unread)
+            ok = jnp.isfinite(logits).all(axis=-1)
             tok, keys = pick(logits, keys)
-            return tok, keys, caches
+            return tok, keys, ok, caches
 
         def reset_fn(caches, slots):
             # zero the per-slot (non-page) state of freshly admitted slots:
@@ -333,6 +488,20 @@ class Engine:
                 return leaf
             return jax.tree.map(f, caches, self._kv_axes)
 
+        def corrupt_pages_fn(caches, pages):
+            # fault injection: stomp NaN over the floating-point KV rows of
+            # ``pages`` — the damage surfaces as non-finite logits on the
+            # next step that attends over them
+            def f(leaf, ax):
+                if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                    return leaf
+                if ax == "page0":
+                    return leaf.at[pages].set(jnp.nan)
+                if ax == "page1":
+                    return leaf.at[:, pages].set(jnp.nan)
+                return leaf
+            return jax.tree.map(f, caches, self._kv_axes)
+
         self._decode = jax.jit(decode_fn)
         self._decode_paged = jax.jit(decode_paged_fn,
                                      static_argnames=("variant",))
@@ -340,6 +509,7 @@ class Engine:
         self._chunk = jax.jit(chunk_fn, static_argnames=("variant",))
         self._reset = jax.jit(reset_fn)
         self._copy_pages = jax.jit(copy_pages_fn)
+        self._corrupt_pages = jax.jit(corrupt_pages_fn)
 
         if self._spec is not None:
             draft_v, target_v = self._spec
@@ -489,6 +659,35 @@ class Engine:
             return self.slo_routes[req.slo]
         return None
 
+    def _meta(self, req: Request) -> dict:
+        """Per-request serving metadata, created at FIRST admission.
+
+        ``variant``/``degraded`` are pinned here and reused on every
+        resume — a request's KV numerics must stay under one variant for
+        its whole lifetime.  ``tokens``/``t_first`` hold the committed
+        state a preempted/faulted request resumes from."""
+        meta = self._req_meta.get(id(req))
+        if meta is None:
+            degraded = self._degrade is not None and self._degrade.active
+            meta = {"variant": (self.degrade_to if degraded
+                                else self._route(req)),
+                    "degraded": degraded, "tokens": [], "t_first": None,
+                    "preemptions": 0, "requeues": 0}
+            self._req_meta[id(req)] = meta
+        return meta
+
+    def _eff_prompt(self, req: Request) -> np.ndarray:
+        """The token stream to prefill: the original prompt, plus — for a
+        request resuming after preemption/fault-requeue — every committed
+        token.  Prefilling that stream reproduces the preempted slot's
+        decode state exactly (the logits at its last position equal the
+        decode-step logits the slot would have produced next)."""
+        meta = self._req_meta.get(id(req))
+        if meta and meta["tokens"]:
+            return np.concatenate(
+                [req.prompt, np.asarray(meta["tokens"], np.int32)])
+        return req.prompt
+
     def _next_key(self) -> np.ndarray:
         """Per-request PRNG key row (zeros when the engine is greedy)."""
         if self.sampling is None:
@@ -528,18 +727,23 @@ class Engine:
 
     def _retire_slot(self, batch: BatchState, slot: int, reason: str,
                      now: float, step: int,
-                     results: Dict[int, RequestResult]):
+                     results: Dict[int, "EngineResult"]):
         st = batch.retire(slot)
         req = st.request
         if self.kv_layout == "paged":
             self.pool_mgr.release(batch.slot_pages[slot])
             batch.slot_pages[slot] = []
             batch.page_table[slot, :] = 0
+        meta = self._req_meta.get(id(req), {})
         results[id(req)] = RequestResult(
             rid=req.rid, prompt_len=req.prompt_len, tokens=st.tokens,
             finish_reason=reason, ttft_s=st.t_first - st.t_ready,
             finish_s=now - st.t_ready, admitted_step=st.admitted_step,
-            finished_step=step, slo=req.slo)
+            finished_step=step, slo=req.slo,
+            variant=meta.get("variant"),
+            degraded=bool(meta.get("degraded", False)),
+            preemptions=int(meta.get("preemptions", 0)),
+            requeues=int(meta.get("requeues", 0)))
 
     def _slot_reason(self, batch: BatchState, slot: int) -> Optional[str]:
         st = batch.slots[slot]
@@ -561,12 +765,20 @@ class Engine:
         return True
 
     def _postdecode(self, batch: BatchState, tok: np.ndarray, now: float,
-                    step: int, results: Dict[int, RequestResult]):
+                    step: int, results: Dict[int, "EngineResult"],
+                    exclude: Optional[np.ndarray] = None):
         """Record one decode step's tokens and retire finished slots — one
         host sync happened already (``tok``); every predicate below reads
-        host-side numpy mirrors, no per-slot device pulls."""
+        host-side numpy mirrors, no per-slot device pulls.  ``exclude``
+        masks slots that must NOT commit this step (stuck or faulted:
+        their sampled token is garbage or missing)."""
         act = batch.active
+        if exclude is not None:
+            act = act & ~exclude
         idx = np.nonzero(act)[0]
+        if self._monitor is not None:
+            for b in idx:               # a commit is a liveness beat
+                self._monitor.beat(int(b))
         batch.last_tok[idx] = tok[idx]
         batch.lengths[idx] += 1
         batch.n_gen[idx] += 1
@@ -630,16 +842,23 @@ class Engine:
         cow_pairs = []
         slots = []
         for slot, req in admits:
+            meta = self._meta(req)
+            prompt = self._eff_prompt(req)
+            if meta["tokens"]:
+                self.stats["resumes"] += 1
             need = self._pages_needed(req)
             hit_len, shared, cow_src = (
-                self.pool_mgr.match(req.prompt) if self.prefix_cache
+                self.pool_mgr.match(prompt) if self.prefix_cache
                 else (0, [], None))
             pages = shared + self.pool_mgr.alloc(need - len(shared))
             if cow_src is not None:
                 cow_pairs.append((cow_src, pages[len(shared)]))
             batch.start_prefill(slot, req, pages, hit_len,
-                                t_ready=t_ready[id(req)], step=step)
-            batch.variant[slot] = self._route(req)
+                                t_ready=t_ready[id(req)], step=step,
+                                prompt=prompt,
+                                prior_tokens=meta["tokens"],
+                                t_first=meta["t_first"])
+            batch.variant[slot] = meta["variant"]
             batch.rng[slot] = self._next_key()
             if self.cfg.frontend:
                 row = self._frontend_row(req)
@@ -658,10 +877,12 @@ class Engine:
                 self.pool_mgr.release_cow(s)
 
     def _register_prompt(self, batch: BatchState, slot: int):
-        """Publish a fully prefilled prompt's pages for prefix sharing."""
+        """Publish a fully prefilled prompt's pages for prefix sharing.
+        Uses the EFFECTIVE prompt (resumes include committed tokens —
+        exact content keys, so the entries are as valid as any other)."""
         if not self.prefix_cache:
             return
-        prompt = batch.pending[slot].request.prompt
+        prompt = batch.pending[slot].prompt
         pages = batch.slot_pages[slot]
         for key, end in self.pool_mgr.prompt_keys(prompt):
             self.pool_mgr.register(pages[(end - 1) // self.page_size], key)
@@ -676,36 +897,43 @@ class Engine:
                       key=lambda kv: (kv[0] is not None, kv[0] or ""))
 
     def _chunk_step(self, batch: BatchState, step: int,
-                    results: Dict[int, RequestResult]):
+                    results: Dict[int, "EngineResult"],
+                    queue: Optional[RequestQueue] = None,
+                    t_ready: Optional[Dict[int, float]] = None):
         """Stream the next ``prefill_chunk`` tokens of EVERY prefilling
         slot in one fixed-shape jitted call per plan-variant group (one
         call total when nothing is routed); slots whose prompt completes
-        get their first token from this chunk's logits and join decode."""
+        get their first token from this chunk's logits and join decode.
+        Completing slots whose logits fail the isfinite screen go through
+        fault containment instead of assignment."""
         B, C = self.max_batch, self.prefill_chunk
         sel = np.nonzero(batch.prefilling)[0]
         tokens = np.zeros((B, C), np.int32)
         valid_all = np.zeros(B, np.int32)
         for b in sel:
-            req = batch.pending[b].request
+            pend = batch.pending[b]
+            plen = len(pend.prompt)
             pos = int(batch.fill_pos[b])
-            n = min(C, req.prompt_len - pos)
-            tokens[b, :n] = req.prompt[pos:pos + n]
+            n = min(C, plen - pos)
+            tokens[b, :n] = pend.prompt[pos:pos + n]
             valid_all[b] = n
         t0 = time.monotonic()
         outs = []
         for var, group in self._variant_groups(batch, sel):
             valid = np.zeros(B, np.int32)
             valid[group] = valid_all[group]
-            tok, keys, batch.caches = self._chunk(
+            tok, keys, ok, batch.caches = self._chunk(
                 self.params, tokens, batch.caches, batch.fill_pos.copy(),
                 valid, batch.page_table.copy(), self._fe_buf, batch.rng,
                 variant=var)
-            outs.append((group, tok, keys))
+            outs.append((group, tok, keys, ok))
             self.stats["prefill_calls"] += 1
         tok_all = np.zeros(B, np.int32)
+        ok_all = np.ones(B, bool)
         keys_all = None
-        for group, tok, keys in outs:
+        for group, tok, keys, ok in outs:
             tok_all[group] = np.asarray(tok)[group]     # sync
+            ok_all[group] = np.asarray(ok)[group]
             if self.sampling is not None:
                 if keys_all is None:
                     keys_all = np.zeros((B, 2), np.uint32)
@@ -714,13 +942,28 @@ class Engine:
         self.stats["prefill_s"] += t1 - t0
         batch.fill_pos[sel] += valid_all[sel]
         batch.lengths[sel] = batch.fill_pos[sel]
+        if self._monitor is not None:
+            for b in sel:               # chunk progress is a liveness beat
+                self._monitor.beat(int(b))
         for b in sel:
             pend = batch.pending[b]
-            if batch.fill_pos[b] >= pend.request.prompt_len:
+            if batch.fill_pos[b] >= len(pend.prompt):
+                if not ok_all[b] and queue is not None:
+                    self._handle_fault(batch, queue, int(b), step, t1,
+                                       t_ready or {}, results, purge=True)
+                    continue
                 self._register_prompt(batch, b)
-                batch.assign(b, pend.request, int(tok_all[b]),
-                             t_ready=pend.t_ready, t_first=t1,
-                             step=pend.admitted_step)
+                tf = pend.t_first if pend.t_first is not None else t1
+                st = batch.assign(b, pend.request, int(tok_all[b]),
+                                  t_ready=pend.t_ready, t_first=tf,
+                                  step=pend.admitted_step,
+                                  prompt_len=len(pend.prompt),
+                                  prior_tokens=pend.prior_tokens)
+                meta = self._req_meta.get(id(pend.request))
+                if meta is not None and meta["t_first"] is None:
+                    meta["t_first"] = tf
+                    if self._degrade is not None:
+                        self._degrade.observe(tf - pend.t_ready)
                 if self.sampling is not None:
                     # only completing slots consumed their sample; mid-
                     # prompt slots keep their key untouched
@@ -730,30 +973,52 @@ class Engine:
     # ---- decode: per-variant groups --------------------------------------
 
     def _decode_groups(self, batch: BatchState, step: int,
-                       results: Dict[int, RequestResult]):
+                       results: Dict[int, "EngineResult"],
+                       queue: Optional[RequestQueue] = None,
+                       t_ready: Optional[Dict[int, float]] = None):
         """One decode step: a single jitted call per active plan-variant
         group (exactly one call when nothing is routed), the other groups'
         slots masked inactive — their paged KV writes land in the trash
-        page, so groups cannot corrupt each other."""
+        page, so groups cannot corrupt each other.  Stuck slots (injected
+        liveness faults) are masked out entirely and commit nothing; slots
+        failing the isfinite screen commit nothing and go through fault
+        containment."""
         t = time.monotonic()
+        stuck = np.zeros(self.max_batch, bool)
+        for b, until in self._stuck.items():
+            if until > step and batch.active[b]:
+                stuck[b] = True
+        inject = np.zeros(self.max_batch, np.float32)
+        inject[self._inject_slots] = np.nan
+        self._inject_slots = []
         outs = []
         for var, group in self._variant_groups(
-                batch, np.nonzero(batch.active)[0]):
+                batch, np.nonzero(batch.active & ~stuck)[0]):
             mask = np.zeros(self.max_batch, bool)
             mask[group] = True
-            tok, keys, batch.caches = self._decode_paged(
+            tok, keys, ok, batch.caches = self._decode_paged(
                 self.params, batch.last_tok, batch.caches, batch.lengths,
-                mask, batch.page_table.copy(), batch.rng, variant=var)
-            outs.append((group, tok, keys))
+                mask, batch.page_table.copy(), batch.rng, inject,
+                variant=var)
+            outs.append((group, tok, keys, ok))
         tok_all = batch.last_tok.copy()
-        for group, tok, keys in outs:
+        ok_all = np.ones(self.max_batch, bool)
+        for group, tok, keys, ok in outs:
             tok_all[group] = np.asarray(tok)[group]     # sync
+            ok_all[group] = np.asarray(ok)[group]
             if self.sampling is not None:
                 batch.rng[group] = np.asarray(keys)[group]
         now = time.monotonic()
         self.stats["decode_s"] += now - t
         self.stats["decode_steps"] += 1
-        self._postdecode(batch, tok_all, now, step, results)
+        faulted = batch.active & ~ok_all & ~stuck
+        self._postdecode(batch, tok_all, now, step, results,
+                         exclude=(stuck | faulted))
+        if queue is not None:
+            for b in np.nonzero(faulted)[0]:
+                if batch.active[b]:     # not retired by _postdecode
+                    self._handle_fault(batch, queue, int(b), step, now,
+                                       t_ready or {}, results, purge=True)
 
     # ---- self-speculative decoding ---------------------------------------
 
@@ -823,23 +1088,230 @@ class Engine:
                 replay_valid, batch.page_table.copy())
             self.stats["decode_s"] += time.monotonic() - t
 
+    # ---- robustness: preemption, shedding, faults ------------------------
+
+    def _free_slots(self, batch: BatchState, step: int) -> List[int]:
+        """Free slots minus the quarantined ones."""
+        return [b for b in batch.free_slots()
+                if self._quarantine.get(b, 0) <= step]
+
+    def _maybe_preempt(self, batch: BatchState, queue: RequestQueue,
+                       t_ready: Dict[int, float], step: int, now: float):
+        """Retire-and-requeue at most ONE active slot when a visible
+        queued request is strictly more urgent than the least-urgent
+        running one and cannot be served from free capacity.  The victim's
+        committed tokens are recorded for resumption; with the prefix
+        cache on, its filled pages are registered under the resume
+        prompt's keys first, so they park in the LRU and resumption
+        re-prefills only the unhashed tail."""
+        waiting = [r for r in queue if r.arrival_step <= step]
+        if not waiting:
+            return
+        front = min(waiting, key=lambda r: urgency(r, now,
+                                                   t_ready.get(id(r))))
+        if self._free_slots(batch, step) and \
+                self._pages_needed(front) <= self.pool_mgr.available():
+            return          # plain admission can serve it this step
+        cands = [b for b in range(self.max_batch)
+                 if batch.active[b] and not self._stuck.get(b, 0) > step
+                 and self._req_meta[id(batch.slots[b].request)]
+                 ["preemptions"] < self.max_preemptions]
+        if not cands:
+            return
+        victim = max(cands, key=lambda b: urgency(
+            batch.slots[b].request, now,
+            t_ready.get(id(batch.slots[b].request))))
+        vreq = batch.slots[victim].request
+        if not urgency(front, now, t_ready.get(id(front))) < \
+                urgency(vreq, now, t_ready.get(id(vreq))):
+            return          # nobody waiting beats the least-urgent runner
+        st = batch.retire(victim)
+        meta = self._req_meta[id(vreq)]
+        meta["tokens"] = list(st.tokens)
+        meta["t_first"] = st.t_first
+        meta["preemptions"] += 1
+        pages = batch.slot_pages[victim]
+        if self.prefix_cache:
+            # the cache holds resume_prompt[:filled] (the last committed
+            # token is not in the cache yet) — publish exactly that, so
+            # the resume prefill prefix-matches everything but the tail
+            filled = int(batch.lengths[victim])
+            resume = self._eff_prompt(vreq)
+            for key, end in self.pool_mgr.prompt_keys(resume[:filled]):
+                self.pool_mgr.register(pages[(end - 1) // self.page_size],
+                                       key)
+        self.pool_mgr.release(pages)
+        batch.slot_pages[victim] = []
+        batch.page_table[victim, :] = 0
+        queue.push_front(vreq)
+        self.stats["preemptions"] += 1
+
+    def _shed(self, req: Request, reason: str, step: int, waited: float,
+              results: Dict[int, "EngineResult"]):
+        results[id(req)] = ShedResult(rid=req.rid, reason=reason,
+                                      shed_step=step,
+                                      waited_s=round(max(waited, 0.0), 6),
+                                      slo=req.slo)
+        self.stats["shed_requests"] += 1
+
+    def _resumable(self, req: Request) -> bool:
+        """Requests holding committed tokens (preempted/faulted, waiting
+        to resume) are never backlog-shed — that would discard served
+        work.  The wall-clock timeout still applies to them."""
+        return bool(self._req_meta.get(id(req), {}).get("tokens"))
+
+    def _timeout_queued(self, queue: RequestQueue,
+                        t_ready: Dict[int, float], step: int, now: float,
+                        results: Dict[int, "EngineResult"]):
+        """Shed visible queued requests that outlived the wall-clock
+        budget (run BEFORE admission: a timed-out request is dead even if
+        a slot just freed — the client stopped waiting)."""
+        if self.request_timeout_s is None:
+            return
+        for r in [r for r in queue if r.arrival_step <= step]:
+            waited = now - t_ready.get(id(r), now)
+            if waited > self.request_timeout_s:
+                queue.remove(r)
+                self.stats["timeouts"] += 1
+                self._shed(r, "timeout", step, waited, results)
+
+    def _shed_backlog(self, queue: RequestQueue,
+                      t_ready: Dict[int, float], step: int, now: float,
+                      results: Dict[int, "EngineResult"],
+                      free_frac: Optional[float] = None):
+        """Bound the POST-admission backlog (run after the step's
+        admissions): overflow beyond ``max_queue_depth`` sheds newest
+        visible first; below the free-page watermark everything behind
+        the head of line sheds (the head keeps its place — head-of-line
+        blocking already guarantees it admits as soon as pages free)."""
+        if self.max_queue_depth is not None:
+            visible = [r for r in queue if r.arrival_step <= step]
+            excess = len(visible) - self.max_queue_depth
+            for r in reversed(visible):
+                if excess <= 0:
+                    break
+                if self._resumable(r):
+                    continue
+                queue.remove(r)
+                excess -= 1
+                self._shed(r, "queue_depth", step,
+                           now - t_ready.get(id(r), now), results)
+        if self.page_watermark is not None and free_frac is not None \
+                and free_frac < self.page_watermark:
+            for r in [r for r in queue if r.arrival_step <= step][1:]:
+                if self._resumable(r):
+                    continue
+                queue.remove(r)
+                self._shed(r, "page_watermark", step,
+                           now - t_ready.get(id(r), now), results)
+
+    def _timeout_running(self, batch: BatchState, step: int, now: float,
+                         results: Dict[int, "EngineResult"]):
+        """Retire ACTIVE slots whose request outlived the wall-clock
+        budget — they keep their partial tokens, ``finish_reason=
+        "timeout"``.  (Prefilling slots complete their bounded prefill
+        first and time out on the next sweep.)"""
+        if self.request_timeout_s is None:
+            return
+        for b in range(self.max_batch):
+            if batch.active[b] and \
+                    now - batch.slots[b].t_ready > self.request_timeout_s:
+                self.stats["timeouts"] += 1
+                self._retire_slot(batch, b, "timeout", now, step, results)
+
+    def _apply_faults(self, batch: BatchState, step: int):
+        """Draw this step's injected faults and arm them: NaN slots for
+        the decode inject vector, NaN-stomped KV pages, stuck markers."""
+        if self.injector is None:
+            return
+        occupied = [b for b in range(self.max_batch)
+                    if batch.active[b] or batch.prefilling[b]]
+        if not occupied:
+            return
+        for ev in self.injector.draw(step, occupied):
+            self.stats["faults_injected"] += 1
+            if ev.kind == "nonfinite_logits":
+                self._inject_slots.append(ev.slot)
+            elif ev.kind == "corrupt_page":
+                # corrupt the page holding the slot's newest WRITTEN
+                # position — guaranteed inside the attention window, so
+                # detection on the next step is certain
+                filled = max(int(batch.lengths[ev.slot]), 1)
+                pages = batch.slot_pages[ev.slot]
+                page = pages[min((filled - 1) // self.page_size,
+                                 len(pages) - 1)]
+                batch.caches = self._corrupt_pages(
+                    batch.caches, np.asarray([page], np.int32))
+            elif ev.kind == "stuck":
+                self._stuck[ev.slot] = step + ev.duration
+
+    def _handle_fault(self, batch: BatchState, queue: RequestQueue,
+                      slot: int, step: int, now: float,
+                      t_ready: Dict[int, float],
+                      results: Dict[int, "EngineResult"], *,
+                      purge: bool, kind: str = "numeric"):
+        """Contain a detected fault on ``slot``: release (and for numeric
+        faults PURGE — corrupted content must never be prefix-matched)
+        its pages, quarantine the slot, and requeue the request ONCE with
+        its committed tokens; a second fault sheds it with
+        ``ShedResult(reason="fault")``."""
+        self.stats["faults_detected"] += 1
+        if batch.active[slot]:
+            st = batch.retire(slot)
+            req, tokens, tf = st.request, list(st.tokens), st.t_first
+        else:
+            pend = batch.pending[slot]
+            req, tokens, tf = (pend.request, list(pend.prior_tokens),
+                               pend.t_first)
+            batch.prefilling[slot] = False
+            batch.pending[slot] = None
+            batch.fill_pos[slot] = 0
+        pages = batch.slot_pages[slot]
+        if purge:
+            self.pool_mgr.purge(pages)
+        self.pool_mgr.release(pages)
+        batch.slot_pages[slot] = []
+        batch.page_table[slot, :] = 0
+        self._quarantine[slot] = step + self.quarantine_steps
+        self._stuck.pop(slot, None)
+        meta = self._req_meta[id(req)]
+        if meta["requeues"] >= 1:       # requeue-once policy
+            self._shed(req, "fault", step,
+                       now - t_ready.get(id(req), now), results)
+            return
+        meta["requeues"] += 1
+        meta["tokens"] = tokens         # committed tokens predate the
+        meta["t_first"] = tf            # fault: clean, resume from them
+        queue.push_front(req)
+
     # ---- main loops ------------------------------------------------------
 
-    def run(self, requests: Sequence[Request]) -> List[RequestResult]:
-        """Serve ``requests`` to completion; returns one `RequestResult` per
-        request, in submission order.  Timing aggregates land in
-        ``self.stats``."""
+    def run(self, requests: Sequence[Request]) -> List["EngineResult"]:
+        """Serve ``requests`` to completion; returns one result per
+        request, in submission order — a `RequestResult` for requests that
+        finished, a `ShedResult` for requests the overload/fault paths
+        rejected.  Timing aggregates land in ``self.stats``."""
         self._validate(requests)
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "decode_steps": 0,
-                      "prefill_calls": 0, "wall_s": 0.0}
+                      "prefill_calls": 0, "wall_s": 0.0,
+                      "preemptions": 0, "resumes": 0, "shed_requests": 0,
+                      "timeouts": 0, "faults_injected": 0,
+                      "faults_detected": 0, "degrade_transitions": 0,
+                      "straggler_events": 0, "heartbeat_trips": 0}
         if self._spec is not None:
             self.stats.update({"spec_rounds": 0, "spec_drafted": 0,
                                "spec_accepted": 0, "spec_committed": 0})
         self._req_counter = 0
+        self._req_meta = {}
+        self._quarantine = {}
+        self._stuck = {}
+        self._inject_slots = []
+        if self._degrade is not None:
+            self._degrade.reset()
         queue = RequestQueue()
         for r in requests:
             queue.push(r)
-        results: Dict[int, RequestResult] = {}
+        results: Dict[int, EngineResult] = {}
         t0 = time.monotonic()
         if self.kv_layout == "paged":
             self._run_paged(queue, results)
@@ -870,10 +1342,13 @@ class Engine:
         else:
             # dense pools are fully allocated up front: peak == capacity
             self.stats["kv_peak_bytes"] = self._kv_capacity_bytes
+        if self._degrade is not None:
+            self.stats["degrade_transitions"] = \
+                len(self._degrade.transitions)
         return [results[id(r)] for r in requests]
 
     def _run_dense(self, queue: RequestQueue,
-                   results: Dict[int, RequestResult]):
+                   results: Dict[int, "EngineResult"]):
         batch = BatchState(self.max_batch,
                            T.init_cache(self.cfg, self.max_batch,
                                         self.max_len))
@@ -888,8 +1363,14 @@ class Engine:
                 for r in queue:
                     if r.arrival_step <= step and id(r) not in t_ready:
                         t_ready[id(r)] = now
+                self._timeout_queued(queue, t_ready, step, now, results)
+                self._timeout_running(batch, step, now, results)
                 admits = self.scheduler.admissions(
-                    queue, batch.free_slots(), batch.n_active, step)
+                    queue, batch.free_slots(), batch.n_active, step,
+                    now=now, t_ready=t_ready)
+                for _, req in admits:
+                    self._meta(req)     # pin variant/degraded at admission
+                self._shed_backlog(queue, t_ready, step, now, results)
                 if admits:
                     for slot in self._admit_dense(batch, admits, step,
                                                   t_ready):
@@ -912,7 +1393,7 @@ class Engine:
                 step += 1
 
     def _run_paged(self, queue: RequestQueue,
-                   results: Dict[int, RequestResult]):
+                   results: Dict[int, "EngineResult"]):
         if self._paged_caches is None:
             rows = self.num_pages + 1                  # + trash page 0
             self._paged_caches = T.init_paged_cache(
@@ -922,14 +1403,28 @@ class Engine:
         self._fe_buf = None
         t_ready: Dict[int, float] = {}
         step = 0
+        # the liveness monitor runs on the STEP clock (host keys are slot
+        # ids): a slot that commits nothing / makes no prefill progress
+        # for heartbeat_steps steps is declared stuck
+        step_ref = [0]
+        self._monitor = HeartbeatMonitor(
+            hosts=list(range(self.max_batch)),
+            deadline_s=float(self.heartbeat_steps),
+            clock=lambda: float(step_ref[0]))
+        straggler = StragglerPolicy()
         with self._ctx():
             while len(queue) or batch.any_busy():
                 if not batch.any_busy() and queue.ready(step) == 0:
                     step = max(step, queue.next_arrival())
+                step_ref[0] = step
                 now = time.monotonic()
                 for r in queue:
                     if r.arrival_step <= step and id(r) not in t_ready:
                         t_ready[id(r)] = now
+                self._timeout_queued(queue, t_ready, step, now, results)
+                self._timeout_running(batch, step, now, results)
+                if self.scheduler.preempts:
+                    self._maybe_preempt(batch, queue, t_ready, step, now)
                 reserved = [0]
 
                 def fits(req):
@@ -942,16 +1437,91 @@ class Engine:
                     return False
 
                 admits = self.scheduler.admissions(
-                    queue, batch.free_slots(), batch.n_busy, step,
-                    fits=fits)
+                    queue, self._free_slots(batch, step), batch.n_busy,
+                    step, fits=fits, now=now, t_ready=t_ready)
+                for _, req in admits:
+                    self._meta(req)     # pin variant/degraded at admission
                 if admits:
                     self._admit_paged(batch, admits, step, t_ready)
+                self._shed_backlog(queue, t_ready, step, now, results,
+                                   free_frac=(self.pool_mgr.available()
+                                              / self.num_pages))
+                self._apply_faults(batch, step)
                 if batch.prefilling.any():
-                    self._chunk_step(batch, step, results)
+                    self._chunk_step(batch, step, results, queue=queue,
+                                     t_ready=t_ready)
                 if batch.any_active():
+                    t_step = time.monotonic()
                     if self._spec is not None:
                         self._spec_round(batch, step, results)
                     else:
-                        self._decode_groups(batch, step, results)
+                        self._decode_groups(batch, step, results,
+                                            queue=queue, t_ready=t_ready)
+                    if straggler.observe(step, time.monotonic() - t_step) \
+                            != "ok":
+                        self.stats["straggler_events"] += 1
+                # idle slots are not stuck: keep their heartbeats fresh
+                for b in range(self.max_batch):
+                    if not (batch.active[b] or batch.prefilling[b]):
+                        self._monitor.beat(b)
+                for b in self._monitor.dead_hosts():
+                    if batch.active[b] or batch.prefilling[b]:
+                        self.stats["heartbeat_trips"] += 1
+                        self._handle_fault(batch, queue, int(b), step,
+                                           time.monotonic(), t_ready,
+                                           results, purge=False,
+                                           kind="stuck")
+                    self._monitor.beat(b)
+                if self._degrade is not None:
+                    self._degrade.update(step)   # _meta reads .active
                 step += 1
+        self._monitor = None
         self._paged_caches = batch.caches       # keep cached pages resident
+
+
+class _DegradeController:
+    """Hysteresis switch for graceful precision degradation.
+
+    Observes TTFTs as requests get their first token; `update` (once per
+    engine step) flips ``active`` ON when the sliding-window p95 breaches
+    the target, and OFF once p95 drops below ``recover_frac * target``.
+    The window is cleared at each transition so pre-transition samples
+    cannot immediately flip it back, and a minimum sample count must
+    accumulate again before the next decision — that is the hysteresis.
+    Transitions are recorded as ``(step, "degrade"|"recover", p95_s)``."""
+
+    def __init__(self, target_s: float, window: int = 8,
+                 min_samples: int = 4, recover_frac: float = 0.7):
+        if target_s <= 0:
+            raise ValueError(f"ttft_target_s must be > 0, got {target_s}")
+        if not 0.0 < recover_frac <= 1.0:
+            raise ValueError(f"degrade_recover_frac must be in (0, 1], "
+                             f"got {recover_frac}")
+        self.target_s = float(target_s)
+        self.min_samples = max(1, min(int(min_samples), int(window)))
+        self.recover_frac = float(recover_frac)
+        self.samples: deque = deque(maxlen=int(window))
+        self.active = False
+        self.transitions: List[Tuple[int, str, float]] = []
+
+    def reset(self):
+        self.samples.clear()
+        self.active = False
+        self.transitions.clear()    # in place: Engine.degrade_log aliases
+
+    def observe(self, ttft_s: float):
+        self.samples.append(float(ttft_s))
+
+    def update(self, step: int) -> bool:
+        if len(self.samples) < self.min_samples:
+            return self.active
+        p95 = percentile(list(self.samples), 95)
+        if not self.active and p95 > self.target_s:
+            self.active = True
+            self.transitions.append((step, "degrade", round(p95, 6)))
+            self.samples.clear()
+        elif self.active and p95 < self.recover_frac * self.target_s:
+            self.active = False
+            self.transitions.append((step, "recover", round(p95, 6)))
+            self.samples.clear()
+        return self.active

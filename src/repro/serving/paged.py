@@ -198,3 +198,17 @@ class PagePool:
         LRU cache; unhashed pages return to the free list)."""
         for page in pages:
             self.decref(page)
+
+    def purge(self, pages: List[int]) -> None:
+        """Unpublish ``pages`` from the prefix cache (fault containment: a
+        corrupted page must never be matched by a later prompt, and must
+        return to the FREE list — not the LRU — once its refcount drops).
+        Safe on pages that were never hashed; does not touch refcounts, so
+        call it before `release`."""
+        for page in pages:
+            for key in self.keys_of.pop(page, []):
+                if self.by_hash.get(key) == page:
+                    del self.by_hash[key]
+            if self.ref[page] == 0 and page in self.lru:
+                del self.lru[page]
+                self.free.append(page)

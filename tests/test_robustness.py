@@ -1,0 +1,535 @@
+"""Engine robustness layer: deadline scheduling + preemption, overload
+shedding, timeouts, graceful precision degradation, and fault containment.
+
+The load-bearing invariant throughout is TOKEN IDENTITY: preemption,
+fault-recovery requeues and resumption-by-prefill are scheduling decisions
+that must be invisible in the output stream.  A preempted (or faulted)
+request resumes by prefilling ``original prompt + committed tokens``, and
+prefill's last-position logits equal the decode-step logits for the same
+prefix — so the resumed stream continues exactly where it stopped.  The
+engine tests here pin that for the fp backend and (slow) a planned diana
+backend; the unit tests cover the queue/metrics/fault-injector mechanics
+that make the engine paths deterministic.
+"""
+import math
+import zlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base as cfgbase
+from repro.models import transformer as T
+from repro.serving import (Engine, FaultEvent, FaultInjector, Request,
+                           RequestQueue, RequestResult, Scheduler,
+                           ShedResult, load_trace, percentile,
+                           poisson_arrivals, save_trace, summarize,
+                           synthetic_trace, urgency)
+from repro.serving.engine import _DegradeController
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _load():
+    cfgbase.load_all()
+
+
+def _reduced(arch):
+    return cfgbase.reduce_for_smoke(cfgbase.get(arch))
+
+
+def _req(rid, plen=4, new=4, arrival=0, priority=0, deadline=None):
+    return Request(rid=rid,
+                   prompt=(np.arange(plen) + zlib.crc32(str(rid).encode()))
+                   % 7,
+                   max_new_tokens=new, arrival_step=arrival,
+                   priority=priority, deadline_ms=deadline)
+
+
+# --------------------------------------------------------------------------
+# Request validation (hardened __post_init__)
+# --------------------------------------------------------------------------
+
+def test_request_validation_names_the_rid():
+    with pytest.raises(ValueError, match="'neg'.*arrival_step"):
+        Request(rid="neg", prompt=np.zeros(3), max_new_tokens=2,
+                arrival_step=-1)
+    with pytest.raises(ValueError, match="'fl'.*arrival_step"):
+        Request(rid="fl", prompt=np.zeros(3), max_new_tokens=2,
+                arrival_step=1.5)
+    with pytest.raises(ValueError, match="'eos'.*eos_id"):
+        Request(rid="eos", prompt=np.zeros(3), max_new_tokens=2,
+                eos_id="stop")
+    with pytest.raises(ValueError, match="'eosb'.*eos_id"):
+        Request(rid="eosb", prompt=np.zeros(3), max_new_tokens=2,
+                eos_id=True)
+    with pytest.raises(ValueError, match="'pri'.*priority"):
+        Request(rid="pri", prompt=np.zeros(3), max_new_tokens=2,
+                priority="high")
+    with pytest.raises(ValueError, match="'dnan'.*deadline_ms"):
+        Request(rid="dnan", prompt=np.zeros(3), max_new_tokens=2,
+                deadline_ms=float("nan"))
+    with pytest.raises(ValueError, match="'dneg'.*deadline_ms"):
+        Request(rid="dneg", prompt=np.zeros(3), max_new_tokens=2,
+                deadline_ms=-5.0)
+    with pytest.raises(ValueError, match="'dbad'.*deadline_ms"):
+        Request(rid="dbad", prompt=np.zeros(3), max_new_tokens=2,
+                deadline_ms="soon")
+    # numpy ints and float-coercible deadlines are fine
+    r = Request(rid="ok", prompt=np.zeros(3), max_new_tokens=2,
+                arrival_step=np.int64(3), eos_id=np.int32(5),
+                priority=np.int64(1), deadline_ms=50)
+    assert r.arrival_step == 3 and r.deadline_ms == 50.0
+
+
+def test_urgency_ordering():
+    now = 10.0
+    hi = _req("hi", priority=5)
+    lo_tight = _req("lo1", deadline=20.0)
+    lo_loose = _req("lo2", deadline=500.0)
+    lo_none = _req("lo3")
+    keys = {r.rid: urgency(r, now) for r in (hi, lo_tight, lo_loose,
+                                             lo_none)}
+    ranked = sorted(keys, key=keys.get)
+    assert ranked == ["hi", "lo1", "lo2", "lo3"]
+    # slack shrinks as time passes for a fixed t_ready
+    early = urgency(lo_tight, 10.0, t_ready=10.0)
+    late = urgency(lo_tight, 10.019, t_ready=10.0)
+    assert late < early
+    assert urgency(lo_none, now)[1] == math.inf
+
+
+# --------------------------------------------------------------------------
+# RequestQueue.pop_ready edge cases
+# --------------------------------------------------------------------------
+
+def test_pop_ready_hol_blocking_with_interleaved_future_arrivals():
+    """A non-fitting visible request blocks everything behind it, while
+    not-yet-visible requests interleaved in the queue keep their slots."""
+    q = RequestQueue()
+    a, future, big, c = (_req("a"), _req("future", arrival=10),
+                         _req("big", plen=64), _req("c"))
+    for r in (a, future, big, c):
+        q.push(r)
+    got = q.pop_ready(0, 4, fits=lambda r: r.prompt_len <= 8)
+    assert [r.rid for r in got] == ["a"]          # big blocks c
+    assert [r.rid for r in q] == ["future", "big", "c"]
+    # once the blocker fits, order is preserved — big before c
+    got = q.pop_ready(0, 4, fits=lambda r: True)
+    assert [r.rid for r in got] == ["big", "c"]
+    assert [r.rid for r in q] == ["future"]
+
+
+def test_pop_ready_fits_flapping_preserves_fcfs():
+    """fits() flipping False->True->False across calls never reorders the
+    queue: head-of-line blocking is re-evaluated from scratch each call."""
+    q = RequestQueue()
+    for rid in "abcd":
+        q.push(_req(rid))
+    flap = {"ok": False}
+    fits = lambda r: flap["ok"]
+    for _ in range(3):                             # repeated full blocking
+        assert q.pop_ready(0, 4, fits=fits) == []
+        assert [r.rid for r in q] == list("abcd")  # order untouched
+    flap["ok"] = True
+    assert [r.rid for r in q.pop_ready(0, 2, fits=fits)] == ["a", "b"]
+    flap["ok"] = False
+    assert q.pop_ready(0, 2, fits=fits) == []
+    assert [r.rid for r in q] == ["c", "d"]
+
+
+def test_pop_ready_ordered_most_urgent_blocks():
+    """Under a deadline order the MOST URGENT candidate failing fits()
+    blocks cheaper work — urgency must not be starved by admissible
+    low-priority requests."""
+    q = RequestQueue()
+    small = _req("small", plen=4)
+    urgent_big = _req("urgent", plen=64, priority=9)
+    q.push(small)
+    q.push(urgent_big)
+    order = lambda r: urgency(r, 0.0)
+    got = q.pop_ready(0, 2, fits=lambda r: r.prompt_len <= 8, order=order)
+    assert got == []                              # urgent blocks small
+    assert len(q) == 2
+    got = q.pop_ready(0, 2, fits=lambda r: True, order=order)
+    assert [r.rid for r in got] == ["urgent", "small"]
+
+
+def test_pop_ready_order_stable_fcfs_tiebreak():
+    q = RequestQueue()
+    for rid in ("x", "y", "z"):
+        q.push(_req(rid, priority=1))
+    order = lambda r: urgency(r, 0.0)
+    assert [r.rid for r in q.pop_ready(0, 3, order=order)] == ["x", "y", "z"]
+
+
+def test_queue_push_front_and_remove():
+    q = RequestQueue()
+    a, b = _req("a"), _req("b")
+    q.push(a)
+    q.push_front(b)
+    assert [r.rid for r in q] == ["b", "a"]
+    assert q.remove(a) and not q.remove(a)
+    assert [r.rid for r in q] == ["b"]
+
+
+# --------------------------------------------------------------------------
+# metrics guards
+# --------------------------------------------------------------------------
+
+def test_summarize_empty_and_all_shed():
+    assert summarize([], 0.0)["total_tok_s"] == 0.0
+    assert summarize([], 1.0)["ttft_p95_s"] == 0.0
+    sheds = [ShedResult(rid=i, reason="queue_depth", shed_step=0,
+                        waited_s=0.1) for i in range(3)]
+    s = summarize(sheds, 1.0)
+    assert s["shed"] == 3 and s["shed_rate"] == 1.0
+    assert s["completed"] == 0 and s["ttft_p50_s"] == 0.0
+    assert s["degrade_rate"] == 0.0
+    assert s["shed_reasons"] == {"queue_depth": 3}
+    assert sheds[0].n_tokens == 0
+
+
+def test_summarize_zero_duration_decode_window():
+    r = RequestResult(rid=0, prompt_len=4, tokens=[1, 2, 3],
+                      finish_reason="max_new_tokens", ttft_s=0.5,
+                      finish_s=0.5, admitted_step=0, finished_step=2)
+    assert r.decode_tok_s == 0.0
+    s = summarize([r], 1.0)
+    assert s["decode_tok_s_p50"] == 0.0 and s["completed"] == 1
+
+
+def test_summarize_by_slo_includes_shed_counts():
+    done = RequestResult(rid=0, prompt_len=4, tokens=[1], slo="interactive",
+                         finish_reason="eos", ttft_s=0.1, finish_s=0.2,
+                         admitted_step=0, finished_step=1)
+    shed = ShedResult(rid=1, reason="timeout", shed_step=3, waited_s=2.0,
+                      slo="interactive")
+    s = summarize([done, shed], 1.0)
+    assert s["by_slo"]["interactive"]["requests"] == 1
+    assert s["by_slo"]["interactive"]["shed"] == 1
+
+
+def test_percentile_drops_nonfinite():
+    assert percentile([1.0, float("nan"), 2.0, float("inf")], 100) == 2.0
+    assert percentile([float("nan")], 50) == 0.0
+
+
+# --------------------------------------------------------------------------
+# degrade controller
+# --------------------------------------------------------------------------
+
+def test_degrade_controller_hysteresis():
+    c = _DegradeController(target_s=1.0, window=8, min_samples=4,
+                           recover_frac=0.5)
+    for _ in range(3):
+        c.observe(5.0)
+    assert not c.update(0)                       # below min_samples
+    c.observe(5.0)
+    assert c.update(1) and c.active              # p95 over target
+    # window cleared at the transition: staying degraded, no flapping
+    assert c.update(2) and len(c.transitions) == 1
+    for _ in range(4):
+        c.observe(0.1)                           # p95 under recover_frac
+    assert not c.update(3) and not c.active
+    assert [(s, k) for s, k, _ in c.transitions] == \
+        [(1, "degrade"), (3, "recover")]
+    c.reset()
+    assert not c.transitions and not c.active
+
+
+def test_degrade_controller_validation():
+    with pytest.raises(ValueError, match="ttft_target_s"):
+        _DegradeController(target_s=0.0)
+    with pytest.raises(ValueError, match="recover_frac"):
+        _DegradeController(target_s=1.0, recover_frac=1.5)
+
+
+# --------------------------------------------------------------------------
+# fault injector
+# --------------------------------------------------------------------------
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="fault kind"):
+        FaultEvent("meteor", 0, 0)
+    with pytest.raises(ValueError, match="bad fault event"):
+        FaultEvent("stuck", -1, 0)
+    with pytest.raises(ValueError, match="bad fault event"):
+        FaultEvent("stuck", 0, 0, duration=0)
+
+
+def test_fault_injector_parse():
+    inj = FaultInjector.parse(
+        "nonfinite_logits@3:0, stuck@5:1x20, corrupt_page~0.25", seed=7)
+    assert inj.events == [FaultEvent("nonfinite_logits", 3, 0),
+                          FaultEvent("stuck", 5, 1, duration=20)]
+    assert inj.rates == {"corrupt_page": 0.25}
+    with pytest.raises(ValueError, match="bad fault spec"):
+        FaultInjector.parse("nonfinite_logits@oops")
+    with pytest.raises(ValueError, match="fault kind"):
+        FaultInjector.parse("meteor@1:0")
+
+
+def test_fault_injector_draw_planned_and_rates():
+    inj = FaultInjector(events=[FaultEvent("stuck", 2, 1)])
+    assert inj.draw(1, [0, 1]) == []
+    assert inj.draw(2, [0]) == []                 # slot 1 not occupied
+    assert [e.kind for e in inj.draw(2, [0, 1])] == ["stuck"]
+    assert inj.fired == [(2, 1, "stuck")]
+    # seeded Bernoulli rates are deterministic
+    one = FaultInjector(rates={"nonfinite_logits": 0.2}, seed=3)
+    two = FaultInjector(rates={"nonfinite_logits": 0.2}, seed=3)
+    seq1 = [len(one.draw(s, [0, 1])) for s in range(60)]
+    seq2 = [len(two.draw(s, [0, 1])) for s in range(60)]
+    assert seq1 == seq2 and sum(seq1) > 0
+
+
+# --------------------------------------------------------------------------
+# traces: poisson arrivals + priority/deadline round-trip + malformed input
+# --------------------------------------------------------------------------
+
+def test_poisson_arrivals_deterministic_and_monotonic():
+    base = synthetic_trace(16, vocab=64, seed=1)
+    a = poisson_arrivals(base, 0.5, seed=9)
+    b = poisson_arrivals(base, 0.5, seed=9)
+    assert [r.arrival_step for r in a] == [r.arrival_step for r in b]
+    steps = [r.arrival_step for r in a]
+    assert steps == sorted(steps) and steps[-1] > 0
+    assert all(r0.arrival_step == 0 for r0 in base)   # inputs not mutated
+    with pytest.raises(ValueError, match="offered load"):
+        poisson_arrivals(base, 0.0)
+
+
+def test_trace_priority_deadline_roundtrip(tmp_path):
+    t = synthetic_trace(6, vocab=64, seed=2, priorities=[0, 3],
+                        deadlines_ms=[None, 40.0])
+    assert [r.priority for r in t] == [0, 3, 0, 3, 0, 3]
+    assert [r.deadline_ms for r in t] == [None, 40.0] * 3
+    p = save_trace(tmp_path / "t.jsonl", t)
+    back = load_trace(p)
+    assert [r.priority for r in back] == [r.priority for r in t]
+    assert [r.deadline_ms for r in back] == [r.deadline_ms for r in t]
+    # defaults stay byte-identical to pre-knob traces
+    t0 = synthetic_trace(6, vocab=64, seed=2)
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(t, t0))
+
+
+def test_load_trace_malformed_lines_name_path_and_line(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"id": "a", "prompt": [1, 2]}\nnot json{{\n')
+    with pytest.raises(ValueError, match=r"bad\.jsonl:2.*malformed"):
+        load_trace(p)
+    p.write_text('[1, 2, 3]\n')
+    with pytest.raises(ValueError, match=r"bad\.jsonl:1.*JSON\s+object"):
+        load_trace(p)
+    p.write_text('{"id": "a", "prompt": [1], "deadline_ms": -4}\n')
+    with pytest.raises(ValueError, match=r"bad\.jsonl:1.*deadline_ms"):
+        load_trace(p)
+
+
+# --------------------------------------------------------------------------
+# engine integration: preemption, shedding, timeouts, faults
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def yi(tmp_path_factory):
+    cfg = _reduced("yi-9b")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _mk_reqs(cfg, spec):
+    """spec: [(rid, plen, new, arrival, priority, deadline_ms), ...] with
+    seed-deterministic prompts (same rid -> same prompt)."""
+    out = []
+    for rid, plen, new, arrival, priority, deadline in spec:
+        rng = np.random.default_rng(zlib.crc32(str(rid).encode()))
+        out.append(Request(
+            rid=rid, prompt=rng.integers(0, cfg.vocab, plen),
+            max_new_tokens=new, arrival_step=arrival, priority=priority,
+            deadline_ms=deadline))
+    return out
+
+
+_PREEMPT_SPEC = [("low0", 8, 12, 0, 0, None), ("low1", 8, 12, 0, 0, None),
+                 ("hi", 6, 4, 3, 5, 10.0)]
+
+
+def _preemption_parity(cfg, params, backend=None):
+    eng = Engine(cfg, params, max_batch=2, max_len=48, page_size=8,
+                 backend=backend, scheduler=Scheduler("deadline"))
+    res = eng.run(_mk_reqs(cfg, _PREEMPT_SPEC))
+    assert eng.stats["preemptions"] >= 1 and eng.stats["resumes"] >= 1
+    assert sum(r.preemptions for r in res) >= 1
+    ref = Engine(cfg, params, max_batch=2, max_len=48, page_size=8,
+                 backend=backend)
+    ref_res = ref.run(_mk_reqs(cfg, _PREEMPT_SPEC))
+    assert ref.stats["preemptions"] == 0
+    a = {r.rid: r.tokens for r in res}
+    b = {r.rid: r.tokens for r in ref_res}
+    assert a == b                     # preemption invisible in the tokens
+    return eng
+
+
+def test_preemption_token_parity_fp(yi):
+    """Deadline preemption round-trip (fp backend, paged layout): the
+    preempted request's resumed stream is identical to an unpreempted FCFS
+    run, and its parked pages serve the resume prefill."""
+    cfg, params = yi
+    eng = _preemption_parity(cfg, params)
+    assert eng.stats["prefix_hit_tokens"] > 0     # resume hit parked pages
+
+
+@pytest.mark.slow
+def test_preemption_token_parity_planned_diana(yi, tmp_path):
+    """Same invariant with every projection running its planned diana
+    kernel — preemption must also be invisible under quantized execution
+    (static act scales make the planned numerics batch-independent)."""
+    from repro.launch.serve import plan_mapping_execution
+    from repro.launch.train import emit_static_mapping
+    cfg, params = yi
+    art = emit_static_mapping(params, cfg, "diana", tmp_path / "m.json",
+                              act_log_scale=2.0)
+    _, backend = plan_mapping_execution(params, art)
+    _preemption_parity(cfg, params, backend=backend)
+
+
+def test_queue_depth_and_watermark_shed(yi):
+    cfg, params = yi
+    reqs = _mk_reqs(cfg, [(f"q{i}", 6, 4, 0, 0, None) for i in range(6)])
+    eng = Engine(cfg, params, max_batch=1, max_len=48, page_size=8,
+                 max_queue_depth=2)
+    res = eng.run(reqs)
+    sheds = [r for r in res if isinstance(r, ShedResult)]
+    assert len(sheds) == 3 and {s.reason for s in sheds} == {"queue_depth"}
+    assert len([r for r in res if isinstance(r, RequestResult)]) == 3
+    # page watermark: a nearly-full pool sheds the backlog instead of
+    # letting it wait forever
+    eng2 = Engine(cfg, params, max_batch=2, max_len=48, page_size=8,
+                  num_pages=12, page_watermark=0.9)
+    res2 = eng2.run(_mk_reqs(cfg, [(f"w{i}", 8, 4, 0, 0, None)
+                                   for i in range(4)]))
+    sheds2 = [r for r in res2 if isinstance(r, ShedResult)]
+    assert sheds2 and {s.reason for s in sheds2} == {"page_watermark"}
+    assert eng2.stats["shed_requests"] == len(sheds2)
+
+
+def test_request_timeouts_queued_and_running(yi):
+    """A microscopic wall-clock budget times out RUNNING requests (partial
+    tokens, finish_reason='timeout') and sheds QUEUED ones (structured
+    ShedResult) — the run always terminates."""
+    cfg, params = yi
+    reqs = _mk_reqs(cfg, [(f"t{i}", 6, 16, 0, 0, None) for i in range(3)])
+    eng = Engine(cfg, params, max_batch=1, max_len=48, page_size=8,
+                 request_timeout_s=1e-6)
+    res = eng.run(reqs)
+    assert len(res) == 3
+    running = [r for r in res if isinstance(r, RequestResult)]
+    queued = [r for r in res if isinstance(r, ShedResult)]
+    assert running and all(r.finish_reason == "timeout" for r in running)
+    assert all(1 <= r.n_tokens < 16 for r in running)  # partial but clean
+    assert queued and all(s.reason == "timeout" for s in queued)
+    assert eng.stats["timeouts"] == len(res)
+
+
+def _clean_tokens(cfg, params, rid="f0", new=10):
+    eng = Engine(cfg, params, max_batch=1, max_len=48, page_size=8)
+    [r] = eng.run(_mk_reqs(cfg, [(rid, 8, new, 0, 0, None)]))
+    return r.tokens
+
+
+@pytest.mark.parametrize("kind", ["nonfinite_logits", "corrupt_page",
+                                  "stuck"])
+def test_fault_detected_quarantined_requeued_token_parity(yi, kind):
+    """Each fault kind is detected, the slot quarantined, the request
+    requeued once — and the final token stream is IDENTICAL to a clean
+    run (committed tokens are never corrupted)."""
+    cfg, params = yi
+    inj = FaultInjector(events=[FaultEvent(kind, step=4, slot=0,
+                                           duration=100)])
+    eng = Engine(cfg, params, max_batch=1, max_len=48, page_size=8,
+                 injector=inj, heartbeat_steps=4)
+    [r] = eng.run(_mk_reqs(cfg, [("f0", 8, 10, 0, 0, None)]))
+    assert isinstance(r, RequestResult) and r.requeues == 1
+    assert eng.stats["faults_injected"] == 1
+    if kind == "stuck":
+        assert eng.stats["heartbeat_trips"] >= 1
+    else:
+        assert eng.stats["faults_detected"] >= 1
+    assert r.tokens == _clean_tokens(cfg, params)
+    assert inj.fired == [(4, 0, kind)]
+
+
+def test_double_fault_sheds_structured_never_hangs(yi):
+    cfg, params = yi
+    inj = FaultInjector(events=[FaultEvent("nonfinite_logits", 3, 0),
+                                FaultEvent("nonfinite_logits", 8, 0)])
+    eng = Engine(cfg, params, max_batch=1, max_len=48, page_size=8,
+                 injector=inj, quarantine_steps=1)
+    [r] = eng.run(_mk_reqs(cfg, [("d0", 8, 10, 0, 0, None)]))
+    assert isinstance(r, ShedResult) and r.reason == "fault"
+    assert eng.stats["faults_detected"] == 2
+    assert eng.stats["shed_requests"] == 1
+
+
+def test_corrupted_page_purged_from_prefix_cache(yi):
+    """After a corrupt_page fault the slot's pages must not be matchable:
+    a second identical prompt re-prefills from scratch (no poisoned hit)."""
+    cfg, params = yi
+    inj = FaultInjector(events=[FaultEvent("corrupt_page", 4, 0)])
+    eng = Engine(cfg, params, max_batch=1, max_len=48, page_size=8,
+                 injector=inj)
+    spec = [("p0", 16, 6, 0, 0, None), ("p1", 16, 6, 0, 0, None)]
+    r0_req, r1_req = _mk_reqs(cfg, spec)
+    r1_req.prompt = r0_req.prompt.copy()          # identical prompt
+    res = {r.rid: r for r in eng.run([r0_req, r1_req])}
+    clean = Engine(cfg, params, max_batch=1, max_len=48, page_size=8)
+    ref = {r.rid: r for r in clean.run(
+        [Request(rid=s[0], prompt=r0_req.prompt.copy(), max_new_tokens=6)
+         for s in spec])}
+    for rid in res:
+        assert res[rid].tokens == ref[rid].tokens
+
+
+def test_engine_robustness_validation(yi):
+    cfg, params = yi
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        Engine(cfg, params, max_queue_depth=0)
+    with pytest.raises(ValueError, match="page_watermark"):
+        Engine(cfg, params, page_watermark=1.5)
+    with pytest.raises(ValueError, match="degrade_to"):
+        Engine(cfg, params, degrade_to="cheap")   # no ttft target / bank
+    with pytest.raises(ValueError, match="paged"):
+        Engine(cfg, params, kv_layout="dense",
+               injector=FaultInjector())
+
+
+@pytest.mark.slow
+def test_degradation_bounds_routing_and_recovers(yi, tmp_path):
+    """With a 2-variant bank and an unreachable TTFT target, the engine
+    flips new admissions to the degrade variant (degraded=True, variant
+    pinned per request across its whole lifetime) and the transition is
+    recorded in degrade_log."""
+    from repro.launch.serve import build_planset
+    from repro.launch.train import emit_static_mapping
+    cfg, params = yi
+    default = emit_static_mapping(params, cfg, "diana", tmp_path / "a.json",
+                                  act_log_scale=2.0, bias=("digital", 1.0))
+    cheap = emit_static_mapping(params, cfg, "diana", tmp_path / "b.json",
+                                act_log_scale=2.0, bias=("aimc", 1.0))
+    _, bank = build_planset(params, {"default": default, "cheap": cheap},
+                            "default")
+    trace = synthetic_trace(8, vocab=cfg.vocab, seed=4, min_prompt=4,
+                            max_prompt=8, min_new=3, max_new=6,
+                            arrival_every=2)
+    eng = Engine(cfg, params, max_batch=2, max_len=48, page_size=8,
+                 backend=bank, degrade_to="cheap", ttft_target_s=1e-9,
+                 degrade_window=4)
+    res = eng.run(trace)
+    assert eng.stats["degrade_transitions"] >= 1
+    assert eng.degrade_log and eng.degrade_log[0][1] == "degrade"
+    degraded = [r for r in res if isinstance(r, RequestResult)
+                and r.degraded]
+    assert degraded and all(r.variant == "cheap" for r in degraded)
+    undegraded = [r for r in res if isinstance(r, RequestResult)
+                  and not r.degraded]
+    assert all(r.variant in (None, "default") for r in undegraded)
